@@ -1,0 +1,107 @@
+"""Paper Fig. 4: ℓ2 error of each compression scheme tracking the Adam
+auxiliary variables of a training run.
+
+Protocol: run dense Adam on the small LM; in parallel, feed the SAME
+per-step linear updates into (a) a count-sketch tensor, (b) the NMF
+rank-1 factorization, (c) the ℓ2 rank-1 (power-iteration SVD) — each
+given ≈ the same parameter budget — and record ‖approx − exact‖₂ /
+‖exact‖₂ over time, for the 1st (signed) and 2nd (non-negative) moment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result, small_lm_cfg, train_small_lm
+from repro.core import lowrank, optimizers as O
+from repro.core import sketch as cs
+
+
+def run(quick: bool = False):
+    steps = 150 if quick else 400
+    cfg = small_lm_cfg()
+    n, d = cfg.vocab, cfg.d_model
+
+    # Two sketch budgets, as in the paper: the strict equal-params point
+    # (rank-1 uses n + d; at d=128 that forces width ≈ 5 — the sketch's
+    # whole-row granularity makes this budget degenerate) and the paper's
+    # LM setting (5× compression of the n-row axis; the paper's own
+    # Wikitext-103 comparison likewise "provid[es] the Count-Sketch with
+    # more parameters", Tab 5).
+    budget = n + d
+    depth = 3
+    width_eq = max(4, int(budget / (depth * d)))
+    width_5x = max(8, n // (5 * depth))
+    spec_m = cs.SketchSpec(depth=depth, width=width_5x, dim=d, signed=True, seed=1)
+    spec_v = cs.SketchSpec(depth=depth, width=width_5x, dim=d, signed=False, seed=2)
+    spec_m_eq = cs.SketchSpec(depth=depth, width=width_eq, dim=d, signed=True, seed=3)
+    ids = jnp.arange(n, dtype=jnp.int32)
+
+    state = {
+        "S_m": cs.init(spec_m), "S_v": cs.init(spec_v),
+        "S_m_eq": cs.init(spec_m_eq),
+        "r1_m": lowrank.l2_rank1_init((n, d)),
+        "nmf_r": jnp.zeros((n,)), "nmf_c": jnp.zeros((d,)),
+        "m": jnp.zeros((n, d)), "v": jnp.zeros((n, d)),
+    }
+    errors = []
+    b1, b2 = 0.9, 0.999
+
+    def collect(i, grads, st):
+        g = jnp.asarray(grads["tok_embed"]["table"])
+        s = state
+        # exact moments
+        m_new = b1 * s["m"] + (1 - b1) * g
+        v_new = b2 * s["v"] + (1 - b2) * g * g
+        # count-sketch: linear update matches the EMA exactly in sketch space
+        s["S_m"] = cs.decay(s["S_m"], b1)
+        s["S_m"] = cs.update(spec_m, s["S_m"], ids, (1 - b1) * g)
+        s["S_m_eq"] = cs.decay(s["S_m_eq"], b1)
+        s["S_m_eq"] = cs.update(spec_m_eq, s["S_m_eq"], ids, (1 - b1) * g)
+        s["S_v"] = cs.decay(s["S_v"], b2)
+        s["S_v"] = cs.update(spec_v, s["S_v"], ids, (1 - b2) * g * g)
+        # NMF rank-1 of v (non-negative only, as in the paper)
+        g2 = jnp.square(g)
+        s["nmf_r"] = b2 * s["nmf_r"] + (1 - b2) * jnp.mean(g2, axis=1)
+        s["nmf_c"] = b2 * s["nmf_c"] + (1 - b2) * jnp.mean(g2, axis=0)
+        # l2 rank-1 of m (power iteration)
+        s["r1_m"] = lowrank.l2_rank1_step(s["r1_m"], m_new)
+
+        m_cs = cs.query(spec_m, s["S_m"], ids)
+        m_cs_eq = cs.query(spec_m_eq, s["S_m_eq"], ids)
+        v_cs = cs.query(spec_v, s["S_v"], ids)
+        v_nmf = lowrank.nmf_rank1_reconstruct(s["nmf_r"], s["nmf_c"])
+        m_r1 = lowrank.l2_rank1_reconstruct(s["r1_m"])
+
+        def rel(a, b):
+            return float(jnp.linalg.norm(a - b) /
+                         jnp.maximum(jnp.linalg.norm(b), 1e-9))
+
+        s["m"], s["v"] = m_new, v_new
+        return {"step": i,
+                "m_cs": rel(m_cs, m_new), "m_cs_eq": rel(m_cs_eq, m_new),
+                "m_rank1": rel(m_r1, m_new),
+                "v_cs": rel(v_cs, v_new), "v_nmf": rel(v_nmf, v_new)}
+
+    res = train_small_lm(O.adam(1e-3), cfg=cfg, steps=steps,
+                         collect_aux=collect)
+    errors = res["aux"]
+    tail = errors[len(errors) // 2:]
+    out = {
+        "rank1_params_per_moment": budget,
+        "sketch_shape_5x": list(spec_m.shape),
+        "sketch_shape_equal_budget": list(spec_m_eq.shape),
+        "final_m_cs_equal_budget": float(np.mean([e["m_cs_eq"] for e in errors[len(errors) // 2:]])),
+        "series": errors,
+        "final_m_cs": float(np.mean([e["m_cs"] for e in tail])),
+        "final_m_rank1": float(np.mean([e["m_rank1"] for e in tail])),
+        "final_v_cs": float(np.mean([e["v_cs"] for e in tail])),
+        "final_v_nmf": float(np.mean([e["v_nmf"] for e in tail])),
+    }
+    save_result("approx_error", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

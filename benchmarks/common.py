@@ -1,0 +1,112 @@
+"""Shared benchmark plumbing: a small-LM training harness driven by the
+deterministic zipf stream, timing helpers, and result persistence.
+
+Every benchmark mirrors one paper table/figure's *protocol* at CPU scale
+(DESIGN.md §9); results land in experiments/bench/<name>.json and are
+summarized by ``python -m benchmarks.run``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import optimizers as O
+from repro.data import ZipfLM, ZipfLMConfig
+from repro.models import transformer as tf
+from repro.models.config import ArchConfig
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def save_result(name: str, payload: Dict[str, Any]) -> pathlib.Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=2, default=float))
+    return path
+
+
+def small_lm_cfg(vocab: int = 2048, d_model: int = 128, n_layers: int = 2,
+                 **kw) -> ArchConfig:
+    base = dict(name="bench-lm", family="gqa", n_layers=n_layers,
+                d_model=d_model, n_heads=4, n_kv=2, head_dim=d_model // 4,
+                d_ff=4 * d_model, vocab_size=vocab, vocab_multiple=64,
+                attn_chunk=64, loss_chunk=64, compute_dtype="float32",
+                sketch_compression=5.0)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def train_small_lm(opt: O.Transform, *, cfg: Optional[ArchConfig] = None,
+                   steps: int = 300, batch: int = 8, seq: int = 64,
+                   seed: int = 0, eval_every: int = 0,
+                   collect_aux: Optional[Callable] = None) -> Dict[str, Any]:
+    """Train a small LM on the zipf stream; returns losses / eval ppl /
+    state bytes / wall time (one jit'd step, timed after warmup)."""
+    cfg = cfg or small_lm_cfg()
+    params = tf.init(jax.random.PRNGKey(seed), cfg)
+    data = ZipfLM(ZipfLMConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                               global_batch=batch, seed=seed))
+    eval_data = ZipfLM(ZipfLMConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                    global_batch=batch, seed=seed + 999))
+    st = opt.init(params)
+
+    @jax.jit
+    def step(params, st, tokens, labels):
+        def loss_fn(p):
+            return tf.train_loss(cfg, p, {"tokens": tokens, "labels": labels},
+                                 remat=False)
+        l, g = jax.value_and_grad(loss_fn)(params)
+        g = O.clip_by_global_norm(1.0)(g)
+        u, st = opt.update(g, st, params)
+        return O.apply_updates(params, u), st, l, g
+
+    @jax.jit
+    def eval_loss(params, tokens, labels):
+        return tf.train_loss(cfg, params, {"tokens": tokens,
+                                           "labels": labels}, remat=False)
+
+    losses: List[float] = []
+    evals: List[Dict[str, float]] = []
+    aux_log: List[Any] = []
+    t0 = None
+    for i in range(steps):
+        b = data.batch(i)
+        params, st, l, g = step(params, st, jnp.asarray(b["tokens"]),
+                                jnp.asarray(b["labels"]))
+        if i == 1:
+            jax.block_until_ready(l)
+            t0 = time.perf_counter()
+        losses.append(float(l))
+        if collect_aux is not None and i % 25 == 0:
+            aux_log.append(collect_aux(i, g, st))
+        if eval_every and (i + 1) % eval_every == 0:
+            ls = []
+            for j in range(4):
+                eb = eval_data.batch(j)
+                ls.append(float(eval_loss(params, jnp.asarray(eb["tokens"]),
+                                          jnp.asarray(eb["labels"]))))
+            evals.append({"step": i + 1, "loss": float(np.mean(ls)),
+                          "ppl": float(np.exp(np.mean(ls)))})
+    jax.block_until_ready(losses and l)
+    wall = time.perf_counter() - (t0 or time.perf_counter())
+    return {
+        "final_loss": float(np.mean(losses[-20:])),
+        "final_ppl": float(np.exp(np.mean(losses[-20:]))),
+        "losses": losses[:: max(1, len(losses) // 50)],
+        "evals": evals,
+        "opt_state_bytes": O.state_bytes(st),
+        "steps_per_s": (steps - 1) / wall if wall > 0 else 0.0,
+        "aux": aux_log,
+        "params": params, "opt_state": st,
+    }
+
+
+def strip_arrays(result: Dict[str, Any]) -> Dict[str, Any]:
+    return {k: v for k, v in result.items()
+            if k not in ("params", "opt_state", "aux")}

@@ -1,0 +1,73 @@
+"""Sketch-kernel micro-benchmarks: µs/call of the jnp reference path on
+CPU (what actually executes here) + the analytical bytes-moved model for
+the Pallas TPU kernels (what executes on the target).
+
+The fused-Adam traffic model is the DESIGN.md §3 argument in numbers:
+    unfused  = 4 sketch traversals / moment  (query, update ×2 reads+write)
+    fused    = 1 HBM round trip per depth row
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.core import sketch as cs
+from repro.core.hashing import HashFamily
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # µs
+
+
+def traffic_model(depth, width, dim, k, dtype_bytes=4):
+    """Bytes through HBM per op on TPU (whole rows, VMEM-tiled)."""
+    row = dim * dtype_bytes
+    return {
+        "query": depth * k * row,                   # read k rows per depth
+        "update": 2 * depth * k * row,              # RMW per depth row
+        "adam_unfused": (3 + 3 + 2) * depth * k * row * 2,  # m & v, 3-pass
+        "adam_fused": 2 * 2 * depth * k * row,      # one RMW per sketch
+    }
+
+
+def run(quick: bool = False):
+    shapes = [(3, 1024, 256, 128), (3, 4096, 512, 1024)]
+    if quick:
+        shapes = shapes[:1]
+    results = []
+    for depth, width, dim, k in shapes:
+        spec = cs.SketchSpec(depth=depth, width=width, dim=dim, seed=0)
+        S = cs.init(spec)
+        ids = jnp.asarray(np.random.RandomState(0).randint(0, 10 * width,
+                                                           size=k), jnp.int32)
+        delta = jax.random.normal(jax.random.PRNGKey(0), (k, dim))
+
+        q = jax.jit(lambda S, i: ops.sketch_query(spec, S, i))
+        u = jax.jit(lambda S, i, d: ops.sketch_update(spec, S, i, d))
+        tm = traffic_model(depth, width, dim, k)
+        results.append({
+            "shape": {"depth": depth, "width": width, "dim": dim, "k": k},
+            "query_us_cpu": _time(q, S, ids),
+            "update_us_cpu": _time(u, S, ids, delta),
+            "traffic_bytes": tm,
+            "fused_traffic_saving":
+                round(tm["adam_unfused"] / tm["adam_fused"], 2),
+        })
+    save_result("kernels", {"rows": results})
+    return [{**r["shape"], "query_us": round(r["query_us_cpu"], 1),
+             "fused_saving": r["fused_traffic_saving"]} for r in results]
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,46 @@
+"""Paper Tables 5/6: optimizer-state memory + step time per scheme.
+
+Protocol: a mid-size LM (vocab 16k, d=256) so the embedding/softmax aux
+state dominates, as in Wikitext-103/LM1B.  Reports bytes of optimizer
+state, steps/s, and the paper-style "Size" ratio vs dense Adam.
+"""
+from __future__ import annotations
+
+from benchmarks.common import save_result, small_lm_cfg, strip_arrays, \
+    train_small_lm
+from repro.core import lowrank, optimizers as O
+from repro.core.partition import SketchPolicy
+
+POL = SketchPolicy(min_rows=512)
+HP = O.SketchHParams(compression=5.0, width_multiple=16)
+
+
+def run(quick: bool = False):
+    steps = 30 if quick else 80
+    cfg = small_lm_cfg(vocab=16384, d_model=256, n_layers=2)
+    kw = dict(cfg=cfg, steps=steps, batch=4, seq=64)
+    out = {}
+    for name, opt in [
+        ("adam", O.adam(1e-3)),
+        ("cs_mv", O.countsketch_adam(1e-3, policy=POL, hparams=HP)),
+        ("cs_v", O.countsketch_adam(1e-3, policy=POL, hparams=HP,
+                                    sketch_first_moment=False)),
+        ("cs_rmsprop_b1_0", O.countsketch_rmsprop(1e-3, policy=POL,
+                                                  hparams=HP)),
+        ("lr_nmf_v", lowrank.nmf_rank1_adam(1e-3, policy=POL)),
+        ("adagrad", O.adagrad(0.1)),
+        ("cs_adagrad", O.countsketch_adagrad(0.1, policy=POL, hparams=HP)),
+    ]:
+        out[name] = strip_arrays(train_small_lm(opt, **kw))
+    base = out["adam"]["opt_state_bytes"]
+    table = {k: {"bytes": v["opt_state_bytes"],
+                 "size_ratio": round(v["opt_state_bytes"] / base, 3),
+                 "steps_per_s": round(v["steps_per_s"], 2),
+                 "final_loss": round(v["final_loss"], 3)}
+             for k, v in out.items()}
+    save_result("memory_time", {"detail": out, "table": table})
+    return table
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,83 @@
+"""Reads the dry-run artifacts (experiments/dryrun/**.json) and renders
+the §Roofline table for EXPERIMENTS.md: the three terms per (arch ×
+shape × mesh), the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and the
+perfect-overlap MFU bound.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load(mesh: str = "single", tag: str = "") -> List[Dict]:
+    rows = []
+    for p in sorted((DRYRUN / mesh).glob("*.json")):
+        rec = json.loads(p.read_text())
+        is_tagged = "__" in p.stem.replace(
+            f"{rec.get('arch', '')}__{rec.get('shape', '')}", "")
+        if tag:
+            if not p.stem.endswith(f"__{tag}"):
+                continue
+        elif p.stem.count("__") > 1:
+            continue
+        rows.append(rec)
+    return rows
+
+
+def fmt_row(rec: Dict) -> Optional[str]:
+    if rec.get("status") == "skipped":
+        return (f"| {rec['arch']} | {rec['shape']} | — | — | — | skip | — | — "
+                f"| {rec['reason'][:44]} |")
+    if rec.get("status") != "ok":
+        return (f"| {rec['arch']} | {rec['shape']} | — | — | — | ERROR | — "
+                f"| — | {rec.get('error', '')[:44]} |")
+    r = rec["roofline"]
+    mem = (rec.get("memory") or {})
+    peak = mem.get("peak_bytes_per_device", 0) / 2**30
+    return ("| {arch} | {shape} | {c:.2e} | {m:.2e} | {n:.2e} | {dom} | "
+            "{mfu:.3f} | {ratio:.2f} | {peak:.1f} GiB |").format(
+        arch=rec["arch"], shape=rec["shape"], c=r["compute_s"],
+        m=r["memory_s"], n=r["collective_s"], dom=r["dominant"],
+        mfu=r["mfu_bound"], ratio=r["useful_flops_ratio"], peak=peak)
+
+
+HEADER = ("| arch | shape | compute s | memory s | collective s | dominant "
+          "| MFU≤ | useful/HLO | peak/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def table(mesh: str = "single", tag: str = "") -> str:
+    lines = [HEADER]
+    for rec in load(mesh, tag):
+        line = fmt_row(rec)
+        if line:
+            lines.append(line)
+    return "\n".join(lines)
+
+
+def run(quick: bool = False):
+    out = {}
+    for mesh in ("single", "multi"):
+        if (DRYRUN / mesh).exists():
+            rows = load(mesh)
+            ok = [r for r in rows if r.get("status") == "ok"]
+            out[mesh] = {
+                "cells_ok": len(ok),
+                "cells_total": len(rows),
+                "dominant_counts": {
+                    d: sum(1 for r in ok
+                           if r["roofline"]["dominant"] == d)
+                    for d in ("compute", "memory", "collective")},
+            }
+            print(f"\n=== {mesh} mesh ===")
+            print(table(mesh))
+    from benchmarks.common import save_result
+    save_result("roofline_summary", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

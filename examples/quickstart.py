@@ -1,0 +1,72 @@
+"""Quickstart: the count-sketch optimizer as a drop-in (paper §4).
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Shows: (1) the Count-Sketch Tensor's UPDATE/QUERY on a power-law vector,
+(2) swapping dense Adam for CS-Adam on a model with a big embedding
+table, and (3) the memory the sketch frees.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sketch as cs
+from repro.core.optimizers import (SketchHParams, adam, apply_updates,
+                                   countsketch_adam, state_bytes)
+from repro.core.partition import SketchPolicy
+
+
+def demo_sketch_tensor():
+    print("=== 1. Count-Sketch Tensor (paper Alg. 1) ===")
+    n, d = 100_000, 64
+    spec = cs.for_param((n, d), compression=20.0, depth=3)
+    S = cs.init(spec)
+    print(f"table {n}x{d} ({n * d * 4 / 2**20:.1f} MiB) -> sketch "
+          f"{spec.shape} ({spec.nbytes() / 2**20:.1f} MiB)")
+
+    # power-law vector: a few heavy rows, long tail
+    rng = np.random.RandomState(0)
+    ids = jnp.asarray(rng.randint(0, n, size=4096), jnp.int32)
+    mags = (rng.zipf(1.5, size=4096).clip(max=1000) / 10.0)
+    rows = jnp.asarray(mags[:, None] * rng.randn(4096, d), jnp.float32)
+    S = cs.update(spec, S, ids, rows)
+
+    hot = np.argsort(-mags)[:5]
+    est = cs.query(spec, S, ids[jnp.asarray(hot)])
+    for i, h in enumerate(hot):
+        err = float(jnp.linalg.norm(est[i] - rows[h]) /
+                    jnp.linalg.norm(rows[h]))
+        print(f"  heavy row |x|={mags[h]:7.1f}: rel err {err:.3f}")
+
+
+def demo_optimizer():
+    print("\n=== 2. CS-Adam as a drop-in (paper Alg. 4) ===")
+    key = jax.random.PRNGKey(0)
+    params = {
+        "tok_embed": {"table": jax.random.normal(key, (50_000, 64)) * 0.02},
+        "lm_head": {"table": jax.random.normal(key, (50_000, 64)) * 0.02},
+        "body": jax.random.normal(key, (64, 64)),
+    }
+
+    dense = adam(1e-3)
+    sketched = countsketch_adam(
+        1e-3,
+        policy=SketchPolicy(min_rows=1024),          # embedding+softmax only
+        hparams=SketchHParams(compression=5.0))      # the paper's LM setting
+
+    grads = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(key, p.shape) * 0.01, params)
+    for name, opt in [("dense Adam", dense), ("CS-Adam  ", sketched)]:
+        st = opt.init(params)
+        for _ in range(3):
+            updates, st = opt.update(grads, st, params)
+            params2 = apply_updates(params, updates)
+        mb = state_bytes(st) / 2**20
+        print(f"  {name}: optimizer state {mb:7.2f} MiB")
+    print("  (the paper's LM1B run saves 25% of total training memory"
+          " this way)")
+
+
+if __name__ == "__main__":
+    demo_sketch_tensor()
+    demo_optimizer()

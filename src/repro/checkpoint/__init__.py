@@ -1,0 +1,3 @@
+"""Atomic, async, elastic checkpointing."""
+from repro.checkpoint.store import (default_is_sketch, fold_sketches,  # noqa: F401
+                                    latest_step, restore, save)

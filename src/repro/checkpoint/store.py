@@ -1,0 +1,175 @@
+"""Atomic, resumable checkpointing with elastic (fold-aware) restore.
+
+Layout:  <dir>/step-<N>/   one ``.npy`` per leaf + ``manifest.json``
+         <dir>/LATEST      text file naming the newest complete step
+
+Guarantees:
+  * **atomic** — written to ``tmp-<N>`` then ``os.rename``d; a crash
+    mid-write never corrupts the latest checkpoint (rename is atomic on
+    POSIX), and LATEST is only updated after the rename;
+  * **async** — ``save(..., async_=True)`` snapshots to host memory
+    synchronously (jax.device_get) and writes on a daemon thread, so the
+    train loop is blocked only for the device→host copy;
+  * **elastic** — restore takes target ``shardings``; arrays are placed
+    via ``jax.device_put`` with the *new* mesh's shardings, so the same
+    checkpoint restores onto a resized mesh.  ``fold_sketches`` halves
+    every count-sketch leaf (Hokusai fold, paper §5) when the surviving
+    fleet has less memory — accumulated optimizer state is preserved;
+  * **sketch-aware** — hash seeds are derived from (path, base seed)
+    inside the optimizer, so state is portable across pods by
+    construction; nothing extra to store.
+
+On a real multi-host pod each host writes only its addressable shards
+(process-local leaves of jax.Array); this single-host implementation
+writes full arrays — the format (per-leaf files + manifest) is the same.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None)
+    return [(_path_str(kp), leaf) for kp, leaf in flat], treedef
+
+
+def save(ckpt_dir, step: int, tree, *, async_: bool = False,
+         keep: int = 3) -> Optional[threading.Thread]:
+    """Write ``tree`` as step-<step>.  Returns the writer thread if async."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    flat, _ = _flatten(tree)
+    host_leaves: List[Tuple[str, Optional[np.ndarray]]] = []
+    for path, leaf in flat:
+        host_leaves.append(
+            (path, None if leaf is None else np.asarray(jax.device_get(leaf))))
+
+    def write():
+        tmp = ckpt_dir / f"tmp-{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir()
+        manifest = {"step": step, "leaves": []}
+        for i, (path, arr) in enumerate(host_leaves):
+            entry = {"path": path, "file": None}
+            if arr is not None:
+                fname = f"leaf-{i:05d}.npy"
+                np.save(tmp / fname, arr)
+                entry.update(file=fname, dtype=str(arr.dtype),
+                             shape=list(arr.shape))
+            manifest["leaves"].append(entry)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        final = ckpt_dir / f"step-{step}"
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        # LATEST updated only after the checkpoint is complete
+        latest_tmp = ckpt_dir / ".LATEST.tmp"
+        latest_tmp.write_text(str(step))
+        os.rename(latest_tmp, ckpt_dir / "LATEST")
+        _gc(ckpt_dir, keep)
+
+    if async_:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def _gc(ckpt_dir: pathlib.Path, keep: int):
+    steps = sorted(int(p.name.split("-", 1)[1])
+                   for p in ckpt_dir.glob("step-*"))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(ckpt_dir / f"step-{s}", ignore_errors=True)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    f = pathlib.Path(ckpt_dir) / "LATEST"
+    if not f.exists():
+        return None
+    step = int(f.read_text().strip())
+    if not (pathlib.Path(ckpt_dir) / f"step-{step}").exists():
+        return None
+    return step
+
+
+def restore(ckpt_dir, tree_like, step: Optional[int] = None,
+            shardings=None):
+    """Restore into the structure of ``tree_like`` (shapes may differ if
+    the caller folds afterwards).  ``shardings``: optional matching pytree
+    of NamedSharding for elastic placement on a (possibly new) mesh."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = ckpt_dir / f"step-{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+
+    flat, treedef = _flatten(tree_like)
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = [s for _, s in _flatten(shardings)[0]]
+    leaves = []
+    for i, (path, like) in enumerate(flat):
+        e = by_path.get(path)
+        if e is None or e["file"] is None:
+            leaves.append(None)
+            continue
+        arr = np.load(d / e["file"])
+        if shard_flat is not None and shard_flat[i] is not None:
+            leaves.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return step, jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def fold_sketches(state, is_sketch: Callable[[str, Any], bool]):
+    """Hokusai fold every sketch leaf: S' = S[:, :w/2] + S[:, w/2:].
+
+    ``is_sketch(path, leaf)`` decides (rank-3, small leading depth).  Used
+    by elastic restore when ``ElasticPlan.fold_sketch`` — halves optimizer
+    memory while preserving accumulated state (paper §5)."""
+    flat, treedef = _flatten(state)
+    out = []
+    for path, leaf in flat:
+        if leaf is not None and is_sketch(path, leaf):
+            w = leaf.shape[1]
+            assert w % 2 == 0, f"fold needs even width at {path}"
+            leaf = leaf[:, : w // 2] + leaf[:, w // 2:]
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def default_is_sketch(path: str, leaf) -> bool:
+    """Sketch leaves: rank-3, small depth, and belonging to a sketched
+    table (embedding / softmax / class head) — NOT stacked layer moments,
+    which are also rank-3."""
+    return (hasattr(leaf, "ndim") and leaf.ndim == 3 and leaf.shape[0] <= 8
+            and any(t in f"/{path}/" for t in
+                    ("/tok_embed/", "/lm_head/", "/class_head/",
+                     "/embed_out/", "/softmax/")))

@@ -1,0 +1,20 @@
+"""llama4-maverick-400b-a17b — MoE, early fusion
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+48L  d_model=5120  40H (GQA kv=8, head_dim=128)  d_ff=8192 (experts)
+vocab=202048, 128 routed experts top-1 + 1 shared expert.  MoE layers
+interleave with dense-FFN layers (``moe_every=2``, dense d_ff=16384) —
+that is what makes the total ≈400 B with 17 B active, matching the
+"-400b-a17b" name; every-layer MoE would be ≈775 B.  Master weights are
+FSDP-sharded over the data/pod axes (the only assigned arch that needs
+it to fit v5e HBM).
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv=8, head_dim=128,
+    d_ff=8192, vocab_size=202048,
+    n_experts=128, top_k=1, shared_d_ff=8192, expert_sharding="ep",
+    moe_every=2, dense_d_ff=16384, fsdp=True,
+)

@@ -1,0 +1,13 @@
+"""qwen2-0.5b — GQA with QKV bias [arXiv:2407.10671; hf].
+
+24L  d_model=896  14H (GQA kv=2, head_dim=64)  d_ff=4864  vocab=151936.
+The 14-head axis does not divide the 16-way 'model' mesh axis — the
+sharding fallback replicates the attention projections (DESIGN.md §4).
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-0.5b", family="gqa",
+    n_layers=24, d_model=896, n_heads=14, n_kv=2, head_dim=64,
+    d_ff=4864, vocab_size=151936, qkv_bias=True, tie_embeddings=True,
+)

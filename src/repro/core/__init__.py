@@ -1,0 +1,17 @@
+"""Core of the paper's contribution: count-sketch compressed optimizers.
+
+Public API:
+    from repro.core import sketch, optimizers, lowrank
+    from repro.core.partition import SketchPolicy
+    from repro.core.cleaning import CleaningSchedule
+"""
+from repro.core import sketch  # noqa: F401
+from repro.core.cleaning import CleaningSchedule  # noqa: F401
+from repro.core.hashing import HashFamily  # noqa: F401
+from repro.core.optimizers import (  # noqa: F401
+    SketchHParams, Transform, adagrad, adam, apply_updates,
+    clip_by_global_norm, countsketch_adagrad, countsketch_adam,
+    countsketch_momentum, countsketch_rmsprop, linear_decay, momentum, sgd,
+    state_bytes)
+from repro.core.partition import (  # noqa: F401
+    SketchPolicy, everything_policy, nothing_policy)

@@ -1,0 +1,33 @@
+"""Count-Min Sketch cleaning heuristic (paper §4).
+
+The CMS min-estimator systematically over-estimates, which prematurely
+shrinks adaptive learning rates.  The paper's fix: every ``every`` steps,
+multiply the sketch by ``alpha`` (0 ≤ alpha ≤ 1).  We gate the decay with
+``lax.cond`` so the whole optimizer step stays one XLA program (no host
+round-trip — the GPU reference implementation cleans from the host)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CleaningSchedule:
+    alpha: float = 0.2
+    every: int = 125
+
+    def apply(self, S: jnp.ndarray, step: jnp.ndarray) -> jnp.ndarray:
+        """Decay ``S`` on steps where ``step % every == 0`` (step >= 1)."""
+        do = jnp.logical_and(step > 0, step % self.every == 0)
+        return jax.lax.cond(do, lambda s: s * jnp.asarray(self.alpha, s.dtype),
+                            lambda s: s, S)
+
+
+def maybe_clean(schedule: Optional[CleaningSchedule], S: jnp.ndarray,
+                step: jnp.ndarray) -> jnp.ndarray:
+    if schedule is None:
+        return S
+    return schedule.apply(S, step)

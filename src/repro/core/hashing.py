@@ -1,0 +1,116 @@
+"""Universal hash families for the count-sketch tensor, JAX-native.
+
+The paper uses ``v`` pairwise-independent hash functions
+``h_j: [n] -> [w]`` plus ``v`` sign functions ``s_j: [n] -> {+1,-1}``.
+We implement 2-universal multiply-shift hashing on uint32 (TPU has no
+fast int64 path).  All hash parameters are derived deterministically
+from a single integer seed so that:
+
+  * the sketch state is fully described by ``(seed, depth, width)`` and
+    checkpoints are portable across pods / device counts,
+  * sparse and dense update paths hash identically,
+  * re-seeding gives an independent hash family (used by MACH meta-class
+    hashing and by the property tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Large odd constants for multiply-shift mixing (splitmix32-style).
+_MIX1 = np.uint32(0x85EBCA6B)
+_MIX2 = np.uint32(0xC2B2AE35)
+_GOLDEN = np.uint32(0x9E3779B9)
+
+
+def _derive_params(seed: int, depth: int) -> np.ndarray:
+    """Derive ``depth`` (a, b) multiply-shift parameter pairs on the host.
+
+    Returns an int64-free uint32 array of shape (depth, 2).  ``a`` must be
+    odd for multiply-shift universality.
+    """
+    rng = np.random.RandomState(np.uint32(seed ^ 0x5EED5EED))
+    a = rng.randint(0, 2**31, size=depth, dtype=np.int64).astype(np.uint32)
+    a = (a << np.uint32(1)) | np.uint32(1)  # force odd
+    b = rng.randint(0, 2**31, size=depth, dtype=np.int64).astype(np.uint32)
+    return np.stack([a, b], axis=1)
+
+
+def _mix(x: jnp.ndarray) -> jnp.ndarray:
+    """splitmix32 finalizer — good avalanche for sequential ids."""
+    x = x ^ (x >> 16)
+    x = x * _MIX1
+    x = x ^ (x >> 13)
+    x = x * _MIX2
+    x = x ^ (x >> 16)
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class HashFamily:
+    """``depth`` independent 2-universal hash + sign functions.
+
+    ``identity=True`` is a test/debug mode where ``h_j(i) = i`` and
+    ``s_j(i) = +1`` — with ``width >= n`` the sketch becomes an exact
+    (uncompressed) table, which lets tests assert count-sketch optimizers
+    coincide bitwise with their dense counterparts.
+    """
+
+    seed: int
+    depth: int
+    width: int
+    identity: bool = False
+
+    @property
+    def params(self) -> np.ndarray:  # (depth, 2) uint32, host constant
+        return _derive_params(self.seed, self.depth)
+
+    def bucket(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """h_j(ids): (...,) int32 -> (depth, ...) int32 in [0, width)."""
+        if self.identity:
+            out = jnp.broadcast_to(ids[None], (self.depth,) + ids.shape)
+            return out.astype(jnp.int32) % self.width
+        p = jnp.asarray(self.params)  # (depth, 2)
+        x = ids.astype(jnp.uint32)
+        # (depth, ...) via broadcasting
+        h = _mix(x[None] * p[:, :1].reshape((self.depth,) + (1,) * ids.ndim)
+                 + p[:, 1:2].reshape((self.depth,) + (1,) * ids.ndim))
+        return (h % jnp.uint32(self.width)).astype(jnp.int32)
+
+    def sign(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """s_j(ids): (...,) int32 -> (depth, ...) float32 in {+1,-1}."""
+        if self.identity:
+            return jnp.ones((self.depth,) + ids.shape, dtype=jnp.float32)
+        p = jnp.asarray(self.params)
+        x = ids.astype(jnp.uint32) + _GOLDEN  # decorrelate from bucket hash
+        h = _mix(x[None] * p[:, 1:2].reshape((self.depth,) + (1,) * ids.ndim)
+                 + p[:, :1].reshape((self.depth,) + (1,) * ids.ndim))
+        # top bit -> sign
+        return jnp.where((h >> 31) == 0, 1.0, -1.0).astype(jnp.float32)
+
+    def fold(self) -> "HashFamily":
+        """Hash family after a Hokusai fold (width halved).
+
+        Multiply-shift buckets are uniform mod any power-of-two-ish width;
+        folding S[:, :w/2] += S[:, w/2:] is consistent with re-bucketing
+        ``h' = h % (w/2)`` ONLY when buckets were computed mod w and
+        w is even.  We therefore represent the folded family as the same
+        hash taken mod the new width — exactness of the fold is asserted
+        in tests/test_sketch.py.
+        """
+        if self.width % 2 != 0:
+            raise ValueError("fold requires an even sketch width")
+        return dataclasses.replace(self, width=self.width // 2)
+
+
+def mach_class_hash(seed: int, num_classes: int, num_buckets: int,
+                    num_hashes: int) -> np.ndarray:
+    """MACH meta-class assignment (paper §7.3): ``num_hashes`` independent
+    maps [num_classes] -> [num_buckets], materialized on the host (they are
+    tiny: num_hashes × num_classes int32)."""
+    fam = HashFamily(seed=seed, depth=num_hashes, width=num_buckets)
+    ids = jnp.arange(num_classes, dtype=jnp.int32)
+    return np.asarray(jax.device_get(fam.bucket(ids)))

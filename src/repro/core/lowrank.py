@@ -1,0 +1,130 @@
+"""Low-rank baselines the paper compares against (§6, §7).
+
+* ``nmf_rank1_adam`` — the Shazeer & Stern (Adafactor) non-negative rank-1
+  factorization of the 2nd moment, the paper's "LR-NMF" baseline.  Only
+  valid for non-negative variables, so (as in the paper) it compresses the
+  Adam 2nd moment while the 1st moment stays dense ("LR-NMF-V").
+* ``l2_rank1_*`` — the ℓ2/SVD rank-1 oracle the paper uses in Fig. 4.
+  Maintained with warm-started power iteration instead of a full SVD per
+  step — the paper notes the SVD version is "extremely slow and cannot be
+  used in practice"; power iteration is the practical equivalent.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optimizers import Schedule, Transform, _lr_at, _path_str
+from repro.core.partition import PolicyFn, nothing_policy
+
+
+class _RC(NamedTuple):
+    """Rank-1 factor pair — registered pytree leaf pair (row, col)."""
+    r: jnp.ndarray  # (n,)
+    c: jnp.ndarray  # (d,)
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, _RC))
+    return [(_path_str(kp), leaf) for kp, leaf in flat], treedef
+
+
+def nmf_rank1_adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+                   eps: float = 1e-30, *,
+                   policy: PolicyFn = nothing_policy) -> Transform:
+    """Adam with the 2nd moment of policy-selected leaves held as a
+    non-negative rank-1 factorization (row vector R, col vector C):
+
+        R ← β₂R + (1−β₂)·row_mean(g²)
+        C ← β₂C + (1−β₂)·col_mean(g²)
+        V̂ᵢⱼ = Rᵢ·Cⱼ / mean(R)
+
+    The reconstruction materializes the full (n, d) V̂ each step via an
+    outer product — the cost the paper's Table 1 calls out against
+    low-rank (and why count-sketch wins on sparse layers)."""
+
+    def init(params):
+        flat, treedef = _flatten(params)
+        m = [jnp.zeros_like(p) for _, p in flat]
+        v = [(_RC(jnp.zeros(p.shape[0], jnp.float32),
+                  jnp.zeros(p.shape[1], jnp.float32))
+              if policy(path, p.shape) else jnp.zeros_like(p))
+             for path, p in flat]
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree_util.tree_unflatten(treedef, m),
+                "v": jax.tree_util.tree_unflatten(treedef, v)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        eta = _lr_at(lr, step)
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        flat_g, treedef = _flatten(grads)
+        flat_m = [l for _, l in _flatten(state["m"])[0]]
+        flat_v = [l for _, l in _flatten(state["v"])[0]]
+
+        ms, vs, ups = [], [], []
+        for (path, g), M, V in zip(flat_g, flat_m, flat_v):
+            m_new = b1 * M + (1.0 - b1) * g
+            mhat = m_new / bc1
+            if isinstance(V, _RC):
+                g2 = jnp.square(g.astype(jnp.float32))
+                r = b2 * V.r + (1.0 - b2) * jnp.mean(g2, axis=1)
+                c = b2 * V.c + (1.0 - b2) * jnp.mean(g2, axis=0)
+                vhat = (r[:, None] * c[None, :]) / (jnp.mean(r) + eps)
+                v_out = _RC(r, c)
+            else:
+                vhat = b2 * V + (1.0 - b2) * g * g
+                v_out = vhat
+            upd = -eta * mhat / (jnp.sqrt(jnp.maximum(vhat / bc2, 0.0)) + 1e-8)
+            ms.append(m_new)
+            vs.append(v_out)
+            ups.append(upd)
+
+        unf = jax.tree_util.tree_unflatten
+        return unf(treedef, ups), {"step": step, "m": unf(treedef, ms),
+                                   "v": unf(treedef, vs)}
+
+    return Transform(init, update)
+
+
+def nmf_rank1_reconstruct(r: jnp.ndarray, c: jnp.ndarray,
+                          eps: float = 1e-30) -> jnp.ndarray:
+    return (r[:, None] * c[None, :]) / (jnp.mean(r) + eps)
+
+
+class Rank1State(NamedTuple):
+    u: jnp.ndarray  # (n,)
+    s: jnp.ndarray  # ()
+    v: jnp.ndarray  # (d,)
+
+
+def l2_rank1_init(shape) -> Rank1State:
+    n, d = shape
+    return Rank1State(u=jnp.full((n,), 1.0 / jnp.sqrt(n), jnp.float32),
+                      s=jnp.zeros((), jnp.float32),
+                      v=jnp.full((d,), 1.0 / jnp.sqrt(d), jnp.float32))
+
+
+def l2_rank1_step(state: Rank1State, target: jnp.ndarray,
+                  iters: int = 2) -> Rank1State:
+    """Track the top singular triplet of ``target`` by warm-started power
+    iteration (the practical stand-in for the paper's per-step SVD)."""
+    v = state.v
+    u = state.u
+    for _ in range(iters):
+        u = target @ v
+        u = u / (jnp.linalg.norm(u) + 1e-12)
+        v = target.T @ u
+        s = jnp.linalg.norm(v)
+        v = v / (s + 1e-12)
+    return Rank1State(u=u, s=s, v=v)
+
+
+def l2_rank1_reconstruct(state: Rank1State) -> jnp.ndarray:
+    return state.s * jnp.outer(state.u, state.v)

@@ -1,0 +1,75 @@
+"""Per-parameter compression policy (paper §4: embedding + softmax layers).
+
+The policy decides, for every parameter leaf, whether its optimizer
+auxiliary variables live in a count-sketch (compressed) or in a dense
+same-shape buffer.  The paper scopes compression to the embedding and
+softmax/vocab-projection layers — the layers with (a) the most rows and
+(b) row-sparse gradients; hidden layers stay dense ("future work" in §8).
+
+Paths are '/'-joined key paths into the params pytree, e.g.
+``tok_embed/table`` or ``lm_head/table``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Tuple
+
+import jax
+
+PolicyFn = Callable[[str, Tuple[int, ...]], bool]
+
+# Parameter names our model zoo uses for the sparse-gradient tables.
+SPARSE_TABLE_PATTERN = re.compile(
+    r"(tok_embed|lm_head|softmax|embed_out|class_head|expert_table)")
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchPolicy:
+    """Sketch rank-2 (rows, dim) leaves whose path matches and whose row
+    count clears ``min_rows`` (tiny tables gain nothing from sketching).
+
+    ``sketch_experts=True`` additionally opts MoE expert FFN weights in —
+    a beyond-paper experiment (expert rows are power-law-activated too);
+    expert weights are rank-3 (experts, d_in, d_out) and are sketched over
+    the flattened (experts*d_in) row axis."""
+
+    min_rows: int = 1024
+    pattern: "re.Pattern" = SPARSE_TABLE_PATTERN
+    sketch_experts: bool = False
+
+    def __call__(self, path: str, shape: Tuple[int, ...]) -> bool:
+        if len(shape) == 2 and shape[0] >= self.min_rows:
+            if self.pattern.search(path):
+                return True
+        if (self.sketch_experts and len(shape) == 3
+                and "expert" in path and shape[0] * shape[1] >= self.min_rows):
+            return True
+        return False
+
+
+def nothing_policy(path: str, shape: Tuple[int, ...]) -> bool:
+    """Compress nothing — the dense baseline."""
+    return False
+
+
+def everything_policy(path: str, shape: Tuple[int, ...]) -> bool:
+    """Compress every rank-2 leaf — stress-test mode."""
+    return len(shape) == 2
+
+
+def leaf_paths(tree):
+    """Flatten a pytree into (path_str, leaf) pairs (stable order)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        out.append(("/".join(parts), leaf))
+    return out

@@ -1,0 +1,190 @@
+"""The Count-Sketch Tensor (paper §2, §4) as a pure-functional JAX structure.
+
+State is a single array ``S`` of shape ``(depth, width, dim)``:
+
+  * ``depth`` rows of independent hash functions (paper: 3–5 suffice),
+  * ``width`` buckets (``width ≪ n`` — the compression),
+  * ``dim``   — the *uncompressed*, contiguous trailing axis of the
+    auxiliary variable ("structured sparsity", paper Fig. 3).  On TPU this
+    axis is tiled to the 128-lane dimension, so all random access happens
+    on the bucket axis only.
+
+Two estimators:
+  * signed  (Count-Sketch):   UPDATE adds ``s_j(i)·Δ``; QUERY is the
+    median over depth of ``s_j(i)·S[j, h_j(i)]``  — for signed variables
+    (momentum, Adam 1st moment).
+  * unsigned (Count-Min):     UPDATE adds ``Δ`` (no signs); QUERY is the
+    min over depth — for non-negative variables (Adagrad / Adam 2nd
+    moment).
+
+Canonical batch semantics
+-------------------------
+The paper's per-item algorithms QUERY, UPDATE, then QUERY again.  For a
+single item the second query equals ``first_query + Δ`` *exactly* (the
+median/min shifts uniformly).  We therefore define the batched step as
+
+    est_old = query(S, ids)
+    S'      = update(S, ids, Δ)
+    est_new = est_old + Δ          # paper-equivalent, one less sketch pass
+
+which is bit-identical to the paper for collision-free batches and saves a
+full gather pass (see EXPERIMENTS.md §Perf — this is the first of the
+beyond-paper optimizations; the strict 3-pass variant is kept as
+``query_after_update`` for the fidelity tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import HashFamily
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchSpec:
+    """Static description of a sketch tensor (hashable; safe as a jit const)."""
+
+    depth: int
+    width: int
+    dim: int
+    signed: bool = True          # True: Count-Sketch (median); False: Count-Min (min)
+    seed: int = 0
+    dtype: jnp.dtype = jnp.float32
+    identity: bool = False       # test mode: exact table when width >= n
+
+    @property
+    def family(self) -> HashFamily:
+        return HashFamily(seed=self.seed, depth=self.depth, width=self.width,
+                          identity=self.identity)
+
+    @property
+    def shape(self) -> Tuple[int, int, int]:
+        return (self.depth, self.width, self.dim)
+
+    def nbytes(self) -> int:
+        return self.depth * self.width * self.dim * jnp.dtype(self.dtype).itemsize
+
+    def fold(self) -> "SketchSpec":
+        return dataclasses.replace(self, width=self.width // 2)
+
+
+def for_param(shape: Tuple[int, ...], *, compression: float = 5.0,
+              depth: int = 3, signed: bool = True, seed: int = 0,
+              dtype=jnp.float32, width_multiple: int = 256,
+              identity: bool = False) -> SketchSpec:
+    """Spec for a (n, d) auxiliary variable compressed ``compression`` ×.
+
+    Width is rounded up to ``width_multiple`` so the bucket axis divides the
+    mesh axes it may be sharded over (and the fold stays exact).
+    """
+    if len(shape) != 2:
+        raise ValueError(f"sketched params must be rank-2 (rows, dim), got {shape}")
+    n, d = shape
+    if identity:
+        # exact-table test mode: every row gets its own bucket
+        w = -(-n // width_multiple) * width_multiple
+        return SketchSpec(depth=depth, width=w, dim=d, signed=signed,
+                          seed=seed, dtype=dtype, identity=True)
+    w = max(int(n / (compression * depth)), 1)
+    w = -(-w // width_multiple) * width_multiple  # ceil to multiple
+    w = min(w, max(n, width_multiple))
+    return SketchSpec(depth=depth, width=w, dim=d, signed=signed, seed=seed,
+                      dtype=dtype, identity=identity)
+
+
+def init(spec: SketchSpec) -> jnp.ndarray:
+    return jnp.zeros(spec.shape, dtype=spec.dtype)
+
+
+def _median_depth(vals: jnp.ndarray) -> jnp.ndarray:
+    """Median over axis 0.  depth==3 avoids a sort: a+b+c-max-min."""
+    v = vals.shape[0]
+    if v == 1:
+        return vals[0]
+    if v == 3:
+        hi = jnp.maximum(jnp.maximum(vals[0], vals[1]), vals[2])
+        lo = jnp.minimum(jnp.minimum(vals[0], vals[1]), vals[2])
+        return vals[0] + vals[1] + vals[2] - hi - lo
+    return jnp.median(vals, axis=0)
+
+
+def query(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """QUERY (paper Alg. 1): estimate rows ``ids`` -> (k, dim)."""
+    fam = spec.family
+    b = fam.bucket(ids)                       # (depth, k)
+    gathered = jax.vmap(lambda Sj, bj: Sj[bj])(S, b)     # (depth, k, dim)
+    if spec.signed:
+        s = fam.sign(ids)                     # (depth, k)
+        gathered = gathered * s[..., None].astype(S.dtype)
+        return _median_depth(gathered)
+    return jnp.min(gathered, axis=0)
+
+
+def update(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
+           delta: jnp.ndarray) -> jnp.ndarray:
+    """UPDATE (paper Alg. 1): add ``delta`` (k, dim) at rows ``ids``.
+
+    Batch-colliding ids accumulate correctly (scatter-add)."""
+    fam = spec.family
+    b = fam.bucket(ids)                                   # (depth, k)
+    if spec.signed:
+        s = fam.sign(ids)                                 # (depth, k)
+        upd = s[..., None].astype(S.dtype) * delta[None].astype(S.dtype)
+    else:
+        upd = jnp.broadcast_to(delta[None].astype(S.dtype),
+                               (spec.depth,) + delta.shape)
+    return jax.vmap(lambda Sj, bj, uj: Sj.at[bj].add(uj))(S, b, upd)
+
+
+def update_and_query(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
+                     delta: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Canonical batched step: returns (S', est_new).  See module docstring."""
+    est_old = query(spec, S, ids)
+    S = update(spec, S, ids, delta)
+    return S, est_old + delta
+
+
+def query_after_update(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
+                       delta: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Strict paper semantics (3 sketch passes): update then re-gather."""
+    S = update(spec, S, ids, delta)
+    return S, query(spec, S, ids)
+
+
+def decay(S: jnp.ndarray, alpha) -> jnp.ndarray:
+    """Cleaning heuristic (paper §4): multiply the sketch by ``alpha``."""
+    return S * jnp.asarray(alpha, dtype=S.dtype)
+
+
+def fold(spec: SketchSpec, S: jnp.ndarray) -> Tuple[SketchSpec, jnp.ndarray]:
+    """Hokusai fold (paper §5): halve the width, adding the upper half into
+    the lower.  Exact w.r.t. the ``h mod (w/2)`` re-bucketing because
+    ``(x mod w) mod (w/2) == x mod (w/2)`` for even ``w``.  Used for elastic
+    memory scaling (shrink optimizer state mid-training without reset)."""
+    if spec.width % 2 != 0:
+        raise ValueError("fold requires an even width")
+    half = spec.width // 2
+    return spec.fold(), S[:, :half] + S[:, half:]
+
+
+# ---------------------------------------------------------------------------
+# Dense-row helpers (the whole table 0..n-1 at once) — used when the train
+# step hands the optimizer a dense gradient for a sketched parameter.
+# ---------------------------------------------------------------------------
+
+def query_dense(spec: SketchSpec, S: jnp.ndarray, n: int) -> jnp.ndarray:
+    return query(spec, S, jnp.arange(n, dtype=jnp.int32))
+
+
+def update_dense(spec: SketchSpec, S: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    n = delta.shape[0]
+    return update(spec, S, jnp.arange(n, dtype=jnp.int32), delta)
+
+
+def update_and_query_dense(spec: SketchSpec, S: jnp.ndarray,
+                           delta: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    n = delta.shape[0]
+    return update_and_query(spec, S, jnp.arange(n, dtype=jnp.int32), delta)

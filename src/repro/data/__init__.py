@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipelines (zipf LM + extreme classification)."""
+from repro.data.pipeline import ZipfLM, ZipfLMConfig, classification_batch  # noqa: F401

@@ -1,0 +1,106 @@
+"""Deterministic synthetic data: zipf-distributed token streams.
+
+The paper's results hinge on the embedding/softmax layers seeing
+*power-law* row access (Fig. 1-2: few hot rows, drifting identities).
+This pipeline reproduces that regime offline:
+
+  * tokens follow a Zipf(alpha) marginal over the vocabulary;
+  * a hidden permutation bigram makes the stream *learnable* (with prob
+    ``bigram_p`` the next token is ``perm[prev]``), so optimizer-quality
+    benchmarks (test perplexity vs dense Adam) are meaningful;
+  * the hot-token identity set *drifts* every ``drift_every`` steps by
+    re-rolling the rank permutation — matching the paper's observation
+    that top-k identities change over training (Fig. 2);
+  * batches are a pure function of ``(seed, step, host)`` — the stream
+    is stateless, resumable, and identical after checkpoint restore, and
+    each host materializes only its shard (multi-host determinism).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ZipfLMConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    alpha: float = 1.1            # zipf exponent (word frequencies ≈ 1.0-1.2)
+    bigram_p: float = 0.5         # learnable-structure probability
+    drift_every: int = 500        # steps between hot-set re-rolls
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0
+        return self.global_batch // self.n_hosts
+
+
+class ZipfLM:
+    """Stateless stream: ``batch(step)`` is deterministic in (cfg, step)."""
+
+    def __init__(self, cfg: ZipfLMConfig):
+        self.cfg = cfg
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        p = ranks ** (-cfg.alpha)
+        self._cdf = np.cumsum(p / p.sum())
+
+    def _perm(self, epoch: int) -> np.ndarray:
+        rng = np.random.RandomState(
+            (self.cfg.seed * 1_000_003 + epoch * 7919) % (2**31 - 1))
+        return rng.permutation(self.cfg.vocab_size)
+
+    def _zipf_sample(self, rng: np.random.RandomState, shape,
+                     perm: np.ndarray) -> np.ndarray:
+        u = rng.random_sample(shape)
+        ranks = np.searchsorted(self._cdf, u)
+        return perm[np.minimum(ranks, self.cfg.vocab_size - 1)]
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        epoch = step // cfg.drift_every
+        perm = self._perm(epoch)                      # rank -> token id
+        bigram = self._perm(epoch + 10_000)           # token -> next token
+        rng = np.random.RandomState(
+            (cfg.seed * 2_000_003 + step * 104_729 + cfg.host_id * 31)
+            % (2**31 - 1))
+        b, s = cfg.host_batch, cfg.seq_len
+        toks = np.empty((b, s + 1), dtype=np.int64)
+        toks[:, 0] = self._zipf_sample(rng, (b,), perm)
+        fresh = self._zipf_sample(rng, (b, s), perm)
+        use_bigram = rng.random_sample((b, s)) < cfg.bigram_p
+        for t in range(s):
+            nxt = np.where(use_bigram[:, t], bigram[toks[:, t]], fresh[:, t])
+            toks[:, t + 1] = nxt
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+    def batches(self, start_step: int = 0):
+        step = start_step
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def classification_batch(step: int, *, n_features: int, n_classes: int,
+                         batch: int, nnz: int = 30, alpha: float = 1.1,
+                         seed: int = 0):
+    """Extreme-classification stream (paper §7.3 protocol): ``nnz`` sparse
+    zipf features per example; the class is a hash of the feature set (so
+    it is learnable and ~zipf over classes)."""
+    rng = np.random.RandomState((seed * 99_991 + step * 7) % (2**31 - 1))
+    ranks = np.arange(1, n_features + 1, dtype=np.float64) ** (-alpha)
+    cdf = np.cumsum(ranks / ranks.sum())
+    u = rng.random_sample((batch, nnz))
+    feats = np.minimum(np.searchsorted(cdf, u), n_features - 1)
+    # deterministic learnable mapping: the class is a hash of the FIRST
+    # (dominant) feature — learnable by an embedding-sum model, zipf over
+    # classes because features are zipf (the paper's query->product shape)
+    cls = (feats[:, 0].astype(np.int64) * 2_654_435_761) % n_classes
+    return {"features": feats.astype(np.int32),
+            "labels": cls.astype(np.int32)}

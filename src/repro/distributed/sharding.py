@@ -1,0 +1,350 @@
+"""Logical-axis sharding rules with automatic divisibility fallback.
+
+The framework shards by *path pattern*: every parameter leaf is matched
+against a rule table mapping it to a tuple of mesh-axis names (or None)
+per dimension.  Two safety valves make the same rules valid for every
+(arch × mesh) cell:
+
+  * **missing axes drop out** — a rule may name "pod"; on the single-pod
+    mesh that axis doesn't exist and is treated as None;
+  * **divisibility fallback** — if a dim is not divisible by the named
+    axis size the axis is dropped for that dim (e.g. qwen2-0.5b's 14
+    heads on a 16-way 'model' axis ⇒ its attention weights replicate).
+
+Layer-stacked leaves (under ``layers/``) get an implicit leading None for
+the ``lax.scan`` axis.
+
+ZeRO-1: dense optimizer moments take the parameter's spec plus 'data'
+sharding on the first still-unsharded divisible dim.  Sketch tensors
+``(depth, width, dim)`` shard width over 'data' and dim over 'model'.
+FSDP (llama4-maverick): master weights additionally shard their d_ff/
+d_model dims over 'data'/'pod'; GSPMD inserts the per-layer all-gathers.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Rule table: (path regex, per-dim axis template)
+# Templates name mesh axes; 'fsdp:<axis>' entries apply only when the
+# config opts into fsdp.  Matched against the path *suffix*.
+# ---------------------------------------------------------------------------
+
+RULES: Sequence[Tuple[str, Tuple[Any, ...]]] = (
+    # --- vocab tables: row(vocab)-sharded over model (Megatron vocab-parallel)
+    (r"(tok_embed|lm_head)/table$", ("model", "fsdp:data")),
+    # --- attention ---------------------------------------------------------
+    (r"attn/wq$", (None, "model")),
+    (r"attn/wk$", (None, "model")),
+    (r"attn/wv$", (None, "model")),
+    (r"attn/wo$", ("model", None)),
+    (r"attn/b[qkv]$", ("model",)),
+    (r"(self_attn|cross_attn)/wq$", (None, "model")),
+    (r"(self_attn|cross_attn)/wk$", (None, "model")),
+    (r"(self_attn|cross_attn)/wv$", (None, "model")),
+    (r"(self_attn|cross_attn)/wo$", ("model", None)),
+    # --- dense FFN ----------------------------------------------------------
+    (r"ffn/w_gate$", (None, "model")),
+    (r"ffn/w_up$", (None, "model")),
+    (r"ffn/w_down$", ("model", None)),
+    (r"mlp/w1$", (None, "model")),
+    (r"mlp/w2$", ("model", None)),
+    # --- MoE (expert_sharding='ep'); 'tp' override handled in spec_for ------
+    (r"ffn/router$", (None, None)),
+    (r"ffn/w_gate3$", ("model", "fsdp:pod", "fsdp:data")),   # (E, d, f)
+    (r"ffn/w_up3$", ("model", "fsdp:pod", "fsdp:data")),
+    (r"ffn/w_down3$", ("model", "fsdp:data", "fsdp:pod")),   # (E, f, d)
+    (r"ffn/shared/w_gate$", (None, "model")),
+    (r"ffn/shared/w_up$", (None, "model")),
+    (r"ffn/shared/w_down$", ("model", None)),
+    # --- RWKV6 ---------------------------------------------------------------
+    (r"tm/w[rkvg]$", (None, "model")),
+    (r"tm/wo$", ("model", None)),
+    (r"tm/w_[AB]$", (None, None)),
+    (r"tm/u$", (None, None)),
+    (r"cm/wk$", (None, "model")),
+    (r"cm/wv$", ("model", None)),
+    (r"cm/wr$", (None, "model")),
+    # --- Mamba2 --------------------------------------------------------------
+    (r"[zx]_proj$", (None, "model")),    # (d, d_inner) — head-sharded
+    (r"bc_proj$", (None, None)),         # (d, 2n): n is tiny, replicate
+    (r"dt_proj$", (None, "model")),      # (d, heads)
+    (r"conv_w_x$", (None, "model")),     # (K, di) depthwise — channel-sharded
+    (r"conv_b_x$", ("model",)),
+    (r"conv_w_bc$", (None, None)),
+    (r"conv_b_bc$", (None,)),
+    (r"out_proj$", ("model", None)),     # (d_inner, d)
+    (r"(A_log|dt_bias|D)$", ("model",)),  # per-head scalars
+    (r"gn$", ("model",)),                # group-norm scale over d_inner
+)
+
+_REPLICATE = re.compile(r"(ln\d?|norm|scale|bias|mix_|w_base|router)")
+
+
+def _axis_size(mesh: Mesh, name: str) -> Optional[int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name)
+
+
+def _resolve_dim(entry, dim: int, mesh: Mesh, fsdp: bool):
+    """Template entry -> mesh axis name or None (with fallbacks)."""
+    if entry is None:
+        return None
+    if isinstance(entry, str) and entry.startswith("fsdp:"):
+        if not fsdp:
+            return None
+        entry = entry.split(":", 1)[1]
+    size = _axis_size(mesh, entry)
+    if size is None or dim % size != 0:
+        return None
+    return entry
+
+
+def spec_for(path: str, shape: Tuple[int, ...], mesh: Mesh, *,
+             fsdp: bool = False, expert_sharding: str = "ep") -> P:
+    """PartitionSpec for one parameter leaf."""
+    if _REPLICATE.search(path.rsplit("/", 1)[-1]) and "proj" not in path:
+        return P()
+    stacked = "/layers/" in f"/{path}" or path.startswith(("layers/",
+                                                           "enc_layers/",
+                                                           "dec_layers/"))
+    for pat, template in RULES:
+        if re.search(pat, path):
+            tpl = template
+            # MoE rank-3 leaves carry a '3' marker in the rule table; the
+            # actual param paths are ffn/w_gate etc. with ndim==3(+stack).
+            break
+    else:
+        tpl = None
+    ndim = len(shape)
+    eff_shape = shape[1:] if stacked else shape
+    if tpl is None or len(tpl) != len(eff_shape):
+        # rank-3 MoE leaves match the rank-2 ffn rules by name; redirect
+        if re.search(r"ffn/w_(gate|up|down)$", path) and len(eff_shape) == 3:
+            name = path.rsplit("/", 1)[-1]
+            if expert_sharding == "ep":
+                tpl = dict(w_gate=("model", "fsdp:pod", "fsdp:data"),
+                           w_up=("model", "fsdp:pod", "fsdp:data"),
+                           w_down=("model", "fsdp:data", "fsdp:pod"))[name]
+            else:  # per-expert TP on d_ff
+                tpl = dict(w_gate=(None, None, "model"),
+                           w_up=(None, None, "model"),
+                           w_down=(None, "model", None))[name]
+        else:
+            tpl = (None,) * len(eff_shape)
+    axes = [
+        _resolve_dim(entry, dim, mesh, fsdp)
+        for entry, dim in zip(tpl, eff_shape)
+    ]
+    if stacked:
+        axes = [None] + axes
+    while axes and axes[-1] is None:
+        axes.pop()
+    return P(*axes)
+
+
+# ---------------------------------------------------------------------------
+# Tree-level helpers
+# ---------------------------------------------------------------------------
+
+def _iter_with_path(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    for kp, leaf in flat:
+        parts = []
+        for k in kp:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        yield "/".join(parts), leaf
+    return
+
+
+def param_specs(params_shape, mesh: Mesh, *, fsdp: bool = False,
+                expert_sharding: str = "ep"):
+    """Pytree of PartitionSpec matching a params (shape-)pytree."""
+    def leaf(path, x):
+        return spec_for(path, tuple(x.shape), mesh, fsdp=fsdp,
+                        expert_sharding=expert_sharding)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = [leaf("/".join(_kp_str(kp)), l) for kp, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _kp_str(kp):
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return parts
+
+
+def named(mesh: Mesh, spec_tree):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero1_spec(param_spec: P, shape: Tuple[int, ...], mesh: Mesh,
+               axis: str = "data") -> P:
+    """ZeRO-1: add 'data' sharding on the first unsharded divisible dim."""
+    size = _axis_size(mesh, axis)
+    if size is None:
+        return param_spec
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+    used = {a for e in entries if e for a in ((e,) if isinstance(e, str) else e)}
+    if axis in used:
+        return param_spec
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % size == 0 and dim >= size:
+            entries[i] = axis
+            break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def sketch_spec(mesh: Mesh, shape: Tuple[int, int, int]) -> P:
+    """Sketch tensor (depth, width, dim): width→'data', dim→'model'."""
+    _, w, d = shape
+    axes = [None,
+            "data" if (_axis_size(mesh, "data") or 0) and
+            w % _axis_size(mesh, "data") == 0 else None,
+            "model" if (_axis_size(mesh, "model") or 0) and
+            d % _axis_size(mesh, "model") == 0 else None]
+    while axes and axes[-1] is None:
+        axes.pop()
+    return P(*axes)
+
+
+def opt_specs_for_state(state_shape, params_shape, mesh: Mesh, *,
+                        fsdp: bool = False, expert_sharding: str = "ep"):
+    """Spec pytree for an optimizer-state pytree.
+
+    Dense moment leaves (same shape as their param) reuse the param spec +
+    ZeRO-1 'data' sharding.  Sketch leaves (depth ≤ 8, rank 3, shape differs
+    from the param) get (None, 'data', 'model').  Everything else (step
+    counters, scalars) replicates.
+    """
+    param_shapes = {p: tuple(l.shape) for p, l in _iter_with_path(params_shape)}
+
+    def leaf(path, x):
+        if x is None or not hasattr(x, "shape") or x.ndim == 0:
+            return P()
+        shape = tuple(x.shape)
+        # state paths look like 'm/<param path>' or 'v/<param path>'
+        sub = path.split("/", 1)[1] if "/" in path else path
+        pshape = param_shapes.get(sub)
+        if pshape == shape:
+            base = spec_for(sub, shape, mesh, fsdp=fsdp,
+                            expert_sharding=expert_sharding)
+            return zero1_spec(base, shape, mesh)
+        if len(shape) == 3 and shape[0] <= 8 and pshape is not None \
+                and len(pshape) == 2 and shape[2] == pshape[1]:
+            return sketch_spec(mesh, shape)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        state_shape, is_leaf=lambda x: x is None)
+    specs = [leaf("/".join(_kp_str(kp)), l) for kp, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation helpers
+# ---------------------------------------------------------------------------
+
+def dp_axes(mesh: Mesh, batch: int) -> Tuple[str, ...]:
+    """The data-parallel axis group ('pod','data' when present) that evenly
+    divides ``batch`` — longest prefix wins, else fewer axes, else none."""
+    cand = [a for a in ("pod", "data") if _axis_size(mesh, a)]
+    while cand:
+        size = 1
+        for a in cand:
+            size *= _axis_size(mesh, a)
+        if batch % size == 0 and batch >= size:
+            return tuple(cand)
+        cand.pop(0)  # drop 'pod' first, keep 'data'
+    return ()
+
+
+def batch_spec(mesh: Mesh, shape: Tuple[int, ...], *,
+               seq_axis: Optional[int] = None) -> P:
+    """Shard dim0 over the DP axis group; optionally dim ``seq_axis`` over
+    'model' (sequence parallelism for KV caches / long-context states)."""
+    dp = dp_axes(mesh, shape[0])
+    axes: list = [dp if dp else None] + [None] * (len(shape) - 1)
+    if seq_axis is not None and _axis_size(mesh, "model") \
+            and shape[seq_axis] % _axis_size(mesh, "model") == 0:
+        axes[seq_axis] = "model"
+    while axes and axes[-1] is None:
+        axes.pop()
+    return P(*axes)
+
+
+_ACTIVE_MESH: list = []
+
+
+class active_mesh:
+    """Context manager: enters the jax mesh context AND registers the mesh
+    so ``constraint`` calls inside traced code can adapt specs to it.  All
+    tracing (train/serve step lowering) happens inside this context."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        _ACTIVE_MESH.append(self.mesh)
+        self._ctx = self.mesh
+        self._ctx.__enter__()
+        return self.mesh
+
+    def __exit__(self, *exc):
+        self._ctx.__exit__(*exc)
+        _ACTIVE_MESH.pop()
+        return False
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH[-1] if _ACTIVE_MESH else None
+
+
+def constraint(x, spec: P):
+    """with_sharding_constraint that is a no-op outside an ``active_mesh``
+    context and silently drops axes the mesh doesn't have / can't divide."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    names = set(sizes)
+
+    def fix_entry(entry, dim):
+        if entry is None:
+            return None
+        group = entry if isinstance(entry, tuple) else (entry,)
+        group = tuple(a for a in group if a in names)
+        if not group:
+            return None
+        total = 1
+        for a in group:
+            total *= sizes[a]
+        if dim % total != 0:
+            return None
+        return group if len(group) > 1 else group[0]
+
+    entries = list(spec) + [None] * (x.ndim - len(spec))
+    fixed = [fix_entry(e, d) for e, d in zip(entries, x.shape)]
+    while fixed and fixed[-1] is None:
+        fixed.pop()
+    return jax.lax.with_sharding_constraint(x, P(*fixed))

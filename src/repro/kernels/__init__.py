@@ -1,0 +1,9 @@
+"""Pallas-TPU kernels for the count-sketch hot path.
+
+  cs_query.py — scalar-prefetch gather + median/min reduce (batch QUERY)
+  cs_update.py — bucket-sorted sequential-grid scatter-accumulate (batch UPDATE)
+  cs_adam.py  — fused streaming Adam: one HBM round-trip per sketch row
+  ops.py      — jit'd wrappers w/ TPU→Pallas, CPU→ref dispatch
+  ref.py      — pure-jnp oracles (bit-exact semantics definitions)
+"""
+from repro.kernels import ops, ref  # noqa: F401

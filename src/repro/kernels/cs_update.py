@@ -1,0 +1,97 @@
+"""Pallas-TPU sketch UPDATE: scatter-add ``k`` signed rows into the sketch.
+
+TPU adaptation (DESIGN.md §3): a GPU implementation uses atomic
+scatter-add.  TPUs have no atomics — instead we exploit the *sequential*
+TPU grid plus a bucket-sort:
+
+  1. outside the kernel, per hash row ``j``, sort the items by bucket id
+     (XLA variadic sort).  Equal buckets become consecutive grid steps;
+  2. the kernel visits sketch row blocks in sorted order.  Pallas only
+     writes an output block back when the block index *changes*, so a run
+     of equal buckets accumulates in VMEM and is flushed exactly once —
+     no read-modify-write hazard with the double-buffered pipeline
+     (a block is never revisited non-consecutively);
+  3. on the first visit of a bucket the kernel seeds the output block from
+     the (freshly fetched) input block; later visits accumulate into the
+     resident output block.
+
+The sketch is aliased input→output, so buckets never touched by any item
+keep their previous contents.
+
+Grid: ``(v, k)`` — hash rows outer, items inner.  Scalar-prefetch operands
+carry the sorted bucket ids and the sort permutation (used to address the
+un-permuted ``delta`` rows in HBM).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _update_kernel(signed: bool, bs_ref, ord_ref, s_in, delta, *rest):
+    # rest: [signs_sorted] if signed, then s_out
+    if signed:
+        sign_ref, s_out = rest
+        sgn = sign_ref[0, 0]
+    else:
+        (s_out,) = rest
+        sgn = 1.0
+    j = pl.program_id(0)
+    i = pl.program_id(1)
+    upd = (sgn * delta[0, :]).astype(s_out.dtype)
+    prev_same = jnp.logical_and(i > 0, bs_ref[j, i] == bs_ref[j, jnp.maximum(i - 1, 0)])
+
+    @pl.when(jnp.logical_not(prev_same))
+    def _seed():
+        s_out[0, 0, :] = s_in[0, 0, :] + upd
+
+    @pl.when(prev_same)
+    def _accum():
+        s_out[0, 0, :] = s_out[0, 0, :] + upd
+
+
+def cs_update(S: jnp.ndarray, buckets: jnp.ndarray,
+              signs: Optional[jnp.ndarray], delta: jnp.ndarray, *,
+              interpret: bool = False) -> jnp.ndarray:
+    """S (v,w,d); buckets (v,k) int32; signs (v,k) f32 / None; delta (k,d).
+
+    Returns the updated sketch.  Matches ``ref.cs_update_ref`` exactly
+    (scatter-add batch semantics, duplicate buckets accumulate)."""
+    v, w, d = S.shape
+    k = buckets.shape[1]
+    signed = signs is not None
+
+    order = jnp.argsort(buckets, axis=1).astype(jnp.int32)       # (v, k)
+    bs = jnp.take_along_axis(buckets, order, axis=1)             # sorted buckets
+
+    ins = [S, delta]
+    in_specs = [
+        pl.BlockSpec((1, 1, d), lambda j, i, b, o: (j, b[j, i], 0)),
+        pl.BlockSpec((1, d), lambda j, i, b, o: (o[j, i], 0)),
+    ]
+    if signed:
+        signs_sorted = jnp.take_along_axis(signs, order, axis=1)
+        ins.append(signs_sorted)
+        in_specs.append(pl.BlockSpec((1, 1), lambda j, i, b, o: (j, i)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(v, k),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, d), lambda j, i, b, o: (j, b[j, i], 0)),
+    )
+    fn = pl.pallas_call(
+        functools.partial(_update_kernel, signed),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(S.shape, S.dtype),
+        # alias the sketch operand (position 2 counting the two scalar-
+        # prefetch operands first) onto the single output
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )
+    return fn(bs, order, *ins)

@@ -1,0 +1,77 @@
+"""Jit'd wrappers for the sketch kernels.
+
+Dispatch policy: Pallas kernels on TPU backends, pure-jnp oracles
+(``ref.py`` — identical semantics) elsewhere, so the same model code runs
+on this CPU container, in tests, and on real v5e pods.  ``force`` overrides
+for kernel tests (interpret mode) and benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import SketchSpec
+from repro.kernels import ref
+from repro.kernels.cs_adam import cs_adam_fused
+from repro.kernels.cs_query import cs_query
+from repro.kernels.cs_update import cs_update
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _addressing(spec: SketchSpec, ids: jnp.ndarray):
+    fam = spec.family
+    buckets = fam.bucket(ids)
+    signs = fam.sign(ids) if spec.signed else None
+    return buckets, signs
+
+
+def sketch_query(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray, *,
+                 force: Optional[str] = None) -> jnp.ndarray:
+    """QUERY rows ``ids``; Pallas gather kernel on TPU, jnp gather off-TPU."""
+    buckets, signs = _addressing(spec, ids)
+    if force == "pallas" or (force is None and _on_tpu()):
+        return cs_query(S, buckets, signs, interpret=not _on_tpu())
+    return ref.cs_query_ref(S, buckets, signs)
+
+
+def sketch_update(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
+                  delta: jnp.ndarray, *,
+                  force: Optional[str] = None) -> jnp.ndarray:
+    """UPDATE rows ``ids`` with ``delta``; sorted-scatter kernel on TPU."""
+    buckets, signs = _addressing(spec, ids)
+    if force == "pallas" or (force is None and _on_tpu()):
+        return cs_update(S, buckets, signs, delta, interpret=not _on_tpu())
+    return ref.cs_update_ref(S, buckets, signs, delta)
+
+
+def adam_rows_fused(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
+                    M: Optional[jnp.ndarray], V: jnp.ndarray,
+                    ids: jnp.ndarray, g: jnp.ndarray,
+                    step: jnp.ndarray, *, lr, b1: float, b2: float,
+                    eps: float, force: Optional[str] = None
+                    ) -> Tuple[Optional[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    """Streaming fused CS-Adam over ``k`` rows (paper Alg. 4 semantics).
+
+    Pallas single-pass kernel on TPU, ``lax.scan`` oracle elsewhere."""
+    track_m = spec_m is not None
+    if track_m:
+        bm, sm = _addressing(spec_m, ids)
+    else:
+        bm, sm = None, None
+    bv, _ = _addressing(spec_v, ids)
+    t = step.astype(jnp.float32)
+    eta = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    if force == "pallas" or (force is None and _on_tpu()):
+        return cs_adam_fused(M, V, bm, sm, bv, g, lr=eta, b1=b1, b2=b2,
+                             eps=eps, bc1=bc1, bc2=bc2,
+                             interpret=not _on_tpu())
+    return ref.adam_fused_ref(M, V, bm, sm, bv, g, lr=eta, b1=b1, b2=b2,
+                              eps=eps, bc1=bc1, bc2=bc2)

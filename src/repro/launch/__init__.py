@@ -1,0 +1,5 @@
+"""Launch layer: production mesh, dry-run sweep, training driver.
+
+NOTE: importing submodules here would trigger jax initialization side
+effects in dryrun (XLA_FLAGS); import the submodules you need directly.
+"""

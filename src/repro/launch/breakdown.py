@@ -1,0 +1,108 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Per-op cost breakdown for one dry-run cell — the §Perf profiling tool.
+
+    PYTHONPATH=src python -m repro.launch.breakdown --arch zamba2_2_7b \
+        --shape train_4k [--mesh single] [--kind bytes|collective|flops]
+
+Prints the heaviest HLO lines (trip-count-weighted) with their source
+op_name metadata, plus the buffer-assignment peak if --dump is given.
+"""
+import argparse
+import re
+
+import jax
+
+from repro import configs
+from repro.configs import SHAPES
+from repro.launch import hlo_cost as H
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def collect_rows(hlo: str, n_dev: int):
+    comps, entry = H.split_computations(hlo)
+    mult, fusions, _, _ = H._resolve_multipliers(comps, entry)
+    fusion_eff = {fr: H._fusion_effective_bytes(
+        comps[fr], H._symbol_table(comps[fr])) for fr in fusions}
+    rows = {"bytes": [], "collective": [], "flops": []}
+    for comp, lines in comps.items():
+        m = mult.get(comp, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = comp in fusions
+        table = H._symbol_table(lines)
+        for ln in lines:
+            d = H._parse_def(ln)
+            if d is None:
+                continue
+            name, rt, op = d
+            base = op[:-6] if op.endswith("-start") else op
+            md = re.search(r'op_name="([^"]*)"', ln)
+            src = md.group(1) if md else ln[:80]
+            if base in H._COLLECTIVES and not op.endswith("-done"):
+                nb = H._shape_bytes(rt)
+                g = H._group_size(ln, n_dev)
+                rows["collective"].append((nb * m, nb, m,
+                                           f"{base} g={g}", comp, src))
+                continue
+            if op == "dot":
+                fl = H._dot_flops(ln, rt, table)
+                rows["flops"].append((fl * m, fl, m, "dot", comp, src))
+            if in_fusion or op in H._SKIP_OPS or op not in H._BYTES_OPS:
+                continue
+            if op == "fusion":
+                cm_ = H._CALLS_RE.search(ln)
+                eff, ro = fusion_eff.get(cm_.group(1) if cm_ else "",
+                                         ({}, None))
+                nb = ro if ro is not None else H._shape_bytes(rt)
+                for i, ref in enumerate(H._operand_refs(ln)):
+                    e = eff.get(i, None)
+                    nb += e if e is not None else H._shape_bytes(
+                        table.get(ref, ""))
+            else:
+                nb = H._shape_bytes(rt)
+                for ref in H._operand_refs(ln):
+                    nb += H._shape_bytes(table.get(ref, ""))
+            rows["bytes"].append((nb * m, nb, m, op, comp, src))
+    for k in rows:
+        rows[k].sort(reverse=True)
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--kind", default="bytes",
+                    choices=["bytes", "collective", "flops", "all"])
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--optimizer", default="cs_adam")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    lowered, ps, tokens, kind = lower_cell(cfg, shape, mesh,
+                                           optimizer=args.optimizer)
+    compiled = lowered.compile()
+    rows = collect_rows(compiled.as_text(), mesh.devices.size)
+    kinds = ["bytes", "collective", "flops"] if args.kind == "all" \
+        else [args.kind]
+    for k in kinds:
+        unit = {"bytes": ("GB", 1e9), "collective": ("GB", 1e9),
+                "flops": ("GF", 1e9)}[k]
+        total = sum(r[0] for r in rows[k])
+        print(f"\n==== {k}: total {total / unit[1] / 1e3:.2f} T{unit[0][0]} "
+              f"per device/step ====")
+        for tot, per, m, op, comp, src in rows[k][: args.top]:
+            print(f"{tot / unit[1]:9.1f}{unit[0]} per={per / 2**20:9.1f}MiB "
+                  f"x{m:5.0f} {op:18s} {src[:84]}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

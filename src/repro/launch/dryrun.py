@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+512 placeholder host devices stand in for 2 × (16×16) v5e pods.  For each
+cell the full production step (train_step with the count-sketch optimizer,
+or serve prefill/decode) is lowered against ShapeDtypeStruct inputs (no
+allocation), compiled, and its memory/cost/collective analyses recorded to
+``experiments/dryrun/<mesh>/<arch>__<shape>.json`` — the roofline tables
+in EXPERIMENTS.md are generated from these artifacts.
+
+    PYTHONPATH=src python -m repro.launch.dryrun                 # full sweep
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi_9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --force
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs import SHAPES, cell_skip
+from repro.distributed import sharding as shd
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import ArchConfig, ShapeConfig
+
+OUT_ROOT = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# Optimizer exercised by the dry-run train cells: the paper's headline
+# configuration (CS-MV Adam — both moments sketched on embedding+softmax).
+TRAIN_OPTIMIZER = "cs_adam"
+
+
+def _jsonable(x):
+    if isinstance(x, dict):
+        return {k: _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, (int, float, str, bool)) or x is None:
+        return x
+    return str(x)
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+               optimizer: str = TRAIN_OPTIMIZER):
+    """Returns (lowered, n_params_shape_tree, tokens, kind)."""
+    n_dev = mesh.devices.size
+    if shape.kind == "train":
+        from repro.train.steps import make_train_step
+        sampled = optimizer.endswith("+sampled")
+        opt_name = optimizer.replace("+sampled", "")
+        ts = make_train_step(cfg, optimizer=opt_name,
+                             sampled_softmax=sampled)
+        ps = ts.params_shape()
+        os_ = ts.opt_shape(ps)
+        batch = configs.train_batch_specs(cfg, shape,
+                                          sampled_softmax=sampled)
+        pshard, oshard, bshard, mshard = ts.shardings(mesh, batch)
+        fn = jax.jit(ts.step_fn,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, mshard),
+                     donate_argnums=(0, 1))
+        with shd.active_mesh(mesh):
+            lowered = fn.lower(ps, os_, batch)
+        tokens = shape.global_batch * shape.seq_len
+        return lowered, ps, tokens, "train"
+
+    from repro.serve.steps import make_serve_step
+    ss = make_serve_step(cfg, batch=shape.global_batch, max_seq=shape.seq_len)
+    ps = ss.params_shape()
+    pshard = ss.param_shardings(mesh)
+    dp = shd.dp_axes(mesh, shape.global_batch)
+    logits_spec = NamedSharding(
+        mesh, P(dp if len(dp) > 1 else (dp[0] if dp else None), "model"))
+
+    if shape.kind == "prefill":
+        batch = configs.prefill_batch_specs(cfg, shape)
+        bshard = shd.named(mesh, jax.tree_util.tree_map(
+            lambda s: shd.batch_spec(mesh, s.shape), batch))
+        cshard = ss.cache_specs(mesh)
+        fn = jax.jit(ss.prefill_fn,
+                     in_shardings=(pshard, bshard),
+                     out_shardings=(logits_spec, cshard))
+        with shd.active_mesh(mesh):
+            lowered = fn.lower(ps, batch)
+        tokens = shape.global_batch * shape.seq_len
+        return lowered, ps, tokens, "prefill"
+
+    # decode: one token against a seq_len cache
+    cache = ss.cache_shape()
+    cshard = ss.cache_specs(mesh)
+    token = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    tshard = NamedSharding(
+        mesh, P(dp if len(dp) > 1 else (dp[0] if dp else None)))
+    fn = jax.jit(ss.decode_fn,
+                 in_shardings=(pshard, cshard, tshard),
+                 out_shardings=(logits_spec, cshard),
+                 donate_argnums=(1,))
+    with shd.active_mesh(mesh):
+        lowered = fn.lower(ps, cache, token)
+    tokens = shape.global_batch
+    return lowered, ps, tokens, "decode"
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             force: bool = False, optimizer: str = TRAIN_OPTIMIZER,
+             out_root: pathlib.Path = OUT_ROOT, tag: str = "") -> dict:
+    out_dir = out_root / mesh_kind
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    out_path = out_dir / f"{arch}__{shape_name}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    skip = cell_skip(arch, shape_name)
+    if skip:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skipped", "reason": skip}
+        out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    try:
+        lowered, ps, tokens, kind = lower_cell(cfg, shape, mesh,
+                                               optimizer=optimizer)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mf = analysis.model_flops(cfg, ps, tokens,
+                                  "train" if kind == "train" else "serve")
+        roof = analysis.roofline_from_compiled(compiled, n_dev,
+                                               model_flops_total=mf)
+        mem = analysis.memory_analysis_dict(compiled)
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "ok", "kind": kind, "devices": n_dev,
+            "optimizer": optimizer if kind == "train" else None,
+            "tokens_global": tokens,
+            "n_params": analysis.count_params(ps),
+            "n_params_active": analysis.active_params(cfg, ps),
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": mem,
+            "roofline": roof.to_dict(),
+        }
+    except Exception as e:  # noqa: BLE001 — recorded, sweep continues
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-4000:]}
+    out_path.write_text(json.dumps(_jsonable(rec), indent=2))
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--optimizer", default=TRAIN_OPTIMIZER)
+    ap.add_argument("--tag", default="", help="suffix for perf-iteration runs")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(configs.ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+
+    failures = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                rec = run_cell(arch, shape_name, mesh_kind, force=args.force,
+                               optimizer=args.optimizer, tag=args.tag)
+                st = rec["status"]
+                if st == "ok":
+                    r = rec["roofline"]
+                    mem = (rec.get("memory") or {})
+                    peak = mem.get("peak_bytes_per_device", 0) / 2**30
+                    print(f"[{mesh_kind:6s}] {arch:26s} {shape_name:12s} OK  "
+                          f"dom={r['dominant']:10s} "
+                          f"c/m/n={r['compute_s']:.3e}/{r['memory_s']:.3e}/"
+                          f"{r['collective_s']:.3e}s "
+                          f"mfu≤{r['mfu_bound']:.2f} peak={peak:.2f}GiB "
+                          f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)",
+                          flush=True)
+                elif st == "skipped":
+                    print(f"[{mesh_kind:6s}] {arch:26s} {shape_name:12s} SKIP "
+                          f"({rec['reason'][:60]})", flush=True)
+                else:
+                    failures += 1
+                    print(f"[{mesh_kind:6s}] {arch:26s} {shape_name:12s} "
+                          f"ERROR {rec['error'][:200]}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,460 @@
+"""HLO-text cost model with while-loop trip-count multipliers.
+
+Why not ``compiled.cost_analysis()``?  XLA's HloCostAnalysis visits every
+computation ONCE — a ``lax.scan`` over 48 layers contributes one layer's
+FLOPs, not 48 (verified empirically in tests/test_hlo_cost.py).  Since
+every stack in this framework is a scan (compile economy, DESIGN.md §7),
+that undercounts FLOPs, bytes, *and* collectives by the trip count.
+
+This module re-derives the three roofline inputs from the optimized HLO
+text (``compiled.as_text()`` — post-SPMD, so all shapes are per-device):
+
+  * structural parse into computations;
+  * ``while`` trip counts recovered from the canonical counted-loop
+    condition (compare against a constant);
+  * execution multipliers propagated entry → while bodies (nested scans
+    multiply) → conditional branches (upper bound: every visit executes
+    the branch) → fusion/call regions;
+  * FLOPs: ``dot`` ops (2 · |result| · |contraction|), counted wherever
+    they live (top level or inside fusions), × multiplier;
+  * bytes: fusion-granularity HBM traffic — for every *materializing* op
+    in a control computation, operand + result bytes.  Ops inside fusion
+    regions stay in registers and are not counted (XLA fuses elementwise
+    chains; this matches its output model);
+  * collectives: ring-model link bytes per op kind × multiplier.
+
+Known over/under-approximations (documented in EXPERIMENTS.md §Roofline):
+  * conditional branches count as always-taken (zamba2's every-6th-layer
+    shared attention is ×6 overcounted INSIDE the cond — upper bound);
+  * elementwise flops are ignored (≪ dot flops for these models);
+  * bytes assume every fusion's operands/results round-trip HBM (no
+    inter-fusion reuse in VMEM/cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count.*?"n"\s*:\s*"(\d+)"')
+_COND_BRANCH_RE = re.compile(
+    r"(?:branch_computations=\{([^}]*)\}"
+    r"|true_computation=%?([\w\.\-]+),\s*false_computation=%?([\w\.\-]+))")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_DOT_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?(?:\w*)))\s+dot\(")
+_CONST_RE = re.compile(r"%?([\w\.\-]+)\s*=\s*\w+\[\]\s+constant\((\d+)\)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# Materializing ops whose operands+result count as HBM traffic when they
+# appear in a control (non-fusion) computation.  Raw elementwise ops are
+# deliberately EXCLUDED: the model assumes perfect elementwise fusion into
+# their producers/consumers — which is what the target (TPU) XLA does.
+# The CPU backend fuses far less, so counting its unfused elementwise
+# chains would overstate TPU HBM traffic by ~50× (measured; EXPERIMENTS.md
+# §Roofline notes).  Their traffic is represented by the materializing
+# endpoints (dot/fusion/gather/...) they feed.
+_BYTES_OPS = {
+    "fusion", "dot", "convolution", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "copy", "transpose",
+    "reduce", "sort", "pad", "concatenate", "slice", "reverse",
+    "custom-call", "cholesky", "triangular-solve", "rng",
+    "rng-bit-generator", "select-and-scatter", "reduce-window",
+}
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    "call", "bitcast-convert", "opt-barrier", "get-dimension-size",
+    "add-dependency", "domain",
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _op_name(rest: str) -> Optional[str]:
+    """The op identifier following the result type in '<type> <op>(...)'."""
+    m = re.match(
+        r"(?:\([^)]*\)|\w+\[[\d,]*\](?:\{[^}]*\})?\w*)\s+([\w\-]+)", rest)
+    return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes_hbm: float
+    collectives: Dict[str, Dict]
+    transcendental: float = 0.0
+    n_while: int = 0
+    unresolved_trips: int = 0
+
+    @property
+    def collective_link_bytes(self) -> float:
+        return sum(v["link_bytes"] for v in self.collectives.values())
+
+
+def split_computations(hlo: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line.strip())
+    return comps, entry
+
+
+def _trip_count(while_line: str, cond_lines: List[str]) -> Optional[int]:
+    """Prefer XLA's own ``known_trip_count`` backend_config; fall back to
+    the constant in the counted-loop condition."""
+    m = _TRIP_RE.search(while_line)
+    if m:
+        return int(m.group(1))
+    consts = {}
+    for ln in cond_lines:
+        m = _CONST_RE.search(ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond_lines:
+        if " compare(" in ln and "direction=LT" in ln:
+            refs = re.findall(r"%([\w\.\-]+)", ln.split("compare(", 1)[1])
+            for r in refs:
+                if r in consts:
+                    return consts[r]
+    if consts:
+        return max(consts.values())
+    return None
+
+
+def _resolve_multipliers(comps: Dict[str, List[str]], entry: str
+                         ) -> Tuple[Dict[str, float], set, int, int]:
+    """Execution count per computation + the set of fusion-region comps."""
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry] = 1.0
+    fusion_regions: set = set()
+    n_while = 0
+    unresolved = 0
+
+    # fixed-point over the call graph (it is a DAG of computations)
+    changed = True
+    seen_pairs = set()
+    for _ in range(len(comps) + 2):
+        if not changed:
+            break
+        changed = False
+        for comp, lines in comps.items():
+            m = mult.get(comp, 0.0)
+            if m == 0.0:
+                continue
+            for ln in lines:
+                wm = _WHILE_RE.search(ln)
+                if wm:
+                    cond, body = wm.group(1), wm.group(2)
+                    trip = _trip_count(ln, comps.get(cond, []))
+                    key = (comp, body)
+                    if key in seen_pairs:
+                        continue
+                    seen_pairs.add(key)
+                    n_while += 1
+                    if trip is None:
+                        trip = 1
+                        unresolved += 1
+                    for tgt, t in ((body, trip), (cond, trip + 1)):
+                        if mult.get(tgt, 0.0) < m * t:
+                            mult[tgt] = m * t
+                            changed = True
+                    continue
+                cm = _COND_BRANCH_RE.search(ln)
+                if cm:
+                    branches = []
+                    if cm.group(1):
+                        branches = re.findall(r"%?([\w\.\-]+)",
+                                              cm.group(1))
+                    else:
+                        branches = [cm.group(2), cm.group(3)]
+                    for b in branches:
+                        if b in comps and mult.get(b, 0.0) < m:
+                            mult[b] = m
+                            changed = True
+                    continue
+                fm = _CALLS_RE.search(ln)
+                if fm and fm.group(1) in comps:
+                    fusion_regions.add(fm.group(1))
+                    if mult.get(fm.group(1), 0.0) < m:
+                        mult[fm.group(1)] = m
+                        changed = True
+                am = _TO_APPLY_RE.search(ln)
+                if am and am.group(1) in comps:
+                    fusion_regions.add(am.group(1))
+                    if mult.get(am.group(1), 0.0) < m:
+                        mult[am.group(1)] = m
+                        changed = True
+    return mult, fusion_regions, n_while, unresolved
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s([\w\-\$]+)\(")
+_REF_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _parse_def(line: str) -> Optional[Tuple[str, str, str]]:
+    """'(name, result_type, op)' for a '%name = TYPE op(...)' line."""
+    m = _DEF_RE.match(line)
+    if not m:
+        return None
+    return m.group(1), m.group(2), m.group(3)
+
+
+def _symbol_table(lines: List[str]) -> Dict[str, str]:
+    """name -> result-type string for every def in a computation."""
+    table: Dict[str, str] = {}
+    for ln in lines:
+        d = _parse_def(ln)
+        if d:
+            table[d[0]] = d[1]
+    return table
+
+
+def _operand_refs(line: str) -> List[str]:
+    """Operand names inside the op's argument parens."""
+    try:
+        args = line.split("(", 1)[1]
+    except IndexError:
+        return []
+    args = args.split(", metadata=", 1)[0]
+    return _REF_RE.findall(args)
+
+
+def _dot_flops(line: str, result_type: str, table: Dict[str, str]) -> float:
+    result_elems = 0
+    for dtype, dims in _SHAPE_RE.findall(result_type):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        result_elems += n
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    refs = _operand_refs(line)
+    lhs_type = table.get(refs[0], "") if refs else ""
+    shapes = _SHAPE_RE.findall(lhs_type)
+    if not shapes or cm is None:
+        return 2.0 * result_elems  # degenerate / unparsable
+    lhs_dims = [int(d) for d in shapes[0][1].split(",")] if shapes[0][1] else []
+    contract = 1
+    for idx in (int(i) for i in cm.group(1).split(",") if i):
+        if idx < len(lhs_dims):
+            contract *= lhs_dims[idx]
+    return 2.0 * result_elems * contract
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+_SLICING_OPS = {"dynamic-slice", "gather"}
+
+
+def _fusion_effective_bytes(lines: List[str], table: Dict[str, str]
+                            ) -> Tuple[Dict[int, Optional[int]], Optional[int]]:
+    """Per-parameter effective READ bytes for a fusion region, plus an
+    effective RESULT size override.
+
+    A fusion that dynamic-slices / gathers from a parameter only touches
+    the slice — counting the full operand (× the enclosing scan's trip
+    count!) overstates traffic by the array/slice ratio.  Returns
+    ``param_index -> bytes`` (None = full size) and an override for the
+    result when the root is a dynamic-update-slice / scatter (only the
+    update slice is written; the rest aliases in place)."""
+    param_names: Dict[str, int] = {}
+    for ln in lines:
+        m = re.match(r"%?([\w\.\-]+)\s*=\s*.*?\sparameter\((\d+)\)", ln)
+        if m:
+            param_names[m.group(1)] = int(m.group(2))
+
+    eff: Dict[int, Optional[int]] = {}
+    sliced_bytes: Dict[str, int] = {}
+    other_use: Dict[str, bool] = {}
+    root_override: Optional[int] = None
+    for ln in lines:
+        d = _parse_def(ln)
+        if d is None:
+            continue
+        name, rt, op = d
+        refs = _operand_refs(ln)
+        if op in _SLICING_OPS and refs:
+            src = refs[0]
+            if src in param_names:
+                sliced_bytes[src] = sliced_bytes.get(src, 0) + _shape_bytes(rt)
+            for r in refs[1:]:
+                if r in param_names:
+                    other_use[r] = True
+        elif op in ("dynamic-update-slice", "scatter") and refs:
+            src = refs[0]
+            upd = refs[1] if len(refs) > 1 else None
+            upd_bytes = _shape_bytes(table.get(upd, "")) if upd else 0
+            if src in param_names:
+                # reads only the region it overwrites (aliased in place)
+                sliced_bytes[src] = sliced_bytes.get(src, 0) + upd_bytes
+            if ln.lstrip().startswith("ROOT"):
+                root_override = upd_bytes
+            for r in refs[1:]:
+                if r in param_names:
+                    other_use[r] = True
+        else:
+            for r in refs:
+                if r in param_names:
+                    other_use[r] = True
+    for name, idx in param_names.items():
+        if name in sliced_bytes and not other_use.get(name):
+            eff[idx] = sliced_bytes[name]
+        else:
+            eff[idx] = None  # full size
+    return eff, root_override
+
+
+def analyze(hlo: str, n_devices: int) -> HloCost:
+    comps, entry = split_computations(hlo)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    mult, fusion_regions, n_while, unresolved = _resolve_multipliers(
+        comps, entry)
+
+    fusion_eff: Dict[str, Tuple[Dict[int, Optional[int]], Optional[int]]] = {}
+    for fr in fusion_regions:
+        fusion_eff[fr] = _fusion_effective_bytes(
+            comps[fr], _symbol_table(comps[fr]))
+
+    flops = 0.0
+    bytes_hbm = 0.0
+    colls = {k: {"count": 0, "bytes": 0.0, "link_bytes": 0.0}
+             for k in _COLLECTIVES}
+
+    for comp, lines in comps.items():
+        m = mult.get(comp, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = comp in fusion_regions
+        table = _symbol_table(lines)
+        for ln in lines:
+            d = _parse_def(ln)
+            if d is None:
+                continue
+            _, result_type, op = d
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                nbytes = _shape_bytes(result_type)
+                g = _group_size(ln, n_devices)
+                if g <= 1:
+                    continue
+                frac = (g - 1) / g
+                if base == "all-reduce":
+                    link = 2.0 * nbytes * frac
+                elif base == "all-gather":
+                    link = nbytes * frac
+                elif base == "reduce-scatter":
+                    link = nbytes * (g - 1)
+                elif base == "all-to-all":
+                    link = nbytes * frac
+                else:
+                    link = float(nbytes)
+                colls[base]["count"] += int(m)
+                colls[base]["bytes"] += nbytes * m
+                colls[base]["link_bytes"] += link * m
+                # a collective also moves its buffer through HBM
+                if not in_fusion:
+                    bytes_hbm += 2.0 * nbytes * m
+                continue
+            if op == "dot":
+                flops += _dot_flops(ln, result_type, table) * m
+            elif op == "custom-call" and ("matmul" in ln or "dot" in ln):
+                # CPU backend may emit library matmuls as custom-calls:
+                # flops = 2 * |out| * K with K from the first operand
+                out_elems = 0
+                for _, dims in _SHAPE_RE.findall(result_type):
+                    n_ = 1
+                    for dd in (dims.split(",") if dims else []):
+                        n_ *= int(dd)
+                    out_elems += n_
+                refs_cc = _operand_refs(ln)
+                lhs = _SHAPE_RE.findall(table.get(refs_cc[0], "")) \
+                    if refs_cc else []
+                kdim = int(lhs[0][1].split(",")[-1]) if lhs and lhs[0][1] else 1
+                flops += 2.0 * out_elems * kdim * m
+            if in_fusion:
+                continue
+            if op in _SKIP_OPS or op.endswith("-done"):
+                continue
+            if op not in _BYTES_OPS:
+                continue
+            refs = _operand_refs(ln)
+            if op == "fusion":
+                cm_ = _CALLS_RE.search(ln)
+                eff, root_override = fusion_eff.get(
+                    cm_.group(1) if cm_ else "", ({}, None))
+                nbytes = (root_override if root_override is not None
+                          else _shape_bytes(result_type))
+                for i, ref in enumerate(refs):
+                    e = eff.get(i, None)
+                    nbytes += (e if e is not None
+                               else _shape_bytes(table.get(ref, "")))
+            elif op in ("dynamic-slice", "gather"):
+                # reads the slice, writes the slice (+ indices)
+                nbytes = 2 * _shape_bytes(result_type)
+                for ref in refs[1:]:
+                    nbytes += _shape_bytes(table.get(ref, ""))
+            elif op in ("dynamic-update-slice", "scatter"):
+                upd = _shape_bytes(table.get(refs[1], "")) if len(refs) > 1 \
+                    else _shape_bytes(result_type)
+                nbytes = 2 * upd
+                for ref in refs[2:]:
+                    nbytes += _shape_bytes(table.get(ref, ""))
+            else:
+                nbytes = _shape_bytes(result_type)
+                for ref in refs:
+                    nbytes += _shape_bytes(table.get(ref, ""))
+            bytes_hbm += nbytes * m
+
+    return HloCost(flops=flops, bytes_hbm=bytes_hbm, collectives=colls,
+                   n_while=n_while, unresolved_trips=unresolved)

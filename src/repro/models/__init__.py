@@ -1,0 +1,1 @@
+"""Model zoo: param-dict pure-function models, scan-over-layers stacks."""

@@ -1,0 +1,262 @@
+"""GQA attention: flash (custom-vjp) training path + KV-cache serving path.
+
+``flash_attention`` is the production path: online-softmax over KV
+chunks, and a ``custom_vjp`` whose forward saves only (o, logsumexp) —
+the backward re-forms each chunk's probabilities instead of storing the
+(s × s) matrix.  Without the custom vjp, the inner scan stacks per-chunk
+softmax residuals for autodiff: a 4k-seq layer stores the full s² f32
+attention matrix (~4.5 GiB/device at the train_4k cells — measured in
+EXPERIMENTS.md §Perf), defeating the point of chunking.  Peak is now
+O(s·chunk + s·d); HBM traffic O(s²·d / chunk).
+
+``chunked_attention`` (plain scan, autodiff backward) is kept as the
+reference oracle for tests.  Decode attends one query against the full
+cache (scores are O(seq), no chunking needed).
+
+Layouts:
+  q        (b, s, hq, hd)
+  k, v     (b, s, hkv, hd)         hq % hkv == 0 (GQA groups)
+  cache    (b, S_max, hkv, hd)     seq axis shardable over 'model' (SP)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _group(q: jnp.ndarray, hkv: int) -> jnp.ndarray:
+    b, s, hq, hd = q.shape
+    return q.reshape(b, s, hkv, hq // hkv, hd)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool, chunk: int = 1024,
+                      q_offset: int = 0) -> jnp.ndarray:
+    """Online-softmax attention over KV chunks.
+
+    q (b,sq,hq,hd); k,v (b,skv,hkv,hd).  ``q_offset``: absolute position of
+    q[0] relative to k[0] (prefill continuation).  Returns (b,sq,hq,hd)."""
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    chunk = min(chunk, skv)
+    if skv % chunk != 0:
+        chunk = skv  # odd lengths (tests, ragged tails): single chunk
+
+    n_chunks = skv // chunk
+
+    qg = _group(q, hkv).astype(jnp.float32) / jnp.sqrt(hd)  # (b,sq,hkv,g,hd)
+    kc = k.reshape(b, n_chunks, chunk, hkv, hd)
+    vc = v.reshape(b, n_chunks, chunk, hkv, hd)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc = carry                       # (b,hkv,g,sq), ..., (...,hd)
+        kb, vb, c_idx = xs                      # (b,chunk,hkv,hd) ×2, ()
+        s = jnp.einsum("bqhgd,bchd->bhgqc", qg, kb.astype(jnp.float32))
+        if causal:
+            k_pos = c_idx * chunk + jnp.arange(chunk)
+            mask = q_pos[:, None] >= k_pos[None, :]         # (sq, chunk)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqc,bchd->bhgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, g, sq), jnp.float32),
+            jnp.zeros((b, hkv, g, sq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init,
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]            # (b,hkv,g,sq,hd)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, hq, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, cache_k: jnp.ndarray,
+                     cache_v: jnp.ndarray, length: jnp.ndarray) -> jnp.ndarray:
+    """One-token attention against the cache.
+
+    q (b,1,hq,hd); cache_k/v (b,S,hkv,hd); length () or (b,) valid prefix.
+    The seq axis of the cache may be sharded ('model'); the max/sum
+    reductions below become cross-shard collectives (flash-decoding)."""
+    b, _, hq, hd = q.shape
+    S, hkv = cache_k.shape[1], cache_k.shape[2]
+    qg = _group(q, hkv).astype(jnp.float32) / jnp.sqrt(hd)  # (b,1,hkv,g,hd)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, cache_k.astype(jnp.float32))
+    pos = jnp.arange(S)
+    valid = pos[None] < jnp.broadcast_to(jnp.asarray(length), (b,))[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bhgqd", p, cache_v.astype(jnp.float32))
+    out = jnp.moveaxis(out, 3, 1).reshape(b, 1, hq, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (custom VJP: backward recomputes chunk probabilities)
+# ---------------------------------------------------------------------------
+
+def _flash_fwd_scan(qg, k, v, *, causal: bool, chunk: int, q_offset: int):
+    """qg (b,sq,hkv,g,hd) pre-scaled fp32; k/v (b,skv,hkv,hd).
+    Returns (out (b,hkv,g,sq,hd) fp32, lse (b,hkv,g,sq))."""
+    b, sq, hkv, g, hd = qg.shape
+    skv = k.shape[1]
+    n_chunks = skv // chunk
+    kc = jnp.moveaxis(k.reshape(b, n_chunks, chunk, hkv, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n_chunks, chunk, hkv, hd), 1, 0)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, c_idx = xs
+        s = jnp.einsum("bqhgd,bchd->bhgqc", qg, kb.astype(jnp.float32))
+        if causal:
+            k_pos = c_idx * chunk + jnp.arange(chunk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqc,bchd->bhgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, g, sq), jnp.float32),
+            jnp.zeros((b, hkv, g, sq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init,
+                                  (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_core(q, k, v, causal: bool, chunk: int, q_offset: int):
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    qg = _group(q, hkv).astype(jnp.float32) / jnp.sqrt(hd)
+    out, _ = _flash_fwd_scan(qg, k, v, causal=causal, chunk=chunk,
+                             q_offset=q_offset)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, hq, hd)
+    return out.astype(q.dtype)
+
+
+def flash_attention(q, k, v, causal: bool = True, chunk: int = 1024,
+                    q_offset: int = 0):
+    """Memory-linear attention.  q (b,sq,hq,hd); k,v (b,skv,hkv,hd).
+    Matches ``chunked_attention`` to fp32 accumulation accuracy; ragged
+    sequence lengths fall back to the reference path."""
+    skv = k.shape[1]
+    chunk = min(chunk, skv)
+    if skv % chunk != 0:
+        return chunked_attention(q, k, v, causal=causal, chunk=chunk,
+                                 q_offset=q_offset)
+    return _flash_core(q, k, v, causal, chunk, q_offset)
+
+
+def _flash_fwd(q, k, v, causal, chunk, q_offset):
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    qg = _group(q, hkv).astype(jnp.float32) / jnp.sqrt(hd)
+    o, lse = _flash_fwd_scan(qg, k, v, causal=causal, chunk=chunk,
+                             q_offset=q_offset)
+    out = jnp.moveaxis(o, 3, 1).reshape(b, sq, hq, hd).astype(q.dtype)
+    return out, (qg, k, v, o, lse)
+
+
+def _flash_bwd(causal, chunk, q_offset, res, dout):
+    qg, k, v, o, lse = res
+    qdt = v.dtype
+    b, sq, hkv, g, hd = qg.shape
+    skv = k.shape[1]
+    n_chunks = skv // chunk
+    do = jnp.moveaxis(
+        dout.astype(jnp.float32).reshape(b, sq, hkv, g, hd), 1, 3)
+    # D_q = rowsum(do ⊙ o)
+    D = jnp.sum(do * o, axis=-1)                      # (b,hkv,g,sq)
+    kc = jnp.moveaxis(k.reshape(b, n_chunks, chunk, hkv, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, n_chunks, chunk, hkv, hd), 1, 0)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(dq, xs):
+        kb, vb, c_idx = xs
+        s = jnp.einsum("bqhgd,bchd->bhgqc", qg, kb.astype(jnp.float32))
+        if causal:
+            k_pos = c_idx * chunk + jnp.arange(chunk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])               # (b,hkv,g,sq,c)
+        dv_c = jnp.einsum("bhgqc,bhgqd->bchd", p, do)
+        dp = jnp.einsum("bhgqd,bchd->bhgqc", do, vb.astype(jnp.float32))
+        ds = p * (dp - D[..., None])
+        dq = dq + jnp.einsum("bhgqc,bchd->bqhgd", ds, kb.astype(jnp.float32))
+        dk_c = jnp.einsum("bhgqc,bqhgd->bchd", ds, qg)
+        return dq, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b, sq, hkv, g, hd), jnp.float32)
+    dq, (dk_st, dv_st) = jax.lax.scan(body, dq0,
+                                      (kc, vc, jnp.arange(n_chunks)))
+    scale = 1.0 / jnp.sqrt(hd)
+    dq = (dq * scale).reshape(b, sq, hkv * g, hd).astype(qdt)
+    dk = jnp.moveaxis(dk_st, 0, 1).reshape(b, skv, hkv, hd).astype(k.dtype)
+    dv = jnp.moveaxis(dv_st, 0, 1).reshape(b, skv, hkv, hd).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_fwd, _flash_bwd)
+
+
+@dataclasses.dataclass
+class AttnParams:
+    """Just a namespace helper — attention params live in plain dicts."""
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              qkv_bias: bool = False):
+    ks = jax.random.split(key, 4)
+    import repro.models.common as cm
+    p = {
+        "wq": cm.dense_init(ks[0], d_model, n_heads * head_dim),
+        "wk": cm.dense_init(ks[1], d_model, n_kv * head_dim),
+        "wv": cm.dense_init(ks[2], d_model, n_kv * head_dim),
+        "wo": cm.dense_init(ks[3], n_heads * head_dim, d_model),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), jnp.float32)
+    return p
+
+
+def attn_qkv(p, x: jnp.ndarray, n_heads: int, n_kv: int, head_dim: int
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    b, s, _ = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return (q.reshape(b, s, n_heads, head_dim),
+            k.reshape(b, s, n_kv, head_dim),
+            v.reshape(b, s, n_kv, head_dim))
+
+
+def attn_out(p, o: jnp.ndarray) -> jnp.ndarray:
+    b, s, h, hd = o.shape
+    return o.reshape(b, s, h * hd) @ p["wo"].astype(o.dtype)

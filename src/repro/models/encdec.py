@@ -1,0 +1,208 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the assignment, the conv frontend is a STUB: ``input_specs()`` feeds
+precomputed frame embeddings (b, enc_seq, d_model) directly to the
+encoder.  Encoder: bidirectional self-attention + GELU MLP, LayerNorm
+(with bias) as in Whisper.  Decoder: causal self-attn, cross-attn to the
+encoder states, MLP.  Sinusoidal absolute positions (no RoPE).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models.config import ArchConfig
+
+
+def _ln_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def _ln(x, p):
+    return cm.layernorm(x, p["scale"], p["bias"])
+
+
+def _mlp_init(key, d, f):
+    k1, k2 = jax.random.split(key)
+    return {"w1": cm.dense_init(k1, d, f), "w2": cm.dense_init(k2, f, d)}
+
+
+def _mlp(p, x):
+    return jax.nn.gelu(x @ p["w1"].astype(x.dtype)) @ p["w2"].astype(x.dtype)
+
+
+def enc_layer_init(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": _ln_init(cfg.d_model),
+            "attn": attn.attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                   cfg.head_dim),
+            "ln2": _ln_init(cfg.d_model),
+            "mlp": _mlp_init(k2, cfg.d_model, cfg.d_ff)}
+
+
+def dec_layer_init(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": _ln_init(cfg.d_model),
+            "self_attn": attn.attn_init(k1, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv, cfg.head_dim),
+            "ln2": _ln_init(cfg.d_model),
+            "cross_attn": attn.attn_init(k2, cfg.d_model, cfg.n_heads,
+                                         cfg.n_heads, cfg.head_dim),
+            "ln3": _ln_init(cfg.d_model),
+            "mlp": _mlp_init(k3, cfg.d_model, cfg.d_ff)}
+
+
+def init(key, cfg: ArchConfig):
+    ke, kd, kt, kh = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: enc_layer_init(k, cfg))(
+        jax.random.split(ke, cfg.enc_layers))
+    dec = jax.vmap(lambda k: dec_layer_init(k, cfg))(
+        jax.random.split(kd, cfg.n_layers))
+    return {"enc_layers": enc,
+            "enc_norm": _ln_init(cfg.d_model),
+            "tok_embed": {"table": cm.embed_init(kt, cfg.vocab, cfg.d_model)},
+            "dec_layers": dec,
+            "final_norm": _ln_init(cfg.d_model),
+            "lm_head": {"table": cm.embed_init(kh, cfg.vocab, cfg.d_model)}}
+
+
+def encode(cfg: ArchConfig, params, frames: jnp.ndarray,
+           remat: bool = False) -> jnp.ndarray:
+    """frames: (b, enc_seq, d_model) stub embeddings."""
+    b, s, d = frames.shape
+    x = frames.astype(cfg.dtype) + cm.sinusoidal_positions(s, d).astype(cfg.dtype)
+    x = cm.shard_act(x, None, None)
+
+    def body(h, lp):
+        a = _ln(h, lp["ln1"])
+        q, k, v = attn.attn_qkv(lp["attn"], a, cfg.n_heads, cfg.n_kv,
+                                cfg.head_dim)
+        q = cm.shard_act(q, None, "model", None)
+        k = cm.shard_act(k, None, "model", None)
+        v = cm.shard_act(v, None, "model", None)
+        h = h + attn.attn_out(lp["attn"],
+                              attn.flash_attention(q, k, v, False, cfg.attn_chunk))
+        h = h + _mlp(lp["mlp"], _ln(h, lp["ln2"]))
+        return cm.shard_act(h, None, None), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return _ln(x, params["enc_norm"])
+
+
+def _dec_layer_full(cfg, lp, x, enc_out, positions, return_cache=False):
+    """Training / prefill decoder layer (full sequence)."""
+    h = _ln(x, lp["ln1"])
+    q, k, v = attn.attn_qkv(lp["self_attn"], h, cfg.n_heads, cfg.n_kv,
+                            cfg.head_dim)
+    x = x + attn.attn_out(lp["self_attn"],
+                          attn.flash_attention(q, k, v, True, cfg.attn_chunk))
+    h = _ln(x, lp["ln2"])
+    cq, ck, cv = attn.attn_qkv(lp["cross_attn"], h, cfg.n_heads, cfg.n_heads,
+                               cfg.head_dim)
+    # cross K/V come from the encoder output instead
+    b, se, _ = enc_out.shape
+    ck = (enc_out @ lp["cross_attn"]["wk"].astype(enc_out.dtype)).reshape(
+        b, se, cfg.n_heads, cfg.head_dim)
+    cv = (enc_out @ lp["cross_attn"]["wv"].astype(enc_out.dtype)).reshape(
+        b, se, cfg.n_heads, cfg.head_dim)
+    x = x + attn.attn_out(lp["cross_attn"],
+                          attn.flash_attention(cq, ck, cv, False, cfg.attn_chunk))
+    x = x + _mlp(lp["mlp"], _ln(x, lp["ln3"]))
+    if return_cache:
+        return x, (k, v, ck, cv)
+    return x
+
+
+def train_loss(cfg: ArchConfig, params, batch, *, remat: bool = True,
+               sampled_softmax: bool = False):
+    """batch: frames (b, enc_seq, d), tokens (b,s), labels (b,s)."""
+    frames, tokens, labels = batch["frames"], batch["tokens"], batch["labels"]
+    enc_out = encode(cfg, params, frames, remat=remat)
+    b, s = tokens.shape
+    x = params["tok_embed"]["table"].astype(cfg.dtype)[tokens]
+    x = x + cm.sinusoidal_positions(s, cfg.d_model).astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(h, lp):
+        return _dec_layer_full(cfg, lp, h, enc_out, positions), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = _ln(x, params["final_norm"])
+    if sampled_softmax:
+        return cm.sampled_softmax_xent(x.reshape(b * s, -1),
+                                       params["lm_head"]["table"],
+                                       labels.reshape(-1), batch["neg_ids"])
+    return cm.chunked_softmax_xent(
+        x, params["lm_head"]["table"], labels, cfg.loss_chunk)
+
+
+def prefill(cfg: ArchConfig, params, frames: jnp.ndarray,
+            tokens: jnp.ndarray, max_seq=None):
+    """Returns (last logits, cache).  cache: self-KV + cross-KV per layer."""
+    enc_out = encode(cfg, params, frames)
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    x = params["tok_embed"]["table"].astype(cfg.dtype)[tokens]
+    x = x + cm.sinusoidal_positions(s, cfg.d_model).astype(cfg.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(h, lp):
+        h, (k, v, ck, cv) = _dec_layer_full(cfg, lp, h, enc_out, positions,
+                                            return_cache=True)
+        return h, (k.astype(cfg.dtype), v.astype(cfg.dtype),
+                   ck.astype(cfg.dtype), cv.astype(cfg.dtype))
+
+    x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["dec_layers"])
+    if max_seq > s:
+        pad = [(0, 0), (0, 0), (0, max_seq - s), (0, 0), (0, 0)]
+        ks = jnp.pad(ks, pad)
+        vs = jnp.pad(vs, pad)
+    x = _ln(x[:, -1:], params["final_norm"])
+    logits = (x @ params["lm_head"]["table"].astype(cfg.dtype).T)[:, 0]
+    return logits, {"k": ks, "v": vs, "ck": cks, "cv": cvs,
+                    "len": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(cfg: ArchConfig, params, cache, token: jnp.ndarray):
+    b = token.shape[0]
+    pos = cache["len"]
+    x = params["tok_embed"]["table"].astype(cfg.dtype)[token[:, None]]
+    pe = cm.sinusoidal_positions(8192, cfg.d_model)
+    x = x + jax.lax.dynamic_slice_in_dim(pe, pos, 1, 0)[None].astype(cfg.dtype)
+
+    def body(h, xs):
+        lp, ck_s, cv_s, ckx, cvx = xs
+        a = _ln(h, lp["ln1"])
+        q, k, v = attn.attn_qkv(lp["self_attn"], a, cfg.n_heads, cfg.n_kv,
+                                cfg.head_dim)
+        ck_s = jax.lax.dynamic_update_slice(ck_s, k.astype(ck_s.dtype),
+                                            (0, pos, 0, 0))
+        cv_s = jax.lax.dynamic_update_slice(cv_s, v.astype(cv_s.dtype),
+                                            (0, pos, 0, 0))
+        h = h + attn.attn_out(lp["self_attn"],
+                              attn.decode_attention(q, ck_s, cv_s, pos + 1))
+        a = _ln(h, lp["ln2"])
+        cq, _, _ = attn.attn_qkv(lp["cross_attn"], a, cfg.n_heads,
+                                 cfg.n_heads, cfg.head_dim)
+        h = h + attn.attn_out(
+            lp["cross_attn"],
+            attn.decode_attention(cq, ckx, cvx, ckx.shape[1]))
+        h = h + _mlp(lp["mlp"], _ln(h, lp["ln3"]))
+        return h, (ck_s, cv_s)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["ck"], cache["cv"]))
+    x = _ln(x, params["final_norm"])
+    logits = (x @ params["lm_head"]["table"].astype(cfg.dtype).T)[:, 0]
+    return logits, {"k": ks, "v": vs, "ck": cache["ck"], "cv": cache["cv"],
+                    "len": pos + 1}

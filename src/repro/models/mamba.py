@@ -1,0 +1,357 @@
+"""Mamba2 (SSD, scalar-per-head decay) blocks + the Zamba2 hybrid stack.
+
+SSD recurrence per head (state h ∈ R^{p×n}, p = head dim, n = ssm_state):
+
+    h_t = exp(a·dt_t)·h_{t-1} + dt_t·x_t ⊗ B_t
+    y_t = h_t·C_t + D·x_t
+
+Chunked form: per-head scalar decays make the pairwise decay matrix
+(b,h,L,L) cheap; exponents are cumulative sums of negative values — no
+overflow.  ``ssd_scan`` is the sequential oracle for tests.
+
+Zamba2: a stack of Mamba2 blocks with ONE weight-shared attention+MLP
+block applied every ``cfg.attn_every`` layers (the paper's shared-block
+trick).  The shared block is invoked inside the layer scan via
+``lax.cond``; its KV cache is per *call site* (weights shared, cache not).
+
+Causal conv (kernel 4) is materialized as a sum of shifted slices
+(TPU-friendly; no real conv needed at kernel=4).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import common as cm
+from repro.models.config import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_scan(x, dt, la, B, C, h0):
+    """Oracle.  x (b,s,h,p); dt,la (b,s,h); B,C (b,s,n); h0 (b,h,p,n)."""
+
+    def step(h, xs):
+        x_t, dt_t, la_t, B_t, C_t = xs
+        x_t = x_t.astype(jnp.float32)
+        B_t = B_t.astype(jnp.float32)
+        C_t = C_t.astype(jnp.float32)
+        h = jnp.exp(la_t)[..., None, None] * h + \
+            (dt_t[..., None] * x_t)[..., None] * B_t[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (x, dt, la, B, C))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h  # (b,s,h,p)
+
+
+def ssd_chunked(x, dt, la, B, C, h0, chunk: int):
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    if s % chunk != 0:
+        return ssd_scan(x, dt, la, B, C, h0)
+    L, nc = chunk, s // chunk
+    xc = x.reshape(b, nc, L, h, p)
+    dtc = dt.reshape(b, nc, L, h)
+    lac = la.reshape(b, nc, L, h)
+    Bc = B.reshape(b, nc, L, n)
+    Cc = C.reshape(b, nc, L, n)
+
+    def per_chunk(hs, xs):
+        xb, dtb, lab, Bb, Cb = xs                     # (b,L,h,p) (b,L,h) (b,L,n)
+        # bf16 tensor math, f32 accumulation: keeping xb/Bb/Cb in their
+        # input dtype keeps the BACKWARD cotangents bf16 too, halving the
+        # (b,s,d)-sized boundary collectives (§Perf zamba iteration 5).
+        # Decay exponents (small (b,L,h) tensors) stay f32.
+        laI = jnp.cumsum(lab.astype(jnp.float32), axis=1)   # (b,L,h)
+        # intra-chunk: M[b,h,i,j] = exp(laI_i − laI_j)·(C_i·B_j)·dt_j, j ≤ i
+        dec = laI[:, :, None, :] - laI[:, None, :, :]   # (b,i,j,h)
+        cb = jnp.einsum("bin,bjn->bij", Cb, Bb,
+                        preferred_element_type=jnp.float32)  # (b,i,j)
+        M = jnp.exp(dec) * (cb[..., None] * dtb[:, None])  # (b,i,j,h) f32
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        M = jnp.where(mask[None, :, :, None], M, 0.0)
+        y = jnp.einsum("bijh,bjhp->bihp", M.astype(xb.dtype), xb,
+                       preferred_element_type=jnp.float32)
+        # inter-chunk: y_i += exp(laI_i)·C_i·h
+        y = y + jnp.exp(laI)[..., None] * jnp.einsum(
+            "bhpn,bin->bihp", hs, Cb.astype(jnp.float32))
+        # state update
+        la_tot = laI[:, -1]                           # (b,h)
+        w = jnp.exp(la_tot[:, None] - laI) * dtb      # (b,L,h) f32
+        hs = jnp.exp(la_tot)[..., None, None] * hs + \
+            jnp.einsum("bihp,bin->bhpn",
+                       (w.astype(xb.dtype)[..., None] * xb), Bb,
+                       preferred_element_type=jnp.float32)
+        return hs, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xc, dtc, lac, Bc, Cc))
+    hs, ys = jax.lax.scan(per_chunk, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p), hs
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg: ArchConfig):
+    """Projections are kept *separate* (z / x / BC / dt) rather than one
+    fused in_proj so each is cleanly TP-shardable: z,x,dt column-shard over
+    'model'; BC (tiny, shared across heads) replicates.  The depthwise
+    causal conv is likewise split per stream — mathematically identical to
+    conv over the concatenation (DESIGN.md §3)."""
+    d, di, n, hds = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": jnp.ones((d,), jnp.float32),
+        "z_proj": cm.dense_init(ks[0], d, di),
+        "x_proj": cm.dense_init(ks[1], d, di),
+        "bc_proj": cm.dense_init(ks[2], d, 2 * n),
+        "dt_proj": cm.dense_init(ks[3], d, hds),
+        "conv_w_x": (jax.random.normal(ks[4], (cfg.conv_kernel, di),
+                                       jnp.float32) * 0.2),
+        "conv_b_x": jnp.zeros((di,), jnp.float32),
+        "conv_w_bc": (jax.random.normal(ks[5], (cfg.conv_kernel, 2 * n),
+                                        jnp.float32) * 0.2),
+        "conv_b_bc": jnp.zeros((2 * n,), jnp.float32),
+        "A_log": jnp.zeros((hds,), jnp.float32),
+        "dt_bias": jnp.zeros((hds,), jnp.float32),
+        "D": jnp.ones((hds,), jnp.float32),
+        "gn": jnp.ones((di,), jnp.float32),
+        "out_proj": cm.dense_init(ks[6], di, d),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 prev: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv as a sum of shifts.
+    x (b,s,ch); w (K,ch); prev (b,K-1,ch) left context.  Returns (y, new_prev)."""
+    K = w.shape[0]
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)   # (b, s+K-1, ch)
+    s = x.shape[1]
+    y = sum(xp[:, i:i + s] * w[K - 1 - i].astype(x.dtype) for i in range(K))
+    y = y + b.astype(x.dtype)
+    return jax.nn.silu(y), xp[:, -(K - 1):].astype(jnp.float32)
+
+
+def mamba_apply(cfg: ArchConfig, p, x: jnp.ndarray, state, mode: str):
+    """x (b,s,d); state dict(conv_x (b,K-1,di), conv_bc (b,K-1,2n),
+    h (b,heads,p,n))."""
+    b, s, d = x.shape
+    di, n, hds, hp = (cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads,
+                      cfg.ssm_head_dim)
+    dt_ = x.dtype
+    # pin the sequence all-gather at the POST-norm bf16 tensor: without
+    # the constraint GSPMD gathers the f32 rmsnorm intermediate (2x the
+    # bytes) — §Perf zamba iteration 4
+    h_in = cm.shard_act(cm.rmsnorm(x, p["ln"]), None, None)
+    z = h_in @ p["z_proj"].astype(dt_)
+    xr = h_in @ p["x_proj"].astype(dt_)
+    bc = h_in @ p["bc_proj"].astype(dt_)
+    dt_raw = h_in @ p["dt_proj"].astype(dt_)
+
+    xr, conv_x = _causal_conv(xr, p["conv_w_x"], p["conv_b_x"],
+                              state["conv_x"])
+    bc, conv_bc = _causal_conv(bc, p["conv_w_bc"], p["conv_b_bc"],
+                               state["conv_bc"])
+    # TP constraints: SSM heads shard over 'model' (80 heads / 16 = 5);
+    # without them GSPMD replicates the (b,L,L,h) SSD chunk tensors at
+    # full head count on every device (§Perf zamba iteration 2).
+    xs = cm.shard_act(xr.reshape(b, s, hds, hp), None, "model", None)
+    B = bc[..., :n]
+    C = bc[..., n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (b,s,h)
+    dt = cm.shard_act(dt, None, "model")
+    la = -jnp.exp(p["A_log"])[None, None] * dt                         # ≤ 0
+
+    if mode == "chunked":
+        y, h_state = ssd_chunked(xs, dt, la, B, C, state["h"], cfg.rwkv_chunk)
+    else:
+        y, h_state = ssd_scan(xs, dt, la, B, C, state["h"])
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = cm.shard_act(y, None, "model", None).reshape(b, s, di)
+    y = cm.rmsnorm(y, p["gn"]) * jax.nn.silu(z.astype(jnp.float32))
+    # constrain the row-parallel matmul OUTPUT to seq-sharded BEFORE the
+    # residual add: GSPMD then emits reduce-scatter instead of a full
+    # all-reduce (half the link bytes — §Perf zamba iteration 3)
+    out = cm.shard_act(y.astype(dt_) @ p["out_proj"].astype(dt_),
+                       "model", None)
+    return x + out, {"conv_x": conv_x, "conv_bc": conv_bc, "h": h_state}
+
+
+def mamba_zero_state(cfg: ArchConfig, batch: int, layers: int):
+    return {
+        "conv_x": jnp.zeros((layers, batch, cfg.conv_kernel - 1,
+                             cfg.ssm_d_inner), jnp.float32),
+        "conv_bc": jnp.zeros((layers, batch, cfg.conv_kernel - 1,
+                              2 * cfg.ssm_state), jnp.float32),
+        "h": jnp.zeros((layers, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                        cfg.ssm_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid stack
+# ---------------------------------------------------------------------------
+
+def _shared_cfg(cfg: ArchConfig) -> ArchConfig:
+    import dataclasses
+    return dataclasses.replace(
+        cfg, family="gqa", head_dim=cfg.d_model // cfg.n_heads)
+
+
+def init(key, cfg: ArchConfig):
+    from repro.models import transformer as tf
+    ke, kl, ks, kh = jax.random.split(key, 4)
+    layers = jax.vmap(lambda k: mamba_init(k, cfg))(
+        jax.random.split(kl, cfg.n_layers))
+    shared = tf.layer_init(ks, _shared_cfg(cfg))
+    return {"tok_embed": {"table": cm.embed_init(ke, cfg.vocab, cfg.d_model)},
+            "layers": layers,
+            "shared_attn": shared,
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "lm_head": {"table": cm.embed_init(kh, cfg.vocab, cfg.d_model)}}
+
+
+def n_attn_sites(cfg: ArchConfig) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0, "attn_every must divide layers"
+    return cfg.n_layers // cfg.attn_every
+
+
+def _group_tree(cfg: ArchConfig, tree):
+    """(n_layers, ...) stacked leaves -> (sites, attn_every, ...)."""
+    g = n_attn_sites(cfg)
+    return jax.tree_util.tree_map(
+        lambda l: l.reshape((g, cfg.attn_every) + l.shape[1:]), tree)
+
+
+def _run_train(cfg: ArchConfig, params, x: jnp.ndarray, remat: bool = True):
+    """GROUP scan: one outer step = [shared attention block + attn_every
+    mamba layers].  Replaces the per-layer ``lax.cond`` dispatch, which
+    scheduled the (large) attention branch into every layer iteration and
+    defeated cost attribution; grouping runs it exactly
+    ``n_layers/attn_every`` times (EXPERIMENTS.md §Perf iteration 1)."""
+    from repro.models import transformer as tf
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    scfg = _shared_cfg(cfg)
+    mstate = _group_tree(cfg, mamba_zero_state(cfg, b, cfg.n_layers))
+    glayers = _group_tree(cfg, params["layers"])
+
+    def inner(h, xs):
+        lp, st = xs
+        h, st = mamba_apply(cfg, lp, h, st, "chunked")
+        return h, None
+
+    if remat:
+        # nested remat: without it, the whole group's 6 mamba layers keep
+        # their full residuals live during the group backward (+55 GiB
+        # peak measured — §Perf zamba iteration 2)
+        inner = jax.checkpoint(inner, prevent_cse=False)
+
+    def body(h, xs):
+        glp, gst = xs
+        h, _ = tf.layer_apply_train(scfg, params["shared_attn"], h,
+                                    positions)
+        h, _ = jax.lax.scan(inner, h, (glp, gst))
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, (glayers, mstate))
+    return x
+
+
+def train_loss(cfg: ArchConfig, params, batch, *, remat: bool = True,
+               sampled_softmax: bool = False):
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    x = params["tok_embed"]["table"].astype(cfg.dtype)[tokens]
+    x = _run_train(cfg, params, x, remat=remat)
+    x = cm.rmsnorm(x, params["final_norm"])
+    if sampled_softmax:
+        return cm.sampled_softmax_xent(x.reshape(b * s, -1),
+                                       params["lm_head"]["table"],
+                                       labels.reshape(-1), batch["neg_ids"])
+    return cm.chunked_softmax_xent(
+        x, params["lm_head"]["table"], labels, cfg.loss_chunk)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    scfg = _shared_cfg(cfg)
+    sites = n_attn_sites(cfg)
+    return {
+        "mamba": mamba_zero_state(cfg, batch, cfg.n_layers),
+        "attn_k": jnp.zeros((sites, batch, max_seq, scfg.n_kv, scfg.head_dim),
+                            cfg.dtype),
+        "attn_v": jnp.zeros((sites, batch, max_seq, scfg.n_kv, scfg.head_dim),
+                            cfg.dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _stack_step(cfg: ArchConfig, params, x, cache, mode: str,
+                positions, pos_scalar):
+    """Shared prefill/decode loop — group scan (see _run_train)."""
+    from repro.models import transformer as tf
+    scfg = _shared_cfg(cfg)
+    glayers = _group_tree(cfg, params["layers"])
+    gstate = _group_tree(cfg, cache["mamba"])
+
+    def inner(h, xs):
+        lp, mst = xs
+        h, mst = mamba_apply(cfg, lp, h, mst,
+                             "chunked" if mode == "prefill" else "scan")
+        return h, mst
+
+    def body(h, xs):
+        glp, gst, ck, cv = xs
+        if mode == "prefill":
+            h, (k, v) = tf.layer_prefill(scfg, params["shared_attn"], h,
+                                         positions)
+            ck = jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (0, 0, 0, 0))
+        else:
+            h, ck, cv = tf.layer_decode(scfg, params["shared_attn"], h,
+                                        ck, cv, pos_scalar)
+        h, gst = jax.lax.scan(inner, h, (glp, gst))
+        return h, (gst, ck, cv)
+
+    x, (msts, ak, av) = jax.lax.scan(
+        body, x, (glayers, gstate, cache["attn_k"], cache["attn_v"]))
+    msts = jax.tree_util.tree_map(
+        lambda l: l.reshape((cfg.n_layers,) + l.shape[2:]), msts)
+    return x, {"mamba": msts, "attn_k": ak, "attn_v": av}
+
+
+def prefill(cfg: ArchConfig, params, tokens: jnp.ndarray, max_seq=None):
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    x = params["tok_embed"]["table"].astype(cfg.dtype)[tokens]
+    cache = init_cache(cfg, b, max_seq)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x, cache = _stack_step(cfg, params, x, cache, "prefill", positions, None)
+    cache["len"] = jnp.asarray(s, jnp.int32)
+    x = cm.rmsnorm(x[:, -1:], params["final_norm"])
+    logits = (x @ params["lm_head"]["table"].astype(cfg.dtype).T)[:, 0]
+    return logits, cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, token: jnp.ndarray):
+    b = token.shape[0]
+    x = params["tok_embed"]["table"].astype(cfg.dtype)[token[:, None]]
+    pos = cache["len"]
+    x, cache2 = _stack_step(cfg, params, x, cache, "decode", None, pos)
+    cache2["len"] = pos + 1
+    x = cm.rmsnorm(x, params["final_norm"])
+    logits = (x @ params["lm_head"]["table"].astype(cfg.dtype).T)[:, 0]
+    return logits, cache2

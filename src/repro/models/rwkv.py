@@ -1,0 +1,275 @@
+"""RWKV-6 ("Finch") — attention-free, data-dependent per-channel decay.
+
+Core recurrence per head (k-dim K, v-dim V, state S ∈ R^{K×V}):
+
+    wkv_t = (diag(u)·k_t)·v_tᵀ + S_t
+    out_t = r_tᵀ · wkv_t
+    S_{t+1} = diag(w_t)·S_t + k_t·v_tᵀ          w_t = exp(−exp(x·lora))
+
+Training/prefill use the GLA-style *chunked* form (chunk = cfg.rwkv_chunk):
+within a chunk, pairwise decays factor into
+``(r ⊙ exp(lwX)) @ (k ⊙ exp(−lwI))ᵀ`` where lwX/lwI are the exclusive /
+inclusive cumulative log-decays — all matmuls (MXU-friendly), no (L,L,K)
+tensor.  Log-decays are clipped to [−CLIP, −1e−6] so the e^{+lwI} factor
+stays in fp32 range for the chunk length (CLIP·chunk ≤ 64).  Decode is the
+exact recurrence (one step).  ``wkv_scan`` is the sequential oracle used
+by tests.
+
+Simplifications vs the released model (noted per DESIGN.md §8): static
+token-shift lerp (v5-style) except for the decay, which keeps the v6
+data-dependent LoRA; single-layernorm head groups.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.config import ArchConfig
+
+LOG_DECAY_CLIP = 4.0
+
+
+# ---------------------------------------------------------------------------
+# wkv core
+# ---------------------------------------------------------------------------
+
+def wkv_scan(r, k, v, logw, u, S0):
+    """Sequential oracle.  r,k,v,logw: (b, s, h, K|V); u: (h, K);
+    S0: (b, h, K, V).  Returns (out (b,s,h,V), S_final)."""
+
+    def step(S, xs):
+        r_t, k_t, v_t, lw_t = xs                      # (b,h,K),(b,h,K),(b,h,V),(b,h,K)
+        kv = k_t[..., :, None] * v_t[..., None, :]    # (b,h,K,V)
+        wkv = u[None, :, :, None] * kv + S
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, wkv)
+        S = jnp.exp(lw_t)[..., None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r, k, v, logw))
+    S, out = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(out, 0, 1), S
+
+
+def wkv_chunked(r, k, v, logw, u, S0, chunk: int):
+    """Chunked parallel form.  Shapes as in ``wkv_scan``."""
+    b, s, h, K = r.shape
+    V = v.shape[-1]
+    if s % chunk != 0:
+        return wkv_scan(r, k, v, logw, u, S0)
+    n = s // chunk
+    rc, kc, vc, lwc = (x.reshape(b, n, chunk, h, -1) for x in (r, k, v, logw))
+
+    def per_chunk(S, xs):
+        rb, kb, vb, lwb = xs                          # (b, L, h, *)
+        lwI = jnp.cumsum(lwb, axis=1)                 # inclusive (b,L,h,K)
+        lwX = lwI - lwb                               # exclusive
+        r_dec = rb * jnp.exp(lwX)
+        k_inv = kb * jnp.exp(-lwI)
+        # intra-chunk pairwise (strictly causal τ < i)
+        scores = jnp.einsum("bihk,bjhk->bhij", r_dec, k_inv)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        out = jnp.einsum("bhij,bjhv->bihv", scores, vb)
+        # current-token bonus
+        out = out + jnp.einsum("bihk,bihv->bihv",
+                               rb * u[None, None] * kb, vb)
+        # inter-chunk state contribution
+        out = out + jnp.einsum("bihk,bhkv->bihv", r_dec, S)
+        # state update
+        lw_tot = lwI[:, -1]                           # (b,h,K)
+        k_dec = kb * jnp.exp(lw_tot[:, None] - lwI)
+        S = jnp.exp(lw_tot)[..., None] * S + \
+            jnp.einsum("bjhk,bjhv->bhkv", k_dec, vb)
+        return S, out
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (rc, kc, vc, lwc))
+    S, out = jax.lax.scan(per_chunk, S0, xs)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, V)
+    return out, S
+
+
+def wkv_step(r, k, v, logw, u, S):
+    """One decode step.  r,k,v,logw (b,h,*); S (b,h,K,V)."""
+    kv = k[..., :, None] * v[..., None, :]
+    wkv = u[None, :, :, None] * kv + S
+    out = jnp.einsum("bhk,bhkv->bhv", r, wkv)
+    S = jnp.exp(logw)[..., None] * S + kv
+    return out, S
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg: ArchConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_dim
+    h = cfg.rwkv_heads
+    ks = jax.random.split(key, 12)
+    lora = max(32, d // 64)
+    return {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "tm": {
+            "mix_r": jnp.full((d,), 0.5, jnp.float32),
+            "mix_k": jnp.full((d,), 0.5, jnp.float32),
+            "mix_v": jnp.full((d,), 0.5, jnp.float32),
+            "mix_g": jnp.full((d,), 0.5, jnp.float32),
+            "mix_w": jnp.full((d,), 0.5, jnp.float32),
+            "wr": cm.dense_init(ks[0], d, d),
+            "wk": cm.dense_init(ks[1], d, d),
+            "wv": cm.dense_init(ks[2], d, d),
+            "wg": cm.dense_init(ks[3], d, d),
+            "wo": cm.dense_init(ks[4], d, d),
+            # v6 data-dependent decay LoRA: w = base + tanh(x A) B
+            "w_base": jnp.full((d,), -2.0, jnp.float32),
+            "w_A": cm.dense_init(ks[5], d, lora, scale=0.01),
+            "w_B": cm.dense_init(ks[6], lora, d, scale=0.01),
+            "u": (jax.random.normal(ks[7], (h, hd), jnp.float32) * 0.1),
+            "gn": jnp.ones((d,), jnp.float32),
+        },
+        "cm": {
+            "mix_k": jnp.full((d,), 0.5, jnp.float32),
+            "mix_r": jnp.full((d,), 0.5, jnp.float32),
+            "wk": cm.dense_init(ks[8], d, f),
+            "wv": cm.dense_init(ks[9], f, d),
+            "wr": cm.dense_init(ks[10], d, d),
+        },
+    }
+
+
+def _shift(x: jnp.ndarray, prev: jnp.ndarray) -> jnp.ndarray:
+    """Token shift: x_{t-1}; position 0 takes ``prev`` (carry or zeros)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def time_mix(cfg: ArchConfig, p, x: jnp.ndarray, x_prev: jnp.ndarray,
+             S0: jnp.ndarray, mode: str):
+    """x (b,s,d); x_prev (b,d) carry; S0 (b,h,K,V).  Returns (out, x_last, S)."""
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    dt = x.dtype
+    xs = _shift(x, x_prev)
+
+    def lerp(mix):
+        return x + mix.astype(dt) * (xs - x)
+
+    r = (lerp(p["mix_r"]) @ p["wr"].astype(dt)).reshape(b, s, h, hd)
+    k = (lerp(p["mix_k"]) @ p["wk"].astype(dt)).reshape(b, s, h, hd)
+    v = (lerp(p["mix_v"]) @ p["wv"].astype(dt)).reshape(b, s, h, hd)
+    g = lerp(p["mix_g"]) @ p["wg"].astype(dt)
+    xw = lerp(p["mix_w"]).astype(jnp.float32)
+    dd = jnp.tanh(xw @ p["w_A"]) @ p["w_B"]
+    logw = -jnp.exp(p["w_base"][None, None] + dd)       # (b,s,d) < 0
+    logw = jnp.clip(logw, -LOG_DECAY_CLIP, -1e-6).reshape(b, s, h, hd)
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    if mode == "chunked":
+        out, S = wkv_chunked(rf, kf, vf, logw, p["u"], S0, cfg.rwkv_chunk)
+    else:
+        out, S = wkv_scan(rf, kf, vf, logw, p["u"], S0)
+    out = out.reshape(b, s, d)
+    out = cm.rmsnorm(out, p["gn"])                      # head-group norm
+    out = (out * jax.nn.silu(g.astype(jnp.float32))).astype(dt)
+    return out @ p["wo"].astype(dt), x[:, -1], S
+
+
+def channel_mix(cfg: ArchConfig, p, x: jnp.ndarray, x_prev: jnp.ndarray):
+    dt = x.dtype
+    xs = _shift(x, x_prev)
+    xk = x + p["mix_k"].astype(dt) * (xs - x)
+    xr = x + p["mix_r"].astype(dt) * (xs - x)
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    return jax.nn.sigmoid(xr @ p["wr"].astype(dt)) * (kk @ p["wv"].astype(dt)), x[:, -1]
+
+
+def layer_apply(cfg: ArchConfig, p, x: jnp.ndarray, state, mode: str):
+    """state: dict(tm_x (b,d), cm_x (b,d), S (b,h,K,V)). Returns (x', state')."""
+    h = cm.rmsnorm(x, p["ln1"])
+    o, tm_x, S = time_mix(cfg, p["tm"], h, state["tm_x"].astype(h.dtype),
+                          state["S"], mode)
+    x = x + o
+    h = cm.rmsnorm(x, p["ln2"])
+    o, cm_x = channel_mix(cfg, p["cm"], h, state["cm_x"].astype(h.dtype))
+    x = x + o
+    return x, {"tm_x": tm_x.astype(jnp.float32), "cm_x": cm_x.astype(jnp.float32),
+               "S": S}
+
+
+def zero_state(cfg: ArchConfig, batch: int):
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "tm_x": jnp.zeros((cfg.n_layers, batch, cfg.d_model), jnp.float32),
+        "cm_x": jnp.zeros((cfg.n_layers, batch, cfg.d_model), jnp.float32),
+        "S": jnp.zeros((cfg.n_layers, batch, h, hd, hd), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ArchConfig):
+    ke, kl, kh = jax.random.split(key, 3)
+    layers = jax.vmap(lambda k: layer_init(k, cfg))(jax.random.split(kl, cfg.n_layers))
+    return {"tok_embed": {"table": cm.embed_init(ke, cfg.vocab, cfg.d_model)},
+            "layers": layers,
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+            "lm_head": {"table": cm.embed_init(kh, cfg.vocab, cfg.d_model)}}
+
+
+def _run_stack(cfg, params, x, state, mode, remat=False):
+    def body(carry, xs):
+        h = carry
+        lp, st = xs
+        h, st = layer_apply(cfg, lp, h, st, mode)
+        return h, st
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, states = jax.lax.scan(body, x, (params["layers"], state))
+    return x, states
+
+
+def train_loss(cfg: ArchConfig, params, batch, *, remat: bool = True,
+               sampled_softmax: bool = False):
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    x = params["tok_embed"]["table"].astype(cfg.dtype)[tokens]
+    state = zero_state(cfg, b)
+    x, _ = _run_stack(cfg, params, x, state, "chunked", remat=remat)
+    x = cm.rmsnorm(x, params["final_norm"])
+    if sampled_softmax:
+        return cm.sampled_softmax_xent(x.reshape(b * s, -1),
+                                       params["lm_head"]["table"],
+                                       labels.reshape(-1), batch["neg_ids"])
+    return cm.chunked_softmax_xent(
+        x, params["lm_head"]["table"], labels, cfg.loss_chunk)
+
+
+def prefill(cfg: ArchConfig, params, tokens: jnp.ndarray, max_seq=None):
+    b, s = tokens.shape
+    x = params["tok_embed"]["table"].astype(cfg.dtype)[tokens]
+    state = zero_state(cfg, b)
+    x, state = _run_stack(cfg, params, x, state, "chunked")
+    x = cm.rmsnorm(x[:, -1:], params["final_norm"])
+    logits = (x @ params["lm_head"]["table"].astype(cfg.dtype).T)[:, 0]
+    return logits, state
+
+
+def decode_step(cfg: ArchConfig, params, state, token: jnp.ndarray):
+    b = token.shape[0]
+    x = params["tok_embed"]["table"].astype(cfg.dtype)[token[:, None]]
+
+    def body(h, xs):
+        lp, st = xs
+        h, st = layer_apply(cfg, lp, h, st, "scan")
+        return h, st
+
+    x, state = jax.lax.scan(body, x, (params["layers"], state))
+    x = cm.rmsnorm(x, params["final_norm"])
+    logits = (x @ params["lm_head"]["table"].astype(cfg.dtype).T)[:, 0]
+    return logits, state

@@ -1,0 +1,70 @@
+"""InternVL2-style VLM: stubbed ViT frontend + InternLM2 text backbone.
+
+Per the assignment the vision tower is a STUB — ``input_specs()`` provides
+precomputed patch embeddings (b, n_patches, d_model), already projected to
+the language model width.  The backbone is the same GQA decoder as
+internlm2; the multimodal part is prefix-concatenation ([vision; text])
+with loss computed on text positions only.  Decode reuses the transformer
+KV-cache path unchanged (vision lives in the prefix cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import transformer as tf
+from repro.models.config import ArchConfig
+
+
+def init(key, cfg: ArchConfig):
+    return tf.init(key, cfg)
+
+
+def train_loss(cfg: ArchConfig, params, batch, *, remat: bool = True,
+               sampled_softmax: bool = False):
+    """batch: patches (b, P, d_model), tokens (b, s), labels (b, s)."""
+    patches, tokens, labels = batch["patches"], batch["tokens"], batch["labels"]
+    b, P, _ = patches.shape
+    s = tokens.shape[1]
+    x_txt = tf.embed(cfg, params, tokens)
+    x = jnp.concatenate([patches.astype(cfg.dtype), x_txt], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(P + s), (b, P + s))
+    x, aux = tf.backbone_train(cfg, params, x, positions, remat=remat)
+    x = cm.rmsnorm(x[:, P:], params["final_norm"])   # text positions only
+    if sampled_softmax:
+        loss = cm.sampled_softmax_xent(x.reshape(b * s, -1),
+                                       params["lm_head"]["table"],
+                                       labels.reshape(-1), batch["neg_ids"])
+    else:
+        loss = cm.chunked_softmax_xent(
+            x, params["lm_head"]["table"], labels, cfg.loss_chunk)
+    return loss + 0.01 * aux
+
+
+def prefill(cfg: ArchConfig, params, patches: jnp.ndarray,
+            tokens: jnp.ndarray, max_seq=None):
+    """Prefix = [vision; text]; returns (last logits, transformer cache)."""
+    b, P, _ = patches.shape
+    s = tokens.shape[1]
+    total = P + s
+    max_seq = max_seq or total
+    x = jnp.concatenate([patches.astype(cfg.dtype),
+                         tf.embed(cfg, params, tokens)], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(total), (b, total))
+
+    def body(h, lp):
+        h, (k, v) = tf.layer_prefill(cfg, lp, h, positions)
+        return h, (k.astype(cfg.dtype), v.astype(cfg.dtype))
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    if max_seq > total:
+        pad = [(0, 0), (0, 0), (0, max_seq - total), (0, 0), (0, 0)]
+        ks = jnp.pad(ks, pad)
+        vs = jnp.pad(vs, pad)
+    logits = tf.logits_fn(cfg, params, x[:, -1:])[:, 0]
+    return logits, {"k": ks, "v": vs, "len": jnp.asarray(total, jnp.int32)}
+
+
+def decode_step(cfg: ArchConfig, params, cache, token: jnp.ndarray):
+    return tf.decode_step(cfg, params, cache, token)

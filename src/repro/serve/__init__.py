@@ -1,0 +1,2 @@
+"""Serving layer: prefill/decode step factories + cache layout."""
+from repro.serve.steps import ServeStep, cache_factory, make_serve_step  # noqa: F401

@@ -1,0 +1,162 @@
+"""Serving-step factory: prefill + decode per architecture family.
+
+``decode_32k`` / ``long_500k`` cells lower ``decode_fn`` (one new token
+against a ``seq_len`` cache), NOT ``train_step``.  Cache layout rules:
+
+  * attention KV caches shard batch over the DP axes and the *sequence*
+    axis over 'model' (flash-decoding: the per-shard partial max/sum of
+    decode attention become cross-shard collectives);
+  * recurrent SSM/RWKV state has no sequence axis — batch over DP, heads
+    over 'model' (matches the TP sharding of the mixer weights).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models.config import ArchConfig
+
+
+def _family(cfg: ArchConfig):
+    from repro.models import encdec, mamba, rwkv, transformer, vlm
+    return {
+        "gqa": transformer, "moe": transformer,
+        "rwkv6": rwkv, "hybrid": mamba,
+        "encdec": encdec, "vlm": vlm,
+    }[cfg.family]
+
+
+def cache_factory(cfg: ArchConfig) -> Callable[..., Any]:
+    """(batch, max_seq) -> zeroed cache pytree for this family."""
+    mod = _family(cfg)
+    if cfg.family in ("gqa", "moe", "vlm"):
+        from repro.models import transformer
+        return lambda batch, max_seq: transformer.init_cache(cfg, batch,
+                                                             max_seq)
+    if cfg.family == "hybrid":
+        return lambda batch, max_seq: mod.init_cache(cfg, batch, max_seq)
+    if cfg.family == "rwkv6":
+        def make(batch, max_seq):
+            st = mod.zero_state(cfg, batch)
+            st["len"] = jnp.zeros((), jnp.int32)
+            return st
+        return make
+    if cfg.family == "encdec":
+        def make(batch, max_seq):
+            L, kv, hd = cfg.n_layers, cfg.n_kv, cfg.head_dim
+            return {
+                "k": jnp.zeros((L, batch, max_seq, kv, hd), cfg.dtype),
+                "v": jnp.zeros((L, batch, max_seq, kv, hd), cfg.dtype),
+                "ck": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_heads, hd),
+                                cfg.dtype),
+                "cv": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_heads, hd),
+                                cfg.dtype),
+                "len": jnp.zeros((), jnp.int32),
+            }
+        return make
+    raise ValueError(cfg.family)
+
+
+@dataclasses.dataclass
+class ServeStep:
+    cfg: ArchConfig
+    prefill_fn: Callable      # (params, batch) -> (logits, cache)
+    decode_fn: Callable       # (params, cache, token) -> (logits, cache)
+    max_seq: int
+    batch: int
+
+    def cache_shape(self):
+        factory = cache_factory(self.cfg)
+        return jax.eval_shape(
+            lambda: factory(batch=self.batch, max_seq=self.max_seq))
+
+    def cache_specs(self, mesh: Mesh):
+        """Heuristic spec per cache leaf: the first batch-sized dim among
+        the leading dims → DP axes; then exactly ONE 'model' dim — prefer
+        a sequence-length dim (KV-cache sequence parallelism), else a
+        head-count dim (recurrent state TP, matching the mixer weights)."""
+        cfg = self.cfg
+        model = dict(zip(mesh.axis_names,
+                         mesh.devices.shape)).get("model", 1)
+        dp = shd.dp_axes(mesh, self.batch)
+        head_sizes = set()
+        if cfg.family == "rwkv6":
+            head_sizes.add(cfg.rwkv_heads)
+        if cfg.family == "hybrid":
+            head_sizes.add(cfg.ssm_heads)
+
+        def leaf(x):
+            axes: list = [None] * x.ndim
+            batch_i = next((i for i, dim in enumerate(x.shape[:3])
+                            if dim == self.batch and dp), None)
+            if batch_i is not None:
+                axes[batch_i] = dp if len(dp) > 1 else dp[0]
+            # one 'model' dim: sequence first, then heads
+            cand = [i for i, dim in enumerate(x.shape)
+                    if i != batch_i and dim in (self.max_seq, cfg.enc_seq)
+                    and dim % model == 0 and dim > 8]
+            if not cand:
+                cand = [i for i, dim in enumerate(x.shape)
+                        if i != batch_i and dim in head_sizes
+                        and dim % model == 0]
+            if cand:
+                axes[cand[0]] = "model"
+            while axes and axes[-1] is None:
+                axes.pop()
+            return P(*axes)
+
+        spec = jax.tree_util.tree_map(leaf, self.cache_shape())
+        return shd.named(mesh, spec)
+
+    def params_shape(self):
+        mod = _family(self.cfg)
+        return jax.eval_shape(lambda k: mod.init(k, self.cfg),
+                              jax.random.PRNGKey(0))
+
+    def param_shardings(self, mesh: Mesh):
+        ps = shd.param_specs(self.params_shape(), mesh, fsdp=self.cfg.fsdp,
+                             expert_sharding=self.cfg.expert_sharding)
+        return shd.named(mesh, ps)
+
+
+def make_serve_step(cfg: ArchConfig, *, batch: int, max_seq: int) -> ServeStep:
+    mod = _family(cfg)
+
+    if cfg.family in ("gqa", "moe"):
+        def prefill_fn(params, batch_in):
+            return mod.prefill(cfg, params, batch_in["tokens"], max_seq)
+    elif cfg.family == "vlm":
+        def prefill_fn(params, batch_in):
+            return mod.prefill(cfg, params, batch_in["patches"],
+                               batch_in["tokens"], max_seq)
+    elif cfg.family == "encdec":
+        def prefill_fn(params, batch_in):
+            return mod.prefill(cfg, params, batch_in["frames"],
+                               batch_in["tokens"], max_seq)
+    elif cfg.family == "rwkv6":
+        def prefill_fn(params, batch_in):
+            logits, state = mod.prefill(cfg, params, batch_in["tokens"],
+                                        max_seq)
+            state["len"] = jnp.asarray(batch_in["tokens"].shape[1], jnp.int32)
+            return logits, state
+    else:  # hybrid
+        def prefill_fn(params, batch_in):
+            return mod.prefill(cfg, params, batch_in["tokens"], max_seq)
+
+    def decode_fn(params, cache, token):
+        return mod.decode_step(cfg, params, cache, token)
+
+    if cfg.family == "rwkv6":
+        def decode_fn(params, cache, token):  # noqa: F811
+            state = {k: v for k, v in cache.items() if k != "len"}
+            logits, state = mod.decode_step(cfg, params, state, token)
+            state["len"] = cache["len"] + 1
+            return logits, state
+
+    return ServeStep(cfg=cfg, prefill_fn=prefill_fn, decode_fn=decode_fn,
+                     max_seq=max_seq, batch=batch)

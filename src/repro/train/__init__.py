@@ -1,0 +1,3 @@
+"""Training layer: step factory, trainer loop, data-parallel sparse paths."""
+from repro.train.steps import TrainStep, build_optimizer, make_train_step  # noqa: F401
+from repro.train.trainer import Trainer, TrainerConfig, TrainState  # noqa: F401

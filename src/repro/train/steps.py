@@ -1,0 +1,141 @@
+"""Train-step factory: family dispatch + optimizer + sharding in one jit.
+
+``make_train_step(cfg, ...)`` returns ``(init_fn, step_fn)``:
+
+    params    = init_fn(rng)                       # or eval_shape'd
+    step_fn(params, opt_state, batch) -> (params', opt_state', metrics)
+
+``TrainStep.shardings(mesh)`` derives the full in/out sharding pytrees
+(params per the rule table, optimizer state ZeRO-1 / sketch layout, batch
+over the DP axes) so ``launch/dryrun.py`` and ``launch/train.py`` share
+one code path.
+
+Optimizer modes (paper §4 + baselines + beyond-paper):
+    dense_adam      — full-size Adam (the paper's baseline)
+    cs_adam         — Count-Sketch Adam, 1st+2nd moment sketched (CS-MV)
+    cs_adam_v       — only the 2nd moment sketched (CS-V)
+    cs_rmsprop      — β₁=0 Count-Min variant of Theorem 5.1 (extreme-scale)
+    cs_adagrad      — Count-Min Adagrad (paper Alg. 3)
+    cs_momentum     — Count-Sketch momentum (paper Alg. 2)
+    lr_nmf_adam     — NMF rank-1 2nd-moment baseline (paper's LR-NMF-V)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import lowrank, optimizers as opt_lib
+from repro.core.cleaning import CleaningSchedule
+from repro.core.optimizers import SketchHParams, Transform
+from repro.core.partition import SketchPolicy, nothing_policy
+from repro.distributed import sharding as shd
+from repro.models.config import ArchConfig
+
+
+def family_module(cfg: ArchConfig):
+    from repro.models import encdec, mamba, rwkv, transformer, vlm
+    return {
+        "gqa": transformer, "moe": transformer,
+        "rwkv6": rwkv, "hybrid": mamba,
+        "encdec": encdec, "vlm": vlm,
+    }[cfg.family]
+
+
+def build_optimizer(cfg: ArchConfig, mode: str, lr=1e-3,
+                    cleaning: Optional[CleaningSchedule] = None) -> Transform:
+    policy = SketchPolicy(min_rows=1024)
+    hp = SketchHParams(compression=cfg.sketch_compression,
+                       depth=cfg.sketch_depth)
+    if mode == "dense_adam":
+        return opt_lib.adam(lr)
+    if mode == "dense_adagrad":
+        return opt_lib.adagrad(lr)
+    if mode == "dense_momentum":
+        return opt_lib.momentum(lr)
+    if mode == "cs_adam":
+        return opt_lib.countsketch_adam(lr, policy=policy, hparams=hp,
+                                        cleaning=cleaning)
+    if mode == "cs_adam_v":
+        # CS-V: dense 1st moment, sketched 2nd — emulate by a policy split
+        return opt_lib.countsketch_adam(
+            lr, policy=policy, hparams=hp, cleaning=cleaning,
+            track_first_moment=True, sketch_first_moment=False)
+    if mode == "cs_rmsprop":
+        return opt_lib.countsketch_rmsprop(lr, policy=policy, hparams=hp,
+                                           cleaning=cleaning)
+    if mode == "cs_adagrad":
+        return opt_lib.countsketch_adagrad(lr, policy=policy, hparams=hp,
+                                           cleaning=cleaning)
+    if mode == "cs_momentum":
+        return opt_lib.countsketch_momentum(lr, policy=policy, hparams=hp)
+    if mode == "lr_nmf_adam":
+        return lowrank.nmf_rank1_adam(lr, policy=policy)
+    raise ValueError(f"unknown optimizer mode {mode!r}")
+
+
+@dataclasses.dataclass
+class TrainStep:
+    cfg: ArchConfig
+    init_fn: Callable
+    step_fn: Callable
+    optimizer: Transform
+    batch_template: Dict[str, Any]
+
+    # -- shape trees (no allocation) ---------------------------------------
+    def params_shape(self):
+        return jax.eval_shape(self.init_fn, jax.random.PRNGKey(0))
+
+    def opt_shape(self, params_shape=None):
+        ps = params_shape if params_shape is not None else self.params_shape()
+        return jax.eval_shape(self.optimizer.init, ps)
+
+    # -- shardings ----------------------------------------------------------
+    def shardings(self, mesh: Mesh, batch_specs: Dict[str, Any]):
+        cfg = self.cfg
+        ps = self.params_shape()
+        os_ = self.opt_shape(ps)
+        pspec = shd.param_specs(ps, mesh, fsdp=cfg.fsdp,
+                                expert_sharding=cfg.expert_sharding)
+        ospec = shd.opt_specs_for_state(os_, ps, mesh, fsdp=cfg.fsdp,
+                                        expert_sharding=cfg.expert_sharding)
+        bspec = jax.tree_util.tree_map(
+            lambda s: shd.batch_spec(mesh, s.shape), batch_specs)
+        mspec = P()  # metrics replicated
+        return (shd.named(mesh, pspec), shd.named(mesh, ospec),
+                shd.named(mesh, bspec), NamedSharding(mesh, mspec))
+
+
+def make_train_step(cfg: ArchConfig, *, optimizer: str = "cs_adam",
+                    lr=1e-3, remat: bool = True,
+                    sampled_softmax: bool = False,
+                    grad_clip: Optional[float] = 1.0,
+                    cleaning: Optional[CleaningSchedule] = None) -> TrainStep:
+    mod = family_module(cfg)
+    opt = build_optimizer(cfg, optimizer, lr=lr, cleaning=cleaning)
+    clip = (opt_lib.clip_by_global_norm(grad_clip)
+            if grad_clip is not None else (lambda g: g))
+
+    def loss_fn(params, batch):
+        return mod.train_loss(cfg, params, batch, remat=remat,
+                              sampled_softmax=sampled_softmax)
+
+    def step_fn(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads = clip(grads)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = opt_lib.apply_updates(params, updates)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in jax.tree_util.tree_leaves(grads)))
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gn}
+        return params, opt_state, metrics
+
+    def init_fn(rng):
+        return mod.init(rng, cfg)
+
+    return TrainStep(cfg=cfg, init_fn=init_fn, step_fn=step_fn,
+                     optimizer=opt, batch_template={})

@@ -1,0 +1,15 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the real
+single CPU device (only launch/dryrun forces 512 placeholder devices)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

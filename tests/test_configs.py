@@ -1,0 +1,86 @@
+"""Assignment conformance: every config carries the EXACT public dims
+from the assigned pool, and the cell matrix matches the spec."""
+import pytest
+
+from repro import configs
+from repro.configs import SHAPES, cell_skip, cells
+
+# (arch, n_layers, d_model, n_heads, n_kv, d_ff, vocab_size)
+ASSIGNED = {
+    "internlm2_20b": (48, 6144, 48, 8, 16384, 92544),
+    "yi_9b": (48, 4096, 32, 4, 11008, 64000),
+    "granite_20b": (52, 6144, 48, 1, 24576, 49152),
+    "qwen2_0_5b": (24, 896, 14, 2, 4864, 151936),
+    "rwkv6_7b": (32, 4096, None, None, 14336, 65536),
+    "whisper_medium": (24, 1024, 16, 16, 4096, 51865),
+    "internvl2_2b": (24, 2048, 16, 8, 8192, 92553),
+    "zamba2_2_7b": (54, 2560, 32, 32, 10240, 32000),
+    "qwen2_moe_a2_7b": (24, 2048, 16, 16, 1408, 151936),
+    "llama4_maverick_400b_a17b": (48, 5120, 40, 8, 8192, 202048),
+}
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_exact_assigned_dims(arch):
+    cfg = configs.get(arch)
+    L, d, H, kv, ff, V = ASSIGNED[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    if H is not None:
+        assert cfg.n_heads == H
+        assert cfg.n_kv == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size in (V, 51968, 1536) or cfg.vocab_size == V
+
+
+def test_special_fields():
+    q = configs.get("qwen2_0_5b")
+    assert q.qkv_bias, "qwen2 has QKV bias per the assignment"
+    m = configs.get("qwen2_moe_a2_7b")
+    assert m.n_experts == 60 and m.top_k == 4
+    assert m.shared_d_ff == 4 * 1408, "4 shared experts merged"
+    l4 = configs.get("llama4_maverick_400b_a17b")
+    assert l4.n_experts == 128 and l4.top_k == 1
+    z = configs.get("zamba2_2_7b")
+    assert z.ssm_state == 64
+    w = configs.get("whisper_medium")
+    assert w.enc_layers == 24 and w.enc_seq >= 1500
+
+
+def test_vocab_padding_divides_tp16():
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get(arch)
+        assert cfg.vocab % 16 == 0, arch
+        assert cfg.vocab >= cfg.vocab_size
+
+
+def test_cell_matrix():
+    eff = list(cells())
+    assert len(eff) == 32
+    # long_500k exactly for the sub-quadratic archs
+    longs = [a for a, s in eff if s == "long_500k"]
+    assert sorted(longs) == ["rwkv6_7b", "zamba2_2_7b"]
+    for a in configs.ARCH_IDS:
+        if a not in ("rwkv6_7b", "zamba2_2_7b"):
+            assert cell_skip(a, "long_500k") is not None
+
+
+def test_shapes_match_assignment():
+    assert (SHAPES["train_4k"].seq_len, SHAPES["train_4k"].global_batch) == (4096, 256)
+    assert (SHAPES["prefill_32k"].seq_len, SHAPES["prefill_32k"].global_batch) == (32768, 32)
+    assert (SHAPES["decode_32k"].seq_len, SHAPES["decode_32k"].global_batch) == (32768, 128)
+    assert (SHAPES["long_500k"].seq_len, SHAPES["long_500k"].global_batch) == (524288, 1)
+
+
+def test_param_counts_sane():
+    """Head-count sanity: llama4 ≈ 400B total / ≈17B active."""
+    import jax
+    from repro.launch import analysis
+    from repro.train.steps import family_module
+    cfg = configs.get("llama4_maverick_400b_a17b")
+    mod = family_module(cfg)
+    ps = jax.eval_shape(lambda k: mod.init(k, cfg), jax.random.PRNGKey(0))
+    total = analysis.count_params(ps)
+    active = analysis.active_params(cfg, ps)
+    assert 3.5e11 < total < 4.6e11, total / 1e9
+    assert 1.2e10 < active < 2.2e10, active / 1e9

@@ -1,0 +1,196 @@
+"""Sharding rules, ZeRO-1 specs, elastic planning, straggler monitor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.distributed.elastic import (ElasticPlan, StragglerMonitor,
+                                       plan_resize, recovery_loop)
+
+
+def _mesh(shape=(2, 1), axes=("data", "model")):
+    devs = np.array(jax.devices()[:1] * int(np.prod(shape))).reshape(shape)
+    return Mesh(devs, axes)
+
+
+# a fake 16x16 mesh purely for spec derivation (no computation placed):
+# spec_for/dp_axes only read .axis_names and .devices.shape
+def _fake_mesh(shape=(16, 16), axes=("data", "model")):
+    M = type("FakeMesh", (), {})()
+    M.axis_names = axes
+    M.devices = type("D", (), {"shape": tuple(shape),
+                               "size": int(np.prod(shape))})
+    return M
+
+
+class TestSpecRules:
+    MESH = _fake_mesh()
+
+    def test_vocab_tables_row_sharded(self):
+        s = shd.spec_for("tok_embed/table", (92544, 6144), self.MESH)
+        assert s == P("model")
+
+    def test_attention_projections(self):
+        assert shd.spec_for("layers/attn/wq", (48, 6144, 6144), self.MESH) \
+            == P(None, None, "model")
+        assert shd.spec_for("layers/attn/wo", (48, 6144, 6144), self.MESH) \
+            == P(None, "model")
+
+    def test_divisibility_fallback(self):
+        # 14-head qwen2 wq output dim 896: divisible as a raw dim — but kv
+        # proj of 2*64=128: 128 % 16 == 0 too; a truly indivisible dim:
+        s = shd.spec_for("layers/attn/wk", (24, 896, 120), self.MESH)
+        assert s == P()  # 120 % 16 != 0 -> replicated
+
+    def test_norms_replicated(self):
+        assert shd.spec_for("layers/ln1", (48, 6144), self.MESH) == P()
+        assert shd.spec_for("final_norm", (6144,), self.MESH) == P()
+
+    def test_moe_ep_vs_tp(self):
+        ep = shd.spec_for("layers/ffn/w_gate", (24, 128, 5120, 8192),
+                          self.MESH, expert_sharding="ep")
+        assert ep == P(None, "model")
+        tp = shd.spec_for("layers/ffn/w_gate", (24, 60, 2048, 1408),
+                          self.MESH, expert_sharding="tp")
+        assert tp == P(None, None, None, "model")
+
+    def test_fsdp_adds_data_axis(self):
+        s = shd.spec_for("layers/ffn/w_gate", (24, 128, 5120, 8192),
+                         self.MESH, fsdp=True, expert_sharding="ep")
+        assert s == P(None, "model", None, "data")
+
+    def test_zero1_moment_sharding(self):
+        base = P(None, "model")
+        z = shd.zero1_spec(base, (48, 6144, 6144), self.MESH)
+        assert z == P("data", "model")  # first unsharded divisible dim? 48%16!=0
+        # 48 not divisible -> lands on dim... check actual behavior:
+        # dim0=48 %16 !=0, dim1=6144 ok but taken? base P(None,'model') maps
+        # dim0=None dim1='model'; third dim unsharded: 6144 % 16 == 0
+        # so expected P(None, 'model', 'data')
+        assert z in (P(None, "model", "data"), P("data", "model"))
+
+    def test_sketch_spec(self):
+        s = shd.sketch_spec(self.MESH, (3, 4096, 6144))
+        assert s == P(None, "data", "model")
+        s2 = shd.sketch_spec(self.MESH, (3, 100, 100))  # indivisible
+        assert s2 == P()
+
+    def test_dp_axes_divisibility(self):
+        assert shd.dp_axes(self.MESH, 256) == ("data",)
+        assert shd.dp_axes(self.MESH, 1) == ()
+        m3 = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+        assert shd.dp_axes(m3, 32) == ("pod", "data")
+        assert shd.dp_axes(m3, 16) == ("data",)
+
+
+class TestConstraint:
+    def test_noop_outside_mesh(self):
+        x = jnp.ones((4, 4))
+        y = shd.constraint(x, P("data", None))
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_applies_inside_mesh(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+        @jax.jit
+        def f(x):
+            return shd.constraint(x, P("data", "model"))
+
+        with shd.active_mesh(mesh):
+            out = f(jnp.ones((4, 4)))
+        assert out.shape == (4, 4)
+
+    def test_drops_indivisible(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+        @jax.jit
+        def f(x):
+            return shd.constraint(x, P("data", "model"))
+
+        with shd.active_mesh(mesh):
+            out = f(jnp.ones((3, 5)))   # indivisible dims -> dropped axes
+        assert out.shape == (3, 5)
+
+
+class TestElastic:
+    def test_plan_resize_keeps_tp(self):
+        plan = plan_resize(240, model_axis=16, old_data_axis=16)
+        assert plan.model_axis == 16
+        assert plan.data_axis == 8        # largest pow2 <= 240/16
+        assert plan.fold_sketch           # 2x fewer data shards -> fold
+
+    def test_plan_resize_small_loss_no_fold(self):
+        plan = plan_resize(256, model_axis=16, old_data_axis=16)
+        assert plan.data_axis == 16 and not plan.fold_sketch
+
+    def test_plan_resize_insufficient(self):
+        with pytest.raises(ValueError):
+            plan_resize(8, model_axis=16)
+
+    def test_straggler_monitor(self):
+        mon = StragglerMonitor(threshold=1.5, min_samples=3)
+        for step in range(6):
+            for host in range(4):
+                mon.record(host, 1.0 if host != 2 else 2.5)
+        assert mon.stragglers() == [2]
+
+    def test_recovery_loop_restarts(self):
+        state = {"restores": 0}
+
+        def restore():
+            state["restores"] += 1
+            return state.get("ckpt", 0)
+
+        def run_steps(start, total):
+            for s in range(start, total):
+                if s == 5 and state["restores"] == 1:
+                    state["ckpt"] = 4
+                    raise RuntimeError("chip failure")
+            return total
+
+        out = recovery_loop(run_steps, restore, total_steps=10)
+        assert out.final_step == 10
+        assert out.restarts == 1
+
+
+class TestSketchedReduce:
+    """Beyond-paper sketched DP reduction: psum(sketch(g)) == sketch(psum(g))."""
+
+    def test_linearity_across_replicas(self):
+        from repro.core import sketch as cs
+        from repro.distributed import sketched_reduce as sr
+        spec = cs.for_param((512, 16), compression=4.0, width_multiple=16,
+                            seed=3)
+        rng = np.random.RandomState(0)
+        ids = jnp.asarray(rng.randint(0, 512, size=32), jnp.int32)
+        g1 = jnp.asarray(rng.randn(32, 16), jnp.float32)
+        g2 = jnp.asarray(rng.randn(32, 16), jnp.float32)
+        # "two replicas" simulated by explicit sum
+        summed = sr.local_sketch(spec, ids, g1 + g2)
+        reduced = sr.local_sketch(spec, ids, g1) + sr.local_sketch(spec, ids, g2)
+        np.testing.assert_allclose(np.asarray(summed), np.asarray(reduced),
+                                   atol=1e-5)
+        assert sr.traffic_ratio(spec, 512) > 2.0
+
+    def test_psum_inside_shard_map(self):
+        from repro.core import sketch as cs
+        from repro.distributed import sketched_reduce as sr
+        from jax.sharding import PartitionSpec as P
+        mesh = jax.make_mesh((1,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        spec = cs.for_param((128, 8), compression=4.0, width_multiple=8)
+        ids = jnp.arange(16, dtype=jnp.int32)
+        rows = jnp.ones((16, 8), jnp.float32)
+
+        def f(ids, rows):
+            return sr.reduce_gradient_sketch(spec, ids, rows, "data")
+
+        out = jax.jit(jax.shard_map(
+            f, mesh=mesh, in_specs=(P(), P()), out_specs=P()))(ids, rows)
+        want = sr.local_sketch(spec, ids, rows)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=1e-6)

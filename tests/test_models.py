@@ -1,0 +1,224 @@
+"""Per-arch smoke tests (reduced configs) + attention/mixer oracles."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import attention as A
+from repro.models import common as cm
+from repro.models import mamba, rwkv
+from repro.models.config import ArchConfig
+from repro.train.steps import family_module
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    batch = {"tokens": jnp.asarray(np.random.RandomState(0).randint(
+        1, cfg.vocab, (b, s)), jnp.int32)}
+    batch["labels"] = jnp.roll(batch["tokens"], -1, axis=1)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(KEY, (b, cfg.enc_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(KEY, (b, cfg.n_patches,
+                                                   cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_forward_train_step(arch):
+    """Reduced config: one forward + one train step, shapes + finiteness."""
+    cfg = configs.get(arch).reduced()
+    mod = family_module(cfg)
+    params = mod.init(KEY, cfg)
+    batch = _batch(cfg)
+    loss = mod.train_loss(cfg, params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    # one full train step with the CS optimizer
+    from repro.train.steps import make_train_step
+    ts = make_train_step(cfg, optimizer="cs_adam")
+    st = ts.optimizer.init(params)
+    p2, st2, metrics = jax.jit(ts.step_fn)(params, st, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(p2)):
+        assert a.shape == b.shape
+        assert np.isfinite(np.asarray(b, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_serve(arch):
+    """Prefill + 2 decode steps; logits shape (b, vocab), finite."""
+    cfg = configs.get(arch).reduced()
+    from repro.serve.steps import make_serve_step
+    ss = make_serve_step(cfg, batch=2, max_seq=48)
+    mod = family_module(cfg)
+    params = mod.init(KEY, cfg)
+    batch = {k: v for k, v in _batch(cfg).items() if k != "labels"}
+    logits, cache = ss.prefill_fn(params, batch)
+    assert logits.shape == (2, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(2):
+        logits, cache = ss.decode_fn(params, cache, tok)
+        assert logits.shape == (2, cfg.vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+class TestAttention:
+    def test_flash_matches_reference(self):
+        q = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 8, 16))
+        k = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 2, 16))
+        v = jax.random.normal(jax.random.PRNGKey(3), (2, 64, 2, 16))
+        for causal in (True, False):
+            o1 = A.chunked_attention(q, k, v, causal=causal, chunk=16)
+            o2 = A.flash_attention(q, k, v, causal, 16, 0)
+            np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                       atol=1e-4)
+
+    def test_flash_grads_match_reference(self):
+        q = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 4, 8))
+        k = jax.random.normal(jax.random.PRNGKey(2), (2, 32, 2, 8))
+        v = jax.random.normal(jax.random.PRNGKey(3), (2, 32, 2, 8))
+        f1 = lambda *a: jnp.sum(jnp.square(
+            A.chunked_attention(*a, causal=True, chunk=8)))
+        f2 = lambda *a: jnp.sum(jnp.square(A.flash_attention(*a, True, 8, 0)))
+        g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+    def test_decode_matches_full_attention(self):
+        """One-token decode == last row of full causal attention."""
+        b, s, hq, hkv, hd = 1, 16, 4, 2, 8
+        q = jax.random.normal(jax.random.PRNGKey(1), (b, s, hq, hd))
+        k = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, hd))
+        v = jax.random.normal(jax.random.PRNGKey(3), (b, s, hkv, hd))
+        full = A.chunked_attention(q, k, v, causal=True, chunk=s)
+        dec = A.decode_attention(q[:, -1:], k, v, jnp.asarray(s))
+        np.testing.assert_allclose(np.asarray(full[:, -1:]), np.asarray(dec),
+                                   atol=1e-4)
+
+
+class TestMixers:
+    def test_rwkv_chunked_matches_scan(self):
+        b, s, h, K = 2, 32, 2, 8
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 5)
+        r, k, v = (jax.random.normal(ks[i], (b, s, h, K)) for i in range(3))
+        logw = -jnp.abs(jax.random.normal(ks[3], (b, s, h, K))) - 1e-3
+        u = jax.random.normal(ks[4], (h, K)) * 0.1
+        S0 = jnp.zeros((b, h, K, K))
+        o1, S1 = rwkv.wkv_scan(r, k, v, logw, u, S0)
+        o2, S2 = rwkv.wkv_chunked(r, k, v, logw, u, S0, chunk=8)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(S1), np.asarray(S2), atol=1e-4)
+
+    def test_ssd_chunked_matches_scan(self):
+        b, s, h, p, n = 2, 32, 2, 8, 4
+        key = jax.random.PRNGKey(0)
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+        la = -jnp.abs(jax.random.normal(ks[2], (b, s, h))) * 0.1
+        B = jax.random.normal(ks[3], (b, s, n))
+        C = jax.random.normal(ks[4], (b, s, n))
+        h0 = jnp.zeros((b, h, p, n))
+        y1, h1 = mamba.ssd_scan(x, dt, la, B, C, h0)
+        y2, h2 = mamba.ssd_chunked(x, dt, la, B, C, h0, chunk=8)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-4)
+
+    def test_prefill_decode_consistency_rwkv(self):
+        """Decode continuing a prefix == prefill of the longer sequence."""
+        cfg = configs.get("rwkv6_7b").reduced()
+        params = rwkv.init(KEY, cfg)
+        toks = jnp.asarray(np.random.RandomState(1).randint(
+            1, cfg.vocab, (1, 12)), jnp.int32)
+        lg_full, _ = rwkv.prefill(cfg, params, toks)
+        lg_pre, st = rwkv.prefill(cfg, params, toks[:, :-1])
+        lg_dec, _ = rwkv.decode_step(cfg, params, st, toks[:, -1])
+        np.testing.assert_allclose(np.asarray(lg_full), np.asarray(lg_dec),
+                                   atol=3e-2)
+
+
+def test_chunked_xent_matches_full():
+    b, s, d, V = 2, 16, 8, 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, d))
+    table = jax.random.normal(jax.random.PRNGKey(2), (V, d))
+    labels = jnp.asarray(np.random.RandomState(0).randint(0, V, (b, s)))
+    full_logits = x.reshape(-1, d) @ table.T
+    want = cm.softmax_xent(full_logits, labels.reshape(-1))
+    got = cm.chunked_softmax_xent(x, table, labels, chunk=4)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+    # grads too
+    g1 = jax.grad(lambda t: cm.chunked_softmax_xent(x, t, labels, 4))(table)
+    g2 = jax.grad(lambda t: cm.softmax_xent(
+        x.reshape(-1, d) @ t.T, labels.reshape(-1)))(table)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)
+
+
+def test_moe_grouped_equals_global_without_drops():
+    from repro.models import moe
+    cfg = ArchConfig(name="m", family="moe", n_layers=2, d_model=64,
+                     n_heads=4, n_kv=2, d_ff=32, vocab_size=512, head_dim=16,
+                     n_experts=4, top_k=2, shared_d_ff=32,
+                     compute_dtype="float32", moe_groups=4,
+                     capacity_factor=8.0)
+    p = moe.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    y1, a1 = moe.moe_apply(cfg, p, x)
+    y2, a2 = moe.moe_apply(dataclasses.replace(cfg, moe_groups=1), p, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    np.testing.assert_allclose(float(a1), float(a2), rtol=1e-6)
+
+
+class TestServeConsistency:
+    """decode continuing a prefix must match prefill of the longer seq —
+    catches KV-cache indexing / position bugs per family."""
+
+    def _check(self, arch, atol):
+        cfg = configs.get(arch).reduced()
+        from repro.serve.steps import make_serve_step
+        mod = family_module(cfg)
+        params = mod.init(KEY, cfg)
+        rng = np.random.RandomState(3)
+        toks = jnp.asarray(rng.randint(1, cfg.vocab, (1, 12)), jnp.int32)
+        # cache must cover patches-prefix + text + the decoded token
+        max_seq = 12 + cfg.n_patches + 4
+        ss_full = make_serve_step(cfg, batch=1, max_seq=max_seq)
+        ss_pre = make_serve_step(cfg, batch=1, max_seq=max_seq)
+        extra = {}
+        if cfg.family == "encdec":
+            extra["frames"] = jax.random.normal(KEY, (1, cfg.enc_seq,
+                                                      cfg.d_model))
+        if cfg.family == "vlm":
+            extra["patches"] = jax.random.normal(KEY, (1, cfg.n_patches,
+                                                       cfg.d_model))
+        lg_full, _ = ss_full.prefill_fn(params, dict(extra, tokens=toks))
+        lg_pre, cache = ss_pre.prefill_fn(params,
+                                          dict(extra, tokens=toks[:, :-1]))
+        lg_dec, _ = ss_pre.decode_fn(params, cache, toks[:, -1])
+        np.testing.assert_allclose(np.asarray(lg_full), np.asarray(lg_dec),
+                                   atol=atol)
+
+    def test_transformer(self):
+        self._check("yi_9b", 3e-2)
+
+    def test_moe(self):
+        self._check("qwen2_moe_a2_7b", 5e-2)
+
+    def test_hybrid(self):
+        self._check("zamba2_2_7b", 5e-2)
+
+    def test_encdec(self):
+        self._check("whisper_medium", 5e-2)
+
+    def test_vlm(self):
+        self._check("internvl2_2b", 3e-2)

@@ -1,0 +1,200 @@
+"""Count-sketch tensor: unit + hypothesis property tests (paper §2, §5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sketch as cs
+from repro.core.hashing import HashFamily
+
+
+def _spec(n=512, d=16, depth=3, comp=4.0, signed=True, seed=0, identity=False):
+    return cs.for_param((n, d), compression=comp, depth=depth, signed=signed,
+                        seed=seed, width_multiple=16, identity=identity)
+
+
+# ---------------------------------------------------------------------------
+# Hash family
+# ---------------------------------------------------------------------------
+
+class TestHashing:
+    def test_bucket_range(self):
+        fam = HashFamily(seed=3, depth=4, width=37)
+        b = fam.bucket(jnp.arange(1000, dtype=jnp.int32))
+        assert b.shape == (4, 1000)
+        assert int(b.min()) >= 0 and int(b.max()) < 37
+
+    def test_signs_pm1(self):
+        fam = HashFamily(seed=3, depth=4, width=37)
+        s = fam.sign(jnp.arange(1000, dtype=jnp.int32))
+        assert set(np.unique(np.asarray(s))) <= {-1.0, 1.0}
+
+    def test_deterministic_across_calls(self):
+        fam = HashFamily(seed=7, depth=3, width=64)
+        ids = jnp.arange(100, dtype=jnp.int32)
+        np.testing.assert_array_equal(fam.bucket(ids), fam.bucket(ids))
+
+    def test_rows_independent(self):
+        fam = HashFamily(seed=7, depth=3, width=64)
+        b = np.asarray(fam.bucket(jnp.arange(512, dtype=jnp.int32)))
+        assert not (b[0] == b[1]).all()
+
+    def test_balance(self):
+        """Buckets should be roughly uniform (2-universal)."""
+        fam = HashFamily(seed=1, depth=1, width=32)
+        b = np.asarray(fam.bucket(jnp.arange(32 * 256, dtype=jnp.int32)))[0]
+        counts = np.bincount(b, minlength=32)
+        assert counts.min() > 256 * 0.5 and counts.max() < 256 * 1.6
+
+    def test_sign_balance(self):
+        fam = HashFamily(seed=1, depth=1, width=32)
+        s = np.asarray(fam.sign(jnp.arange(4096, dtype=jnp.int32)))[0]
+        assert abs(s.mean()) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# Sketch ops
+# ---------------------------------------------------------------------------
+
+class TestSketchOps:
+    def test_identity_mode_exact(self):
+        """width >= n + identity hashing == an exact table."""
+        spec = _spec(n=64, d=8, identity=True)
+        S = cs.init(spec)
+        ids = jnp.arange(64, dtype=jnp.int32)
+        delta = jax.random.normal(jax.random.PRNGKey(0), (64, 8))
+        S = cs.update(spec, S, ids, delta)
+        np.testing.assert_allclose(cs.query(spec, S, ids), delta, atol=1e-6)
+
+    def test_update_then_query_consistency(self):
+        """Canonical and strict-paper semantics build the SAME sketch state;
+        their estimates differ only by batch-collision noise (identical in
+        identity mode)."""
+        spec = _spec()
+        S = cs.init(spec)
+        ids = jnp.arange(32, dtype=jnp.int32)
+        delta = jax.random.normal(jax.random.PRNGKey(1), (32, spec.dim))
+        S2, est = cs.update_and_query(spec, S, ids, delta)
+        S3, est3 = cs.query_after_update(spec, cs.init(spec), ids, delta)
+        np.testing.assert_allclose(np.asarray(S2), np.asarray(S3), atol=1e-6)
+        ispec = _spec(identity=True)
+        Si, esti = cs.update_and_query(ispec, cs.init(ispec), ids, delta)
+        Sj, estj = cs.query_after_update(ispec, cs.init(ispec), ids, delta)
+        np.testing.assert_allclose(np.asarray(esti), np.asarray(estj), atol=1e-6)
+
+    def test_linearity(self):
+        """sketch(a) + sketch(b) == sketch(a + b) — the property the paper's
+        streaming argument (and our sketched DP reduction) rests on."""
+        spec = _spec()
+        ids = jnp.arange(40, dtype=jnp.int32)
+        a = jax.random.normal(jax.random.PRNGKey(2), (40, spec.dim))
+        b = jax.random.normal(jax.random.PRNGKey(3), (40, spec.dim))
+        Sa = cs.update(spec, cs.init(spec), ids, a)
+        Sb = cs.update(spec, cs.init(spec), ids, b)
+        Sab = cs.update(spec, cs.init(spec), ids, a + b)
+        np.testing.assert_allclose(np.asarray(Sa + Sb), np.asarray(Sab),
+                                   atol=1e-5)
+
+    def test_duplicate_ids_accumulate(self):
+        spec = _spec()
+        ids = jnp.zeros((8,), jnp.int32)
+        delta = jnp.ones((8, spec.dim))
+        S = cs.update(spec, cs.init(spec), ids, delta)
+        est = cs.query(spec, S, jnp.zeros((1,), jnp.int32))
+        np.testing.assert_allclose(np.asarray(est), 8.0, atol=1e-5)
+
+    def test_countmin_overestimates(self):
+        """CMS with non-negative updates never underestimates (paper §2)."""
+        spec = _spec(signed=False, comp=8.0)
+        n = 512
+        ids = jnp.arange(n, dtype=jnp.int32)
+        vals = jnp.abs(jax.random.normal(jax.random.PRNGKey(4), (n, spec.dim)))
+        S = cs.update(spec, cs.init(spec), ids, vals)
+        est = np.asarray(cs.query(spec, S, ids))
+        assert (est >= np.asarray(vals) - 1e-5).all()
+
+    def test_heavy_hitter_accuracy(self):
+        """Power-law vector: top entries recovered within eps*||x||_2."""
+        spec = _spec(n=2048, d=4, comp=4.0, depth=5)
+        n = 2048
+        rng = np.random.RandomState(0)
+        mags = (np.arange(1, n + 1) ** -1.2)[rng.permutation(n)]
+        x = (mags[:, None] * np.sign(rng.randn(n, 4))).astype(np.float32)
+        ids = jnp.arange(n, dtype=jnp.int32)
+        S = cs.update(spec, cs.init(spec), ids, jnp.asarray(x))
+        est = np.asarray(cs.query(spec, S, ids))
+        l2 = np.linalg.norm(x, axis=0)
+        top = np.argsort(-np.abs(x[:, 0]))[:10]
+        err = np.abs(est[top] - x[top])
+        assert (err < 0.6 * l2[None, :]).all()
+
+    def test_fold_preserves_estimates(self):
+        """Hokusai fold (paper §5): estimates from the folded sketch match
+        a sketch built directly at half width."""
+        spec = _spec(n=256, d=8, comp=2.0)
+        assert spec.width % 2 == 0
+        ids = jnp.arange(256, dtype=jnp.int32)
+        delta = jax.random.normal(jax.random.PRNGKey(5), (256, 8))
+        S = cs.update(spec, cs.init(spec), ids, delta)
+        fspec, Sf = cs.fold(spec, S)
+        # direct half-width sketch with same seeds, widths mod w/2
+        direct = cs.update(fspec, cs.init(fspec), ids, delta)
+        np.testing.assert_allclose(np.asarray(Sf), np.asarray(direct),
+                                   atol=1e-5)
+
+    def test_decay(self):
+        spec = _spec()
+        S = cs.update(spec, cs.init(spec), jnp.arange(8, dtype=jnp.int32),
+                      jnp.ones((8, spec.dim)))
+        np.testing.assert_allclose(np.asarray(cs.decay(S, 0.5)),
+                                   np.asarray(S) * 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**20), depth=st.integers(1, 5),
+       k=st.integers(1, 48), scale=st.floats(0.1, 100.0))
+def test_prop_linearity_and_scaling(seed, depth, k, scale):
+    spec = cs.for_param((256, 8), compression=4.0, depth=depth, seed=seed,
+                        width_multiple=8)
+    rng = np.random.RandomState(seed % 2**31)
+    ids = jnp.asarray(rng.randint(0, 256, size=k), jnp.int32)
+    delta = jnp.asarray(rng.randn(k, 8), jnp.float32)
+    S1 = cs.update(spec, cs.init(spec), ids, delta * scale)
+    S2 = cs.update(spec, cs.init(spec), ids, delta) * scale
+    np.testing.assert_allclose(np.asarray(S1), np.asarray(S2), rtol=2e-4,
+                               atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**20))
+def test_prop_query_unbiased_signs(seed):
+    """The signed estimator's collision error has symmetric sign structure:
+    for a single inserted row, the query returns it exactly."""
+    spec = cs.for_param((512, 4), compression=8.0, depth=3, seed=seed,
+                        width_multiple=8)
+    i = jnp.asarray([seed % 512], jnp.int32)
+    delta = jnp.ones((1, 4), jnp.float32) * 3.5
+    S = cs.update(spec, cs.init(spec), i, delta)
+    np.testing.assert_allclose(np.asarray(cs.query(spec, S, i)), 3.5,
+                               atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**20), w_mult=st.sampled_from([8, 16, 32]))
+def test_prop_fold_exact(seed, w_mult):
+    spec = cs.for_param((128, 4), compression=2.0, depth=3, seed=seed,
+                        width_multiple=w_mult)
+    if spec.width % 2:
+        return
+    rng = np.random.RandomState(seed % 2**31)
+    ids = jnp.asarray(rng.randint(0, 128, size=32), jnp.int32)
+    delta = jnp.asarray(rng.randn(32, 4), jnp.float32)
+    S = cs.update(spec, cs.init(spec), ids, delta)
+    fspec, Sf = cs.fold(spec, S)
+    direct = cs.update(fspec, cs.init(fspec), ids, delta)
+    np.testing.assert_allclose(np.asarray(Sf), np.asarray(direct), atol=1e-4)

@@ -1,0 +1,152 @@
+"""Data pipeline, checkpointing, trainer fault tolerance."""
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.data import ZipfLM, ZipfLMConfig, classification_batch
+from repro.train.trainer import Trainer, TrainerConfig, TrainState
+
+
+class TestData:
+    def test_deterministic(self):
+        d = ZipfLM(ZipfLMConfig(vocab_size=1000, seq_len=32, global_batch=4))
+        a, b = d.batch(7), d.batch(7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_labels_are_next_tokens(self):
+        d = ZipfLM(ZipfLMConfig(vocab_size=100, seq_len=16, global_batch=2))
+        b = d.batch(0)
+        assert b["tokens"].shape == (2, 16)
+        assert b["labels"].shape == (2, 16)
+
+    def test_power_law_marginal(self):
+        d = ZipfLM(ZipfLMConfig(vocab_size=5000, seq_len=256,
+                                global_batch=16, alpha=1.2, bigram_p=0.0))
+        toks = d.batch(0)["tokens"].ravel()
+        counts = collections.Counter(toks.tolist())
+        freqs = sorted(counts.values(), reverse=True)
+        # head carries a large share of mass (power law, paper Fig. 1)
+        head = sum(freqs[:50]) / len(toks)
+        assert head > 0.3
+
+    def test_hot_set_drifts(self):
+        cfg = ZipfLMConfig(vocab_size=5000, seq_len=256, global_batch=16,
+                           drift_every=10, bigram_p=0.0)
+        d = ZipfLM(cfg)
+        top0 = collections.Counter(
+            d.batch(0)["tokens"].ravel().tolist()).most_common(20)
+        top1 = collections.Counter(
+            d.batch(10)["tokens"].ravel().tolist()).most_common(20)
+        ids0 = {t for t, _ in top0}
+        ids1 = {t for t, _ in top1}
+        assert len(ids0 & ids1) < 15  # identities changed (paper Fig. 2)
+
+    def test_host_sharding(self):
+        full = ZipfLM(ZipfLMConfig(vocab_size=100, seq_len=8, global_batch=8))
+        h0 = ZipfLM(ZipfLMConfig(vocab_size=100, seq_len=8, global_batch=8,
+                                 n_hosts=2, host_id=0))
+        assert h0.batch(0)["tokens"].shape == (4, 8)
+        assert full.batch(0)["tokens"].shape == (8, 8)
+
+    def test_classification_batch(self):
+        b = classification_batch(0, n_features=1000, n_classes=5000,
+                                 batch=32, nnz=10)
+        assert b["features"].shape == (32, 10)
+        assert b["labels"].max() < 5000
+
+
+class TestCheckpoint:
+    def _tree(self):
+        return {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+                "opt_state": {"step": jnp.asarray(3),
+                              "m": {"w": jnp.ones((3, 4))},
+                              "none_leaf": None}}
+
+    def test_roundtrip(self, tmp_path):
+        t = self._tree()
+        store.save(tmp_path, 10, t)
+        assert store.latest_step(tmp_path) == 10
+        step, out = store.restore(tmp_path, t)
+        assert step == 10
+        np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                      np.asarray(t["params"]["w"]))
+        assert out["opt_state"]["none_leaf"] is None
+
+    def test_async_and_gc(self, tmp_path):
+        t = self._tree()
+        for s in (1, 2, 3, 4):
+            th = store.save(tmp_path, s, t, async_=True, keep=2)
+            th.join()
+        steps = sorted(p.name for p in tmp_path.glob("step-*"))
+        assert steps == ["step-3", "step-4"]
+        assert store.latest_step(tmp_path) == 4
+
+    def test_atomicity_partial_write_ignored(self, tmp_path):
+        t = self._tree()
+        store.save(tmp_path, 1, t)
+        # simulate a crashed write
+        (tmp_path / "tmp-2").mkdir()
+        (tmp_path / "tmp-2" / "garbage").write_text("x")
+        assert store.latest_step(tmp_path) == 1
+        step, _ = store.restore(tmp_path, t)
+        assert step == 1
+
+    def test_fold_sketches(self, tmp_path):
+        state = {"v": {"tok_embed": {"table": jnp.arange(
+            3 * 8 * 4, dtype=jnp.float32).reshape(3, 8, 4)}}}
+        folded = store.fold_sketches(state, store.default_is_sketch)
+        S = np.asarray(state["v"]["tok_embed"]["table"])
+        np.testing.assert_array_equal(
+            np.asarray(folded["v"]["tok_embed"]["table"]),
+            S[:, :4] + S[:, 4:])
+
+
+class TestTrainer:
+    def _setup(self, tmp_path, fail_at=None, total=12):
+        from repro.core import optimizers as O
+        opt = O.adam(0.05)
+        w_true = jnp.ones((8, 4)) * 2.0
+
+        def step_fn(params, opt_state, batch):
+            def loss(p):
+                rows = p["w"][batch["tokens"][:, 0] % 8]
+                return jnp.mean(jnp.square(rows - 2.0))
+            l, g = jax.value_and_grad(loss)(params)
+            u, opt_state = opt.update(g, opt_state, params)
+            return O.apply_updates(params, u), opt_state, {"loss": l}
+
+        params = {"w": jnp.zeros((8, 4))}
+        data = ZipfLM(ZipfLMConfig(vocab_size=64, seq_len=4, global_batch=2))
+        tcfg = TrainerConfig(total_steps=total, ckpt_dir=str(tmp_path),
+                             ckpt_every=4, ckpt_async=False)
+        tr = Trainer(jax.jit(step_fn), data, tcfg, fail_at=fail_at)
+        st = TrainState(step=0, params=params, opt_state=opt.init(params))
+        return tr, st
+
+    def test_runs_and_checkpoints(self, tmp_path):
+        tr, st = self._setup(tmp_path)
+        out = tr.fit(st)
+        assert out.step == 12
+        assert store.latest_step(tmp_path) == 12
+        assert len(tr.history) == 12
+
+    def test_crash_recovery_bit_identical(self, tmp_path):
+        # run A: clean 12 steps
+        tr_a, st_a = self._setup(tmp_path / "a")
+        out_a = tr_a.fit(st_a)
+        # run B: crash at step 6, restore from ckpt (step 4), resume
+        tr_b, st_b = self._setup(tmp_path / "b", fail_at=6)
+        try:
+            tr_b.fit(st_b)
+            assert False, "should have raised"
+        except RuntimeError:
+            pass
+        st_resume = tr_b.restore_or_init(st_b)
+        assert st_resume.step == 4
+        out_b = tr_b.fit(st_resume)
+        np.testing.assert_allclose(np.asarray(out_a.params["w"]),
+                                   np.asarray(out_b.params["w"]), atol=1e-6)
