@@ -88,7 +88,12 @@ class SketchHParams:
     update (and no sketch write) — the paper's per-item algorithm only
     touches active features.  Without it, a zero-grad row's update is
     median-noise / sqrt(min-estimate ≈ 0), which diverges (observed:
-    tests/test_optimizers.py::TestConvergence)."""
+    tests/test_optimizers.py::TestConvergence).
+
+    ``backend``: which kernel backend the sparse-rows fast path runs on —
+    a name registered in ``repro.kernels`` ('ref' | 'xla' | 'stream' |
+    'tiled' | 'interpret') or None/'auto' for the per-host best (tiled on
+    TPU, xla elsewhere).  See DESIGN.md §10."""
     compression: float = 5.0
     depth: int = 3
     width_multiple: int = 256
@@ -97,6 +102,7 @@ class SketchHParams:
     strict_paper: bool = False  # 3-pass query→update→query semantics
     dense_chunk: int = 8192
     lazy: bool = True
+    backend: Optional[str] = None
 
     def spec(self, path: str, shape, *, signed: bool) -> cs.SketchSpec:
         return cs.for_param(tuple(shape), compression=self.compression,
@@ -496,13 +502,34 @@ def adam_sparse_rows(spec_m: Optional[cs.SketchSpec], spec_v: cs.SketchSpec,
                      lr: Schedule, b1: float = 0.9, b2: float = 0.999,
                      eps: float = 1e-8,
                      cleaning: Optional[CleaningSchedule] = None,
-                     strict_paper: bool = False):
+                     strict_paper: bool = False,
+                     backend: Optional[str] = None):
     """CS-Adam on ``k`` touched rows.  Returns (M', V', row_updates).
 
-    ``spec_m``/``M`` may be None for the β₁=0 variant.  ``ids`` must be
-    de-duplicated by the caller (use ``jnp.unique`` with a fill id or
-    segment-sum duplicate rows first) — the paper's setting, where each
-    active feature appears once per mini-batch."""
+    ``spec_m``/``M`` may be None for the β₁=0 variant.
+
+    ``backend`` routes the step through the kernel registry in
+    ``repro.kernels`` ('ref' | 'xla' | 'stream' | 'tiled' | 'interpret',
+    or 'auto' for the per-host best).  Registry backends handle duplicate ids
+    themselves (the tiled backend dedups + segment-sums them; the
+    streaming ones compose them through the EMA) and return row updates
+    such that ``params.at[ids].add(upd)`` is the correct application.
+
+    ``backend=None`` keeps the in-graph XLA batch path below, where
+    ``ids`` must be de-duplicated by the caller (use
+    ``kernels.dedup.dedup_rows`` or ``jnp.unique`` with a fill id) — the
+    paper's setting, where each active feature appears once per
+    mini-batch.  ``strict_paper`` (3-pass semantics) only exists on the
+    XLA path."""
+    if backend is not None:
+        if strict_paper:
+            raise ValueError("strict_paper is only supported on the "
+                             "default (backend=None) XLA path")
+        from repro import kernels  # deferred: kernels imports this module's deps
+        V_in = maybe_clean(cleaning, V, step)
+        return kernels.adam_rows(spec_m, spec_v, M, V_in, ids, g, step,
+                                 lr=lr, b1=b1, b2=b2, eps=eps,
+                                 backend=backend)
     eta = _lr_at(lr, step)
     t = step.astype(jnp.float32)
     if spec_m is not None:
@@ -526,6 +553,58 @@ def adam_sparse_rows(spec_m: Optional[cs.SketchSpec], spec_v: cs.SketchSpec,
     vhat = v_new / (1.0 - b2 ** t)
     upd = -eta * mhat / (jnp.sqrt(vhat) + eps)
     return M, V, upd
+
+
+def sparse_rows_adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+                     eps: float = 1e-8, *, shape: Tuple[int, int],
+                     path: str = "sparse_rows",
+                     hparams: SketchHParams = SketchHParams(),
+                     track_first_moment: bool = True,
+                     cleaning: Optional[CleaningSchedule] = None) -> Transform:
+    """Optax-shaped CS-Adam for ONE (n, d) table fed (ids, rows) gradients.
+
+    The transform owns the sketch state for a single embedding/softmax
+    table whose gradients arrive as ``{"ids": (k,), "rows": (k, d)}`` —
+    the sampled-softmax / extreme-classification regime where work scales
+    with touched rows.  Each ``update`` routes through the kernel backend
+    named by ``hparams.backend`` (DESIGN.md §10), so the same training code
+    runs the jnp oracle on CPU and the tiled Pallas pipeline on TPU.
+
+    ``track_first_moment=False`` is the β₁=0 (Theorem 5.1 / RMSProp)
+    variant the paper uses for the 49.5M-class Amazon task.
+    """
+    if hparams.strict_paper:
+        raise ValueError("sparse_rows_adam always runs through the kernel "
+                         "registry, which has no strict_paper (3-pass) "
+                         "path — use adam_sparse_rows(backend=None, "
+                         "strict_paper=True) instead")
+    spec_v = hparams.spec(path, shape, signed=False)
+    spec_m = hparams.spec(path, shape, signed=True) \
+        if track_first_moment else None
+
+    def init(params=None):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": cs.init(spec_m) if track_first_moment else None,
+                "v": cs.init(spec_v)}
+
+    def update(grads, state, params=None):
+        ids, rows = grads["ids"], grads["rows"]
+        step = state["step"] + 1
+        M, V, upd = adam_sparse_rows(
+            spec_m, spec_v, state["m"], state["v"], ids, rows, step,
+            lr=lr, b1=b1, b2=b2, eps=eps, cleaning=cleaning,
+            backend=hparams.backend if hparams.backend is not None
+            else "auto")
+        return {"ids": ids, "rows": upd}, {"step": step, "m": M, "v": V}
+
+    return Transform(init, update)
+
+
+def apply_sparse_updates(table: jnp.ndarray, updates) -> jnp.ndarray:
+    """Apply ``sparse_rows_adam`` updates: scatter-ADD row updates at their
+    ids (correct under every backend; see ``kernels.adam_rows``)."""
+    return table.at[updates["ids"]].add(
+        updates["rows"].astype(table.dtype))
 
 
 def momentum_sparse_rows(spec: cs.SketchSpec, M: jnp.ndarray,

@@ -30,6 +30,36 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # ---------------------------------------------------------------------------
+# JAX version compat
+# ---------------------------------------------------------------------------
+
+def make_mesh_compat(axis_shapes: Sequence[int],
+                     axis_names: Sequence[str]) -> Mesh:
+    """``jax.make_mesh`` that works across JAX versions.
+
+    Newer JAX (>= 0.5) grew ``jax.sharding.AxisType`` and defaults new
+    meshes to *explicit* axis types, which breaks code written for the
+    classic auto-sharding GSPMD mode; older JAX (this container's 0.4.x)
+    has no ``AxisType`` at all.  Always request Auto axes when the knob
+    exists and omit it when it doesn't.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kwargs = {}
+    if axis_type is not None:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(tuple(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def shard_map_compat(*args, **kwargs):
+    """``jax.shard_map`` (JAX >= 0.5) / ``jax.experimental.shard_map``
+    (0.4.x) under one name."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn  # type: ignore
+    return fn(*args, **kwargs)
+
+
+# ---------------------------------------------------------------------------
 # Rule table: (path regex, per-dim axis template)
 # Templates name mesh axes; 'fsdp:<axis>' entries apply only when the
 # config opts into fsdp.  Matched against the path *suffix*.

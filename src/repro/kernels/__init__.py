@@ -1,9 +1,91 @@
 """Pallas-TPU kernels for the count-sketch hot path.
 
-  cs_query.py — scalar-prefetch gather + median/min reduce (batch QUERY)
-  cs_update.py — bucket-sorted sequential-grid scatter-accumulate (batch UPDATE)
-  cs_adam.py  — fused streaming Adam: one HBM round-trip per sketch row
-  ops.py      — jit'd wrappers w/ TPU→Pallas, CPU→ref dispatch
-  ref.py      — pure-jnp oracles (bit-exact semantics definitions)
+  cs_query.py      — scalar-prefetch gather + median/min reduce (batch QUERY)
+  cs_update.py     — bucket-sorted sequential-grid scatter-accumulate (batch UPDATE)
+  cs_adam.py       — fused STREAMING Adam: one item per grid step, exact
+                     per-item (paper) semantics
+  cs_adam_tiled.py — fused TILED Adam: TILE deduplicated rows per grid step,
+                     double-buffered grad/update pipeline (DESIGN.md §10)
+  dedup.py         — sort + segment-sum pre-pass that turns an (ids, rows)
+                     batch collision-free so the tiled kernel applies
+  ops.py           — jit'd wrappers w/ TPU→Pallas, CPU→ref dispatch
+  ref.py           — pure-jnp oracles (bit-exact semantics definitions)
+
+Backend registry
+----------------
+The sparse-rows CS-Adam step has several interchangeable implementations
+("backends"), selected by name — through ``SketchHParams.backend``, the
+``backend=`` argument of ``core.optimizers.adam_sparse_rows``, or
+``benchmarks/kernels.py --backend``:
+
+  ref        pure-jnp ``lax.scan`` per-item oracle (exact paper semantics)
+  xla        dedup pre-pass + the vectorized jnp batch step — no Pallas;
+             same semantics as ``tiled`` with one whole-batch tile (the
+             default off-TPU)
+  stream     ``cs_adam_fused`` Pallas kernel — one item per sequential grid
+             step; exact per-item semantics, throughput-bound
+  tiled      dedup pre-pass + ``cs_adam_tiled`` — TILE rows per grid step;
+             identical to ``ref`` on collision-free batches, within
+             median/min-noise tolerance otherwise (the TPU fast path)
+  interpret  ``tiled`` with the Pallas interpreter forced on — runs the
+             kernel body anywhere (tests, CPU containers)
+
+``resolve_backend(None)`` / ``resolve_backend("auto")`` picks ``tiled`` on
+TPU and ``xla`` elsewhere.  New backends (e.g. a GPU port) register via
+``register_backend``.
 """
-from repro.kernels import ops, ref  # noqa: F401
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+
+from repro.kernels import dedup, ops, ref  # noqa: F401
+
+# name -> fn(spec_m, spec_v, M, V, ids, g, step, *, lr, b1, b2, eps)
+#          -> (M', V', row_updates)
+_BACKENDS: dict = {}
+
+
+def register_backend(name: str, fn: Callable) -> None:
+    """Register (or override) a sparse-rows CS-Adam backend."""
+    _BACKENDS[name] = fn
+
+
+def backends() -> Tuple[str, ...]:
+    """Registered backend names, registration order."""
+    return tuple(_BACKENDS)
+
+
+def resolve_backend(name: Optional[str] = None) -> str:
+    """Map None/'auto' to the best backend for this host; validate names."""
+    if name is None or name == "auto":
+        return "tiled" if jax.default_backend() == "tpu" else "xla"
+    if name not in _BACKENDS:
+        raise KeyError(f"unknown kernel backend {name!r}; "
+                       f"registered: {backends()}")
+    return name
+
+
+def adam_rows(spec_m, spec_v, M, V, ids, g, step, *,
+              lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+              backend: Optional[str] = None):
+    """Sparse-rows CS-Adam through the named backend (None/'auto' = best).
+
+    Returns ``(M', V', row_updates)`` with ``row_updates`` aligned to the
+    input ``ids`` such that ``params.at[ids].add(row_updates)`` is the
+    correct application under every backend (the tiled backend zeros
+    duplicate occurrences after the first; see ``dedup.scatter_back``).
+    """
+    fn = _BACKENDS[resolve_backend(backend)]
+    return fn(spec_m, spec_v, M, V, ids, g, step,
+              lr=lr, b1=b1, b2=b2, eps=eps)
+
+
+register_backend("ref", ops.adam_rows_ref)
+register_backend("xla", ops.adam_rows_xla)
+register_backend("stream", ops.adam_rows_stream)
+register_backend("tiled", ops.adam_rows_tiled)
+register_backend("interpret",
+                 functools.partial(ops.adam_rows_tiled, interpret=True))

@@ -1,0 +1,221 @@
+"""Tiled batch-parallel CS-Adam — ``TILE`` collision-free rows per grid step.
+
+The streaming kernel (``cs_adam.py``) advances ONE item per grid step so
+that duplicate ids compose through the EMA exactly as in the paper's
+per-item algorithm.  After the dedup pre-pass (``dedup.py``) the batch is
+collision-free in id-space, and the per-item ordering no longer matters:
+the batched step over the tile is algebraically identical for ids that
+never share a sketch bucket (DESIGN.md §10).  That removes the throughput
+ceiling:
+
+  * the gradient rows and the parameter-update rows move through the
+    normal double-buffered BlockSpec pipeline, ``TILE`` rows per step —
+    the compiler overlaps the step ``t+1`` fetch with step ``t`` compute;
+  * the sketches stay in ``pl.ANY`` (HBM) and each step issues all
+    ``depth × TILE`` row DMAs at once (overlapped, one wait), instead of
+    the streaming kernel's per-item round trip;
+  * the row update itself is vectorized over the (TILE, d) block on the
+    VPU, with the depth-way median/min unchanged.
+
+Bucket collisions *within* a tile (two unique ids hashing to the same
+bucket of hash row ``j``) still need scatter-ADD semantics, which the
+write-back DMAs alone cannot provide.  The kernel folds an intra-tile
+segment-sum into a (TILE, TILE) equality-matrix matmul:
+
+    eq_j[r, r']  = 1 if bucket_j[r] == bucket_j[r']
+    write_j      = gathered_j + eq_j @ contribution_j
+
+Duplicate-bucket rows then write back *identical* fully-accumulated
+values, so any DMA completion order is correct.  Estimates still read the
+pre-tile sketch — batch semantics inside a tile, streaming semantics
+across tiles (tile t+1 observes tile t's writes through the sequential
+TPU grid; see cs_update.py for the same race-freedom argument).
+
+Rows past ``n_valid`` (dedup/tile padding) contribute exactly zero to
+every sketch bucket and emit zero update rows.
+
+Oracle: ``ref.adam_fused_ref`` on collision-free batches (exact);
+``tests/test_backends.py`` quantifies the colliding-batch tolerance.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_TILE = 8
+
+
+def _median3(a, b, c):
+    hi = jnp.maximum(jnp.maximum(a, b), c)
+    lo = jnp.minimum(jnp.minimum(a, b), c)
+    return a + b + c - hi - lo
+
+
+def _median(rows):
+    if len(rows) == 1:
+        return rows[0]
+    if len(rows) == 3:
+        return _median3(*rows)
+    return jnp.median(jnp.stack(rows), axis=0)
+
+
+def _tile_vec(ref, j, base, tile):
+    """(tile,) vector of scalar-prefetch entries ref[j, base:base+tile]."""
+    return jnp.stack([ref[j, base + r] for r in range(tile)])
+
+
+def _eq_matrix(bkt):
+    """(tile, tile) float32 bucket-equality matrix for one hash row."""
+    return (bkt[:, None] == bkt[None, :]).astype(jnp.float32)
+
+
+def _tiled_kernel(depth: int, tile: int, track_m: bool,
+                  bm_ref, sm_ref, bv_ref, nv_ref,   # scalar prefetch (SMEM)
+                  hyper, g_blk,                     # SMEM hypers, VMEM grads
+                  M_any, V_any,                     # sketches, pl.ANY (HBM)
+                  M_out, V_out, upd_out,            # aliased outs + updates
+                  m_scr, v_scr, sem):               # scratch VMEM + DMA sem
+    t = pl.program_id(0)
+    base = t * tile
+    lr, b1, b2, eps, bc1, bc2 = (hyper[0], hyper[1], hyper[2], hyper[3],
+                                 hyper[4], hyper[5])
+
+    # ---- DMA in all depth×tile sketch rows, one overlapped burst ---------
+    copies = []
+    if track_m:
+        for j in range(depth):
+            for r in range(tile):
+                copies.append(pltpu.async_copy(
+                    M_out.at[j, pl.ds(bm_ref[j, base + r], 1), :],
+                    m_scr.at[j, pl.ds(r, 1)], sem))
+    for j in range(depth):
+        for r in range(tile):
+            copies.append(pltpu.async_copy(
+                V_out.at[j, pl.ds(bv_ref[j, base + r], 1), :],
+                v_scr.at[j, pl.ds(r, 1)], sem))
+    for c in copies:
+        c.wait()
+
+    g = g_blk[:, :]                                         # (tile, d)
+    row_pos = base + jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)
+    valid = (row_pos < nv_ref[0]).astype(jnp.float32)       # (tile, 1)
+
+    # ---- 1st moment: median estimate, batched over the tile ---------------
+    if track_m:
+        sgn = [_tile_vec(sm_ref, j, base, tile) for j in range(depth)]
+        eq_m = [_eq_matrix(_tile_vec(bm_ref, j, base, tile))
+                for j in range(depth)]
+        rows = [m_scr[j] * sgn[j][:, None] for j in range(depth)]
+        m_old = _median(rows)
+        dm = (1.0 - b1) * (g - m_old) * valid
+        for j in range(depth):
+            contrib = sgn[j][:, None] * dm                  # (tile, d)
+            m_scr[j] = m_scr[j] + jax.lax.dot(
+                eq_m[j], contrib, preferred_element_type=jnp.float32)
+        mhat = (m_old + dm) / bc1
+    else:
+        mhat = g
+
+    # ---- 2nd moment: min estimate (count-min) ------------------------------
+    eq_v = [_eq_matrix(_tile_vec(bv_ref, j, base, tile)) for j in range(depth)]
+    v_old = functools.reduce(jnp.minimum, [v_scr[j] for j in range(depth)])
+    dv = (1.0 - b2) * (g * g - v_old) * valid
+    for j in range(depth):
+        v_scr[j] = v_scr[j] + jax.lax.dot(
+            eq_v[j], dv, preferred_element_type=jnp.float32)
+    v_new = jnp.maximum(v_old + dv, 0.0)
+
+    upd_out[:, :] = (valid * (-lr) * mhat /
+                     (jnp.sqrt(v_new / bc2) + eps)).astype(upd_out.dtype)
+
+    # ---- DMA back (duplicate buckets write identical accumulated rows) ----
+    copies = []
+    if track_m:
+        for j in range(depth):
+            for r in range(tile):
+                copies.append(pltpu.async_copy(
+                    m_scr.at[j, pl.ds(r, 1)],
+                    M_out.at[j, pl.ds(bm_ref[j, base + r], 1), :], sem))
+    for j in range(depth):
+        for r in range(tile):
+            copies.append(pltpu.async_copy(
+                v_scr.at[j, pl.ds(r, 1)],
+                V_out.at[j, pl.ds(bv_ref[j, base + r], 1), :], sem))
+    for c in copies:
+        c.wait()
+
+
+def cs_adam_tiled(M: Optional[jnp.ndarray], V: jnp.ndarray,
+                  bm: Optional[jnp.ndarray], sm: Optional[jnp.ndarray],
+                  bv: jnp.ndarray, g: jnp.ndarray, *,
+                  lr: float, b1: float, b2: float, eps: float,
+                  bc1: float, bc2: float,
+                  n_valid=None, tile: int = DEFAULT_TILE,
+                  interpret: bool = False
+                  ) -> Tuple[Optional[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    """Batch-parallel CS-Adam over ``k`` COLLISION-FREE (deduplicated) rows.
+
+    Same contract as ``cs_adam.cs_adam_fused`` plus:
+
+    n_valid: rows at positions >= n_valid are padding — their gradients are
+        ignored and their update rows are zero.  Defaults to ``k``.
+    tile:   rows per grid step; ``k`` must be a multiple (use
+        ``dedup.pad_to_multiple``).
+
+    ``M``/``bm``/``sm`` may be None for the β₁=0 (RMSProp) variant.
+    """
+    depth, w, d = V.shape
+    k = g.shape[0]
+    if k % tile != 0:
+        raise ValueError(f"k={k} must be a multiple of tile={tile} "
+                         "(pad with dedup.pad_to_multiple)")
+    track_m = M is not None
+    if not track_m:
+        # keep the kernel signature static: feed V twice, ignore the M slots
+        M_in, bm_in, sm_in = V, bv, jnp.ones_like(bv, jnp.float32)
+    else:
+        M_in, bm_in, sm_in = M, bm, sm.astype(jnp.float32)
+
+    hyper = jnp.array([lr, b1, b2, eps, bc1, bc2], jnp.float32)
+    nv = jnp.asarray(k if n_valid is None else n_valid,
+                     jnp.int32).reshape((1,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,      # bm, sm, bv, n_valid
+        grid=(k // tile,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # hyper
+            pl.BlockSpec((tile, d), lambda t, *_: (t, 0)),  # grad tile
+            pl.BlockSpec(memory_space=pl.ANY),              # M (HBM)
+            pl.BlockSpec(memory_space=pl.ANY),              # V (HBM)
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),              # M'
+            pl.BlockSpec(memory_space=pl.ANY),              # V'
+            pl.BlockSpec((tile, d), lambda t, *_: (t, 0)),  # updates
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((depth, tile, d), jnp.float32),
+            pltpu.VMEM((depth, tile, d), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_tiled_kernel, depth, tile, track_m),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(M_in.shape, M_in.dtype),
+            jax.ShapeDtypeStruct(V.shape, V.dtype),
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+        ],
+        # alias M (operand 6 = 4 prefetch + hyper + g) and V (operand 7)
+        input_output_aliases={6: 0, 7: 1},
+        interpret=interpret,
+    )
+    M_out, V_out, upd = fn(bm_in, sm_in, bv, nv, hyper, g, M_in, V)
+    return (M_out if track_m else None), V_out, upd

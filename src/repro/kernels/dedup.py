@@ -1,0 +1,131 @@
+"""Dedup pre-pass for the batch-parallel CS-Adam pipeline (DESIGN.md §10).
+
+The paper's per-item optimizers stream gradient rows one at a time so that
+duplicate feature ids compose through the EMA.  In the sparse-embedding
+regime the mini-batch is better described as *one* gradient per touched
+parameter row: duplicate occurrences of an id are occurrences of the SAME
+row of ∂L/∂E, and summing them first is exactly what ``jnp.zeros(n,
+d).at[ids].add(rows)`` (the dense gradient) would produce.  After the sum
+the batch is collision-free in id-space, and for collision-free batches
+the batched sketch step is bit-identical to the per-item algorithm
+(core/sketch.py, "Canonical batch semantics") — which is what unlocks the
+tiled, embarrassingly parallel kernel in ``cs_adam_tiled.py``.
+
+Everything here is static-shape / jit-safe: the deduplicated batch keeps
+the input length ``k`` (padded past ``n_unique`` with ``fill_id`` and zero
+rows) so the downstream Pallas grid is compile-time constant.
+
+Pipeline:
+
+    d = dedup_rows(ids, rows)          # XLA sort + segment_sum
+    ... run any collision-free batch kernel on (d.unique_ids, d.rows) ...
+    upd_per_input = scatter_back(d, upd_unique)   # inverse permutation
+
+``scatter_back`` places each unique row's result at the FIRST occurrence
+of its id and zeros at later duplicates, so the caller's
+``params.at[ids].add(upd)`` applies each parameter update exactly once.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DedupBatch(NamedTuple):
+    """A collision-free (in id-space) view of a (ids, rows) gradient batch.
+
+    All arrays keep the input length ``k``; entries at positions
+    ``>= n_unique`` are padding (``unique_ids == fill_id``, ``rows == 0``).
+    """
+
+    unique_ids: jnp.ndarray   # (k,) int32 — sorted unique ids, then fill_id
+    rows: jnp.ndarray         # (k, d) — segment-summed gradient rows
+    inv: jnp.ndarray          # (k,) int32 — input position -> unique slot
+    first_pos: jnp.ndarray    # (k,) int32 — unique slot -> first input
+                              #   position of that id (k for padding slots)
+    n_unique: jnp.ndarray     # () int32 — number of live unique slots
+
+    @property
+    def mask(self) -> jnp.ndarray:
+        """(k,) float32 — 1.0 for live unique slots, 0.0 for padding."""
+        k = self.unique_ids.shape[0]
+        return (jnp.arange(k) < self.n_unique).astype(jnp.float32)
+
+
+def dedup_rows(ids: jnp.ndarray, rows: jnp.ndarray,
+               fill_id: int = -1) -> DedupBatch:
+    """Sort ``ids``, merge duplicates by summing their gradient rows.
+
+    ids:  (k,) int32 — feature / embedding-row ids, duplicates allowed.
+    rows: (k, d)     — one gradient row per id occurrence.
+
+    Uses a stable XLA sort + ``jax.ops.segment_sum``; O(k log k) work,
+    fully parallel, no data-dependent shapes.
+    """
+    k = ids.shape[0]
+    if k == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return DedupBatch(unique_ids=z, rows=rows, inv=z, first_pos=z,
+                          n_unique=jnp.zeros((), jnp.int32))
+    order = jnp.argsort(ids, stable=True).astype(jnp.int32)
+    sorted_ids = ids[order]
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), jnp.int32),
+         (sorted_ids[1:] != sorted_ids[:-1]).astype(jnp.int32)])
+    seg = jnp.cumsum(is_start) - 1                       # (k,) segment index
+    n_unique = seg[-1] + 1
+    unique_ids = jnp.full((k,), fill_id, jnp.int32).at[seg].set(sorted_ids)
+    summed = jax.ops.segment_sum(rows[order], seg, num_segments=k)
+    inv = jnp.zeros((k,), jnp.int32).at[order].set(seg)
+    # stable sort => within a segment `order` ascends, so min = first input
+    # occurrence of the id; padding slots keep the out-of-range sentinel k.
+    first_pos = jnp.full((k,), k, jnp.int32).at[seg].min(order)
+    return DedupBatch(unique_ids=unique_ids, rows=summed, inv=inv,
+                      first_pos=first_pos, n_unique=n_unique)
+
+
+def scatter_back(batch: DedupBatch, unique_out: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of the dedup: (k, d) results over unique slots -> (k, d)
+    results aligned with the ORIGINAL id positions.
+
+    The full result lands at the first occurrence of each id; later
+    duplicates get zero rows, so ``params.at[ids].add(out)`` applies each
+    unique update exactly once regardless of multiplicity.
+    """
+    k = batch.inv.shape[0]
+    out = jnp.zeros((k,) + unique_out.shape[1:], unique_out.dtype)
+    # out-of-range first_pos entries (padding slots) are dropped by the
+    # default scatter mode.
+    return out.at[batch.first_pos].set(
+        unique_out * batch.mask[:, None].astype(unique_out.dtype),
+        mode="drop")
+
+
+def gather_back(batch: DedupBatch, unique_out: jnp.ndarray) -> jnp.ndarray:
+    """Alternative inverse: every occurrence (duplicates included) receives
+    its unique slot's row — the right choice when the caller indexes rather
+    than accumulates (e.g. returning per-example statistics)."""
+    return unique_out[batch.inv]
+
+
+def pad_to_multiple(batch: DedupBatch, multiple: int,
+                    fill_id: int = -1) -> DedupBatch:
+    """Pad every k-length array so the tiled kernel's grid divides evenly.
+
+    Padding slots look exactly like dedup padding (fill_id / zero rows /
+    sentinel first_pos) and are already excluded by ``mask``/``n_unique``.
+    """
+    k = batch.unique_ids.shape[0]
+    if multiple <= 1 or k % multiple == 0 and k > 0:
+        return batch
+    k_pad = max(-(-k // multiple) * multiple, multiple)
+    pad = k_pad - k
+    return DedupBatch(
+        unique_ids=jnp.pad(batch.unique_ids, (0, pad),
+                           constant_values=fill_id),
+        rows=jnp.pad(batch.rows, ((0, pad), (0, 0))),
+        inv=batch.inv,
+        first_pos=jnp.pad(batch.first_pos, (0, pad), constant_values=k),
+        n_unique=batch.n_unique)

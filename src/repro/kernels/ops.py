@@ -13,9 +13,12 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import sketch as cs
 from repro.core.sketch import SketchSpec
+from repro.kernels import dedup as dd
 from repro.kernels import ref
 from repro.kernels.cs_adam import cs_adam_fused
+from repro.kernels.cs_adam_tiled import DEFAULT_TILE, cs_adam_tiled
 from repro.kernels.cs_query import cs_query
 from repro.kernels.cs_update import cs_update
 
@@ -50,6 +53,109 @@ def sketch_update(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
     return ref.cs_update_ref(S, buckets, signs, delta)
 
 
+def _adam_hypers(step: jnp.ndarray, lr, b1: float, b2: float):
+    """(eta, bc1, bc2) — schedule + bias corrections at ``step``."""
+    t = step.astype(jnp.float32)
+    eta = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+    return eta, 1.0 - b1 ** t, 1.0 - b2 ** t
+
+
+def _adam_addressing(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
+                     ids: jnp.ndarray):
+    if spec_m is not None:
+        bm, sm = _addressing(spec_m, ids)
+    else:
+        bm, sm = None, None
+    bv, _ = _addressing(spec_v, ids)
+    return bm, sm, bv
+
+
+def adam_rows_ref(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
+                  M: Optional[jnp.ndarray], V: jnp.ndarray,
+                  ids: jnp.ndarray, g: jnp.ndarray, step: jnp.ndarray, *,
+                  lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+                  ) -> Tuple[Optional[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    """'ref' backend: pure-jnp ``lax.scan`` per-item oracle (paper Alg. 4)."""
+    bm, sm, bv = _adam_addressing(spec_m, spec_v, ids)
+    eta, bc1, bc2 = _adam_hypers(step, lr, b1, b2)
+    return ref.adam_fused_ref(M, V, bm, sm, bv, g, lr=eta, b1=b1, b2=b2,
+                              eps=eps, bc1=bc1, bc2=bc2)
+
+
+def adam_rows_stream(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
+                     M: Optional[jnp.ndarray], V: jnp.ndarray,
+                     ids: jnp.ndarray, g: jnp.ndarray, step: jnp.ndarray, *,
+                     lr, b1: float = 0.9, b2: float = 0.999,
+                     eps: float = 1e-8, interpret: Optional[bool] = None
+                     ) -> Tuple[Optional[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    """'stream' backend: one-item-per-grid-step Pallas kernel — exact
+    per-item semantics, sequential over the batch."""
+    bm, sm, bv = _adam_addressing(spec_m, spec_v, ids)
+    eta, bc1, bc2 = _adam_hypers(step, lr, b1, b2)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return cs_adam_fused(M, V, bm, sm, bv, g, lr=eta, b1=b1, b2=b2,
+                         eps=eps, bc1=bc1, bc2=bc2, interpret=interpret)
+
+
+def adam_rows_xla(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
+                  M: Optional[jnp.ndarray], V: jnp.ndarray,
+                  ids: jnp.ndarray, g: jnp.ndarray, step: jnp.ndarray, *,
+                  lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+                  ) -> Tuple[Optional[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    """'xla' backend: the dedup pre-pass + the vectorized jnp batch step —
+    no Pallas, fully parallel under XLA.  Identical to 'tiled' with one
+    tile spanning the whole batch; the per-host best off-TPU."""
+    if ids.shape[0] == 0:
+        return M, V, jnp.zeros(g.shape, jnp.float32)
+    eta, bc1, bc2 = _adam_hypers(step, lr, b1, b2)
+    batch = dd.dedup_rows(ids, g)
+    mask = batch.mask[:, None]
+    uids, rows = batch.unique_ids, batch.rows
+    if spec_m is not None:
+        m_old = cs.query(spec_m, M, uids)
+        dm = (1.0 - b1) * (rows - m_old) * mask
+        M = cs.update(spec_m, M, uids, dm)
+        mhat = (m_old + dm) / bc1
+    else:
+        mhat = rows
+    v_old = cs.query(spec_v, V, uids)
+    dv = (1.0 - b2) * (rows * rows - v_old) * mask
+    V = cs.update(spec_v, V, uids, dv)
+    vhat = jnp.maximum(v_old + dv, 0.0) / bc2
+    upd = mask * (-eta) * mhat / (jnp.sqrt(vhat) + eps)
+    return M, V, dd.scatter_back(batch, upd)
+
+
+def adam_rows_tiled(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
+                    M: Optional[jnp.ndarray], V: jnp.ndarray,
+                    ids: jnp.ndarray, g: jnp.ndarray, step: jnp.ndarray, *,
+                    lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                    tile: int = DEFAULT_TILE,
+                    interpret: Optional[bool] = None
+                    ) -> Tuple[Optional[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
+    """'tiled' backend: dedup + segment-sum pre-pass, then the batch-parallel
+    ``cs_adam_tiled`` kernel over TILE collision-free rows per grid step.
+
+    Duplicate ids are merged up front (their gradient rows are what a dense
+    gradient would have summed anyway); the resulting updates are scattered
+    back so that only the FIRST occurrence of each id carries the update —
+    ``params.at[ids].add(upd)`` applies it exactly once.
+    """
+    if ids.shape[0] == 0:
+        return M, V, jnp.zeros(g.shape, jnp.float32)
+    eta, bc1, bc2 = _adam_hypers(step, lr, b1, b2)
+    batch = dd.pad_to_multiple(dd.dedup_rows(ids, g), tile)
+    bm, sm, bv = _adam_addressing(spec_m, spec_v, batch.unique_ids)
+    if interpret is None:
+        interpret = not _on_tpu()
+    M_out, V_out, upd_u = cs_adam_tiled(
+        M, V, bm, sm, bv, batch.rows, lr=eta, b1=b1, b2=b2, eps=eps,
+        bc1=bc1, bc2=bc2, n_valid=batch.n_unique, tile=tile,
+        interpret=interpret)
+    return M_out, V_out, dd.scatter_back(batch, upd_u)
+
+
 def adam_rows_fused(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
                     M: Optional[jnp.ndarray], V: jnp.ndarray,
                     ids: jnp.ndarray, g: jnp.ndarray,
@@ -58,20 +164,12 @@ def adam_rows_fused(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
                     ) -> Tuple[Optional[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
     """Streaming fused CS-Adam over ``k`` rows (paper Alg. 4 semantics).
 
-    Pallas single-pass kernel on TPU, ``lax.scan`` oracle elsewhere."""
-    track_m = spec_m is not None
-    if track_m:
-        bm, sm = _addressing(spec_m, ids)
-    else:
-        bm, sm = None, None
-    bv, _ = _addressing(spec_v, ids)
-    t = step.astype(jnp.float32)
-    eta = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
-    bc1 = 1.0 - b1 ** t
-    bc2 = 1.0 - b2 ** t
+    Pallas single-pass kernel on TPU, ``lax.scan`` oracle elsewhere.
+    Kept for callers that want the exact per-item semantics regardless of
+    the registry's backend selection."""
     if force == "pallas" or (force is None and _on_tpu()):
-        return cs_adam_fused(M, V, bm, sm, bv, g, lr=eta, b1=b1, b2=b2,
-                             eps=eps, bc1=bc1, bc2=bc2,
-                             interpret=not _on_tpu())
-    return ref.adam_fused_ref(M, V, bm, sm, bv, g, lr=eta, b1=b1, b2=b2,
-                              eps=eps, bc1=bc1, bc2=bc2)
+        return adam_rows_stream(spec_m, spec_v, M, V, ids, g, step, lr=lr,
+                                b1=b1, b2=b2, eps=eps,
+                                interpret=not _on_tpu())
+    return adam_rows_ref(spec_m, spec_v, M, V, ids, g, step, lr=lr,
+                         b1=b1, b2=b2, eps=eps)

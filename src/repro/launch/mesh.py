@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.distributed.sharding import make_mesh_compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """v5e pod mesh: 16×16 = 256 chips per pod; 2 pods = 512 chips.
@@ -16,8 +18,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     (outer DP + FSDP for 400B-class models) when ``multi_pod``."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -25,9 +26,7 @@ def make_host_mesh(data: int = 1, model: int = 1):
     CPU integration tests."""
     n = len(jax.devices())
     data = min(data, n // model) or 1
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((data, model), ("data", "model"))
 
 
 # v5e hardware constants for the roofline terms (per chip).

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import optimizers as opt_lib
+from repro.core.optimizers import SketchHParams
 from repro.distributed import sharding as shd
 from repro.models.config import ArchConfig
 
@@ -160,3 +162,41 @@ def make_serve_step(cfg: ArchConfig, *, batch: int, max_seq: int) -> ServeStep:
 
     return ServeStep(cfg=cfg, prefill_fn=prefill_fn, decode_fn=decode_fn,
                      max_seq=max_seq, batch=batch)
+
+
+def make_online_adapt_step(n_rows: int, dim: int, *, lr=1e-4,
+                           b2: float = 0.999, eps: float = 1e-8,
+                           hparams: Optional[SketchHParams] = None,
+                           path: str = "serve_adapt"):
+    """Serve-time sparse adaptation of an embedding table.
+
+    Serving workloads that personalize online (session embeddings, bandit
+    heads, retrieval tables) update a handful of rows per decode batch.
+    This is exactly the sparse-rows regime: the auxiliary state lives in a
+    count-min sketch — a few MB instead of a second table — and the step
+    routes through the same kernel-backend registry as training
+    (``repro.kernels``; tiled Pallas pipeline on TPU).
+
+    Uses the β₁=0 (Theorem 5.1 / RMSProp) variant: no first moment, which
+    keeps serve-time state minimal and matches the paper's extreme-scale
+    configuration.
+
+    Returns ``(init_state_fn, adapt_fn)``:
+
+        opt_state          = init_state_fn()
+        table', opt_state' = adapt_fn(table, opt_state, ids, grad_rows)
+    """
+    hp = hparams if hparams is not None else SketchHParams()
+    opt = opt_lib.sparse_rows_adam(
+        lr, b2=b2, eps=eps, shape=(n_rows, dim), path=path, hparams=hp,
+        track_first_moment=False)
+
+    def init_state_fn():
+        return opt.init()
+
+    def adapt_fn(table, opt_state, ids, grad_rows):
+        updates, opt_state = opt.update(
+            {"ids": ids, "rows": grad_rows}, opt_state)
+        return opt_lib.apply_sparse_updates(table, updates), opt_state
+
+    return init_state_fn, adapt_fn

@@ -47,10 +47,17 @@ def family_module(cfg: ArchConfig):
 
 
 def build_optimizer(cfg: ArchConfig, mode: str, lr=1e-3,
-                    cleaning: Optional[CleaningSchedule] = None) -> Transform:
+                    cleaning: Optional[CleaningSchedule] = None,
+                    kernel_backend: Optional[str] = None) -> Transform:
+    """``kernel_backend`` selects the ``repro.kernels`` registry backend
+    for the SPARSE-ROWS (ids, rows) paths — ``make_sparse_embedding_step``
+    and any ``adam_sparse_rows`` caller sharing these hparams.  The dense
+    whole-gradient leaf path of the ``countsketch_*`` transforms is an
+    XLA chunked scan and is backend-independent (DESIGN.md §10)."""
     policy = SketchPolicy(min_rows=1024)
     hp = SketchHParams(compression=cfg.sketch_compression,
-                       depth=cfg.sketch_depth)
+                       depth=cfg.sketch_depth,
+                       backend=kernel_backend)
     if mode == "dense_adam":
         return opt_lib.adam(lr)
     if mode == "dense_adagrad":
@@ -114,9 +121,11 @@ def make_train_step(cfg: ArchConfig, *, optimizer: str = "cs_adam",
                     lr=1e-3, remat: bool = True,
                     sampled_softmax: bool = False,
                     grad_clip: Optional[float] = 1.0,
-                    cleaning: Optional[CleaningSchedule] = None) -> TrainStep:
+                    cleaning: Optional[CleaningSchedule] = None,
+                    kernel_backend: Optional[str] = None) -> TrainStep:
     mod = family_module(cfg)
-    opt = build_optimizer(cfg, optimizer, lr=lr, cleaning=cleaning)
+    opt = build_optimizer(cfg, optimizer, lr=lr, cleaning=cleaning,
+                          kernel_backend=kernel_backend)
     clip = (opt_lib.clip_by_global_norm(grad_clip)
             if grad_clip is not None else (lambda g: g))
 
@@ -139,3 +148,44 @@ def make_train_step(cfg: ArchConfig, *, optimizer: str = "cs_adam",
 
     return TrainStep(cfg=cfg, init_fn=init_fn, step_fn=step_fn,
                      optimizer=opt, batch_template={})
+
+
+def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
+                               b1: float = 0.9, b2: float = 0.999,
+                               eps: float = 1e-8,
+                               hparams: Optional[SketchHParams] = None,
+                               track_first_moment: bool = True,
+                               cleaning: Optional[CleaningSchedule] = None,
+                               path: str = "sparse_embedding"):
+    """Train step for the (ids, grad-rows) regime — LM1B-style embedding /
+    softmax tables and extreme classification, where per-step work is
+    O(touched rows), not O(n).
+
+    Returns ``(init_fn, step_fn, optimizer)``:
+
+        table     = init_fn(rng)                  # (n_rows, dim) f32
+        opt_state = optimizer.init()
+        table', opt_state' = step_fn(table, opt_state, ids, grad_rows)
+
+    The optimizer state is the count-sketch pair; the step routes through
+    the kernel backend named by ``hparams.backend`` (tiled Pallas pipeline
+    on TPU, jnp oracle on CPU — see ``repro.kernels``).  Duplicate ids in
+    a batch are handled by the backend (dedup + segment-sum on the tiled
+    path).
+    """
+    hp = hparams if hparams is not None else SketchHParams()
+    opt = opt_lib.sparse_rows_adam(
+        lr, b1=b1, b2=b2, eps=eps, shape=(n_rows, dim), path=path,
+        hparams=hp, track_first_moment=track_first_moment,
+        cleaning=cleaning)
+
+    def init_fn(rng):
+        scale = 1.0 / jnp.sqrt(jnp.asarray(dim, jnp.float32))
+        return jax.random.normal(rng, (n_rows, dim), jnp.float32) * scale
+
+    def step_fn(table, opt_state, ids, grad_rows):
+        updates, opt_state = opt.update(
+            {"ids": ids, "rows": grad_rows}, opt_state)
+        return opt_lib.apply_sparse_updates(table, updates), opt_state
+
+    return init_fn, step_fn, opt

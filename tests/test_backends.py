@@ -1,0 +1,272 @@
+"""Cross-backend parity: ref | stream | tiled | interpret (DESIGN.md §10).
+
+Three tiers of agreement, from exact to statistical:
+
+  1. stream == ref everywhere (same per-item streaming semantics);
+  2. tiled == ref on COLLISION-FREE batches (the dedup-equivalence
+     argument: once ids are unique and no two ids share a sketch bucket,
+     batch and per-item semantics coincide bit-for-bit);
+  3. on colliding batches tiled implements "batch within a tile,
+     streaming across tiles" — asserted EXACTLY against a jnp oracle of
+     that semantics, and within tolerance against ref (the residual is
+     median/min estimator noise, quantified here with fixed seeds).
+
+Pallas backends run in interpret mode on CPU (kernel body in Python,
+BlockSpecs/DMAs as on TPU).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels as K
+from repro.core import sketch as cs
+from repro.kernels import dedup as dd, ref
+
+
+LR = dict(lr=1e-2, b1=0.9, b2=0.999, eps=1e-8)
+
+
+def _specs(n, d, depth, *, compression=4.0, width_multiple=16, seed=0,
+           identity=False):
+    mk = functools.partial(cs.for_param, (n, d), compression=compression,
+                           depth=depth, width_multiple=width_multiple,
+                           identity=identity)
+    return (mk(signed=True, seed=10 + seed), mk(signed=False, seed=20 + seed))
+
+
+def _states(spec_m, spec_v, track_m, seed=0):
+    rng = np.random.RandomState(seed)
+    M = jnp.asarray(rng.randn(*spec_m.shape), jnp.float32) if track_m else None
+    V = jnp.abs(jnp.asarray(rng.randn(*spec_v.shape), jnp.float32))
+    return M, V
+
+
+def _applied(n, d, ids, upd):
+    out = np.zeros((n, d), np.float32)
+    np.add.at(out, np.asarray(ids), np.asarray(upd))
+    return out
+
+
+def _run(backend, spec_m, spec_v, M, V, ids, g, step=2, **kw):
+    kw = {**LR, **kw}
+    return K.adam_rows(spec_m if M is not None else None, spec_v,
+                       M, V, ids, g, jnp.asarray(step, jnp.int32),
+                       backend=backend, **kw)
+
+
+def test_registry_contents():
+    assert K.backends() == ("ref", "xla", "stream", "tiled", "interpret")
+    assert K.resolve_backend("tiled") == "tiled"
+    # auto resolves per host: tiled on TPU, the vectorized jnp path off it
+    assert K.resolve_backend(None) == (
+        "tiled" if jax.default_backend() == "tpu" else "xla")
+    with pytest.raises(KeyError):
+        K.resolve_backend("nope")
+
+
+@pytest.mark.parametrize("depth", [1, 3])
+@pytest.mark.parametrize("track_m", [True, False])
+def test_stream_matches_ref_exactly(depth, track_m):
+    """Both implement the paper's per-item algorithm — exact agreement,
+    duplicates and collisions included."""
+    n, d, k = 256, 128, 12
+    spec_m, spec_v = _specs(n, d, depth, seed=depth)
+    M, V = _states(spec_m, spec_v, track_m, seed=depth)
+    rng = np.random.RandomState(depth)
+    ids = jnp.asarray(rng.randint(0, n, k), jnp.int32)   # duplicates likely
+    g = jnp.asarray(rng.randn(k, d), jnp.float32)
+    b1 = 0.9 if track_m else 0.0
+    r = _run("ref", spec_m, spec_v, M, V, ids, g, b1=b1)
+    s = _run("stream", spec_m, spec_v, M, V, ids, g, b1=b1)
+    for a, b in zip(r, s):
+        if a is None:
+            assert b is None
+            continue
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("depth", [1, 3])
+@pytest.mark.parametrize("track_m", [True, False])
+def test_tiled_matches_per_item_oracle_collision_free(depth, track_m):
+    """Identity hashing (bucket = id, width >= n) + unique ids: a
+    collision-free batch, where tiled must equal ``ref.adam_fused_ref``
+    (the per-item oracle) exactly — the acceptance bar of DESIGN.md §10."""
+    n, d, k = 64, 128, 16
+    spec_m, spec_v = _specs(n, d, depth, identity=True, seed=depth)
+    M, V = _states(spec_m, spec_v, track_m, seed=depth)
+    rng = np.random.RandomState(depth + 5)
+    ids = jnp.asarray(rng.permutation(n)[:k], jnp.int32)  # unique
+    g = jnp.asarray(rng.randn(k, d), jnp.float32)
+    b1 = 0.9 if track_m else 0.0
+    r = _run("ref", spec_m, spec_v, M, V, ids, g, b1=b1)
+    for backend in ("xla", "tiled", "interpret"):
+        t = _run(backend, spec_m, spec_v, M, V, ids, g, b1=b1)
+        for a, b in zip(r, t):
+            if a is None:
+                assert b is None
+                continue
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+
+
+@pytest.mark.parametrize("depth", [1, 3])
+def test_tiled_matches_ref_real_hash_no_bucket_collisions(depth):
+    """Real multiply-shift hashing, fixed seed VERIFIED collision-free for
+    these ids — exact agreement again (the equivalence does not depend on
+    identity mode)."""
+    n, d, k = 4096, 128, 8
+    spec_m, spec_v = _specs(n, d, depth, compression=2.0,
+                            width_multiple=256, seed=depth)
+    rng = np.random.RandomState(depth)
+    ids = jnp.asarray(rng.choice(n, k, replace=False), jnp.int32)
+    for spec in (spec_m, spec_v):
+        b = np.asarray(spec.family.bucket(ids))
+        assert all(len(set(b[j])) == k for j in range(depth)), \
+            "precondition: pick a seed with no bucket collisions"
+    M, V = _states(spec_m, spec_v, True, seed=depth)
+    g = jnp.asarray(rng.randn(k, d), jnp.float32)
+    r = _run("ref", spec_m, spec_v, M, V, ids, g)
+    t = _run("tiled", spec_m, spec_v, M, V, ids, g)
+    for a, b in zip(r, t):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def _tile_batch_oracle(M, V, bm, sm, bv, g, *, lr, b1, b2, eps, bc1, bc2,
+                       tile, n_valid):
+    """jnp reference of the tiled semantics: batch within a tile,
+    streaming across tiles."""
+    k, _ = g.shape
+    track_m = M is not None
+    upds = []
+    for t0 in range(0, k, tile):
+        sl = slice(t0, t0 + tile)
+        valid = (np.arange(t0, t0 + tile) < n_valid).astype(
+            np.float32)[:, None]
+        gc = g[sl]
+        if track_m:
+            m_old = ref.cs_query_ref(M, bm[:, sl], sm[:, sl])
+            dm = (1 - b1) * (gc - m_old) * valid
+            M = ref.cs_update_ref(M, bm[:, sl], sm[:, sl], dm)
+            mhat = (m_old + dm) / bc1
+        else:
+            mhat = gc
+        v_old = ref.cs_query_ref(V, bv[:, sl], None)
+        dv = (1 - b2) * (gc * gc - v_old) * valid
+        V = ref.cs_update_ref(V, bv[:, sl], None, dv)
+        v_new = jnp.maximum(v_old + dv, 0.0)
+        upds.append(valid * (-lr) * mhat / (jnp.sqrt(v_new / bc2) + eps))
+    return M, V, jnp.concatenate(upds)
+
+
+@pytest.mark.parametrize("depth", [1, 3])
+@pytest.mark.parametrize("track_m", [True, False])
+def test_tiled_exact_vs_its_oracle_under_collisions(depth, track_m):
+    """Heavy bucket collisions (32 unique ids, 16-wide sketch): the tiled
+    kernel must still match its own semantics EXACTLY — the intra-tile
+    equality-matrix accumulation and the cross-tile streaming are not
+    allowed to lose or double-count mass."""
+    from repro.kernels.cs_adam_tiled import cs_adam_tiled
+    width, d, k, tile = 16, 128, 32, 8
+    rng = np.random.RandomState(depth)
+    M = jnp.asarray(rng.randn(depth, width, d), jnp.float32) \
+        if track_m else None
+    V = jnp.abs(jnp.asarray(rng.randn(depth, width, d), jnp.float32))
+    bm = jnp.asarray(rng.randint(0, width, (depth, k)), jnp.int32)
+    bv = jnp.asarray(rng.randint(0, width, (depth, k)), jnp.int32)
+    sm = jnp.asarray(rng.choice([-1.0, 1.0], (depth, k)), jnp.float32)
+    g = jnp.asarray(rng.randn(k, d), jnp.float32)
+    kw = dict(lr=1e-2, b1=0.9 if track_m else 0.0, b2=0.999, eps=1e-8,
+              bc1=0.19, bc2=0.002)
+    got = cs_adam_tiled(M, V, bm if track_m else None,
+                        sm if track_m else None, bv, g, interpret=True,
+                        tile=tile, n_valid=k - 3, **kw)
+    want = _tile_batch_oracle(M, V, bm if track_m else None,
+                              sm if track_m else None, bv, g,
+                              tile=tile, n_valid=k - 3, **kw)
+    for a, b in zip(got, want):
+        if b is None or (track_m is False and a is None):
+            continue
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+@pytest.mark.parametrize("depth", [1, 3])
+def test_tiled_vs_ref_tolerance_under_collisions(depth):
+    """Colliding batches: streaming (ref) and tiled legitimately differ by
+    estimator noise.  Fixed seeds; the applied parameter delta must stay
+    within the empirically calibrated envelope (observed max 0.47)."""
+    n, d, k = 4096, 64, 32
+    worst = 0.0
+    for seed in range(4):
+        spec_m, spec_v = _specs(n, d, depth, compression=16.0,
+                                width_multiple=64, seed=seed)
+        M, V = cs.init(spec_m), cs.init(spec_v)
+        rng = np.random.RandomState(seed)
+        ids = jnp.asarray(rng.choice(n, k, replace=False), jnp.int32)
+        g = jnp.asarray(rng.randn(k, d), jnp.float32)
+        _, _, ur = _run("ref", spec_m, spec_v, M, V, ids, g)
+        _, _, ut = _run("tiled", spec_m, spec_v, M, V, ids, g)
+        ar, at = _applied(n, d, ids, ur), _applied(n, d, ids, ut)
+        worst = max(worst, np.linalg.norm(ar - at) / np.linalg.norm(ar))
+    assert worst < 0.6, worst
+
+
+@pytest.mark.parametrize("backend", ["tiled", "xla"])
+def test_dedup_backends_apply_duplicates_exactly_once(backend):
+    """Duplicate-heavy batch in identity mode: the dedup backends must
+    apply, per id, exactly the update of the segment-summed gradient —
+    equal to ref run on the pre-merged batch."""
+    n, d = 64, 128
+    spec_m, spec_v = _specs(n, d, 3, identity=True)
+    M, V = _states(spec_m, spec_v, True)
+    rng = np.random.RandomState(0)
+    ids_np = rng.randint(0, 8, 24)                       # ~3× multiplicity
+    ids = jnp.asarray(ids_np, jnp.int32)
+    g = jnp.asarray(rng.randn(24, d), jnp.float32)
+    _, _, ut = _run(backend, spec_m, spec_v, M, V, ids, g)
+    # oracle: merge duplicates first, then the per-item algorithm
+    b = dd.dedup_rows(ids, g)
+    nu = int(b.n_unique)
+    _, _, um = _run("ref", spec_m, spec_v, M, V,
+                    b.unique_ids[:nu], b.rows[:nu])
+    a_t = _applied(n, d, ids, ut)
+    a_m = _applied(n, d, b.unique_ids[:nu], um)
+    np.testing.assert_allclose(a_t, a_m, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["tiled", "xla"])
+def test_empty_batch_is_identity(backend):
+    n, d = 128, 128
+    spec_m, spec_v = _specs(n, d, 3)
+    M, V = _states(spec_m, spec_v, True)
+    ids = jnp.zeros((0,), jnp.int32)
+    g = jnp.zeros((0, d), jnp.float32)
+    Mo, Vo, u = _run(backend, spec_m, spec_v, M, V, ids, g)
+    assert u.shape == (0, d)
+    np.testing.assert_array_equal(np.asarray(Mo), np.asarray(M))
+    np.testing.assert_array_equal(np.asarray(Vo), np.asarray(V))
+
+
+def test_sparse_rows_adam_routes_backends():
+    """optimizer-level entry point: same (table, state) trajectory under
+    'interpret' (forced-interpreter tiled) and 'tiled' backends."""
+    from repro.core import optimizers as O
+    n, d = 512, 128
+    hp_t = O.SketchHParams(compression=4.0, width_multiple=16,
+                           backend="tiled")
+    hp_i = O.SketchHParams(compression=4.0, width_multiple=16,
+                           backend="interpret")
+    rng = np.random.RandomState(0)
+    ids = jnp.asarray(rng.randint(0, n, 16), jnp.int32)
+    rows = jnp.asarray(rng.randn(16, d), jnp.float32)
+    outs = []
+    for hp in (hp_t, hp_i):
+        opt = O.sparse_rows_adam(1e-2, shape=(n, d), hparams=hp)
+        state = opt.init()
+        upd, state = opt.update({"ids": ids, "rows": rows}, state)
+        table = O.apply_sparse_updates(jnp.zeros((n, d)), upd)
+        outs.append((np.asarray(table), np.asarray(state["v"])))
+    np.testing.assert_allclose(outs[0][0], outs[1][0], atol=1e-6)
+    np.testing.assert_allclose(outs[0][1], outs[1][1], atol=1e-6)

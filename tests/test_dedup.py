@@ -1,0 +1,168 @@
+"""Dedup pre-pass: sort/uniquify + segment-sum + inverse permutation.
+
+The equivalence the tiled kernel rests on (DESIGN.md §10): for every id,
+the summed row of its duplicates equals the dense gradient's row, and
+scatter_back ∘ dedup composes to exactly-once application.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.kernels import dedup as dd
+
+
+def _check_batch(ids_np, rows_np, n=64):
+    """Invariants of dedup_rows against the dense-gradient oracle."""
+    k, d = rows_np.shape
+    ids = jnp.asarray(ids_np, jnp.int32)
+    rows = jnp.asarray(rows_np, jnp.float32)
+    b = dd.dedup_rows(ids, rows)
+
+    uniq = sorted(set(ids_np.tolist()))
+    nu = int(b.n_unique)
+    assert nu == len(uniq)
+    np.testing.assert_array_equal(np.asarray(b.unique_ids[:nu]), uniq)
+    assert (np.asarray(b.unique_ids[nu:]) == -1).all()
+
+    # segment sums == dense scatter-add gradient restricted to unique ids
+    dense = np.zeros((n, d), np.float32)
+    np.add.at(dense, ids_np, rows_np)
+    np.testing.assert_allclose(np.asarray(b.rows[:nu]), dense[uniq],
+                               atol=1e-5)
+    assert np.asarray(b.rows[nu:]).sum() == 0.0
+
+    # inverse permutation: every input position points at its id's slot
+    inv = np.asarray(b.inv)
+    np.testing.assert_array_equal(np.asarray(b.unique_ids)[inv], ids_np)
+
+    # first_pos: the first input occurrence, in input order
+    first = np.asarray(b.first_pos[:nu])
+    for slot, i in enumerate(first):
+        assert ids_np[i] == uniq[slot]
+        assert (ids_np[:i] != uniq[slot]).all()
+    return b
+
+
+class TestDedupRows:
+    def test_duplicate_heavy(self):
+        rng = np.random.RandomState(0)
+        ids = rng.randint(0, 6, size=32)            # ~5× multiplicity
+        rows = rng.randn(32, 8).astype(np.float32)
+        _check_batch(ids, rows)
+
+    def test_all_duplicates(self):
+        rows = np.ones((16, 4), np.float32)
+        b = _check_batch(np.full(16, 7), rows)
+        assert int(b.n_unique) == 1
+        np.testing.assert_allclose(np.asarray(b.rows[0]), 16.0)
+
+    def test_already_unique(self):
+        rng = np.random.RandomState(1)
+        ids = rng.permutation(64)[:24]
+        rows = rng.randn(24, 4).astype(np.float32)
+        b = _check_batch(ids, rows)
+        assert int(b.n_unique) == 24
+
+    def test_empty_batch(self):
+        b = dd.dedup_rows(jnp.zeros((0,), jnp.int32), jnp.zeros((0, 8)))
+        assert int(b.n_unique) == 0
+        assert b.unique_ids.shape == (0,)
+        assert dd.scatter_back(b, b.rows).shape == (0, 8)
+        assert dd.gather_back(b, b.rows).shape == (0, 8)
+
+    def test_single_row(self):
+        b = _check_batch(np.asarray([3]), np.ones((1, 2), np.float32))
+        assert int(b.n_unique) == 1
+
+    def test_jit_matches_eager(self):
+        rng = np.random.RandomState(2)
+        ids = jnp.asarray(rng.randint(0, 10, 20), jnp.int32)
+        rows = jnp.asarray(rng.randn(20, 4), jnp.float32)
+        a = dd.dedup_rows(ids, rows)
+        bj = jax.jit(dd.dedup_rows)(ids, rows)
+        for x, y in zip(a, bj):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y))
+
+
+class TestScatterBack:
+    def test_round_trip_exactly_once(self):
+        """scatter_back ∘ dedup: .at[ids].add applies each update once."""
+        rng = np.random.RandomState(3)
+        ids_np = rng.randint(0, 12, 40)
+        rows = jnp.asarray(rng.randn(40, 4), jnp.float32)
+        b = dd.dedup_rows(jnp.asarray(ids_np, jnp.int32), rows)
+        # pretend the kernel's per-unique-row output is the id itself
+        u = jnp.broadcast_to(b.unique_ids.astype(jnp.float32)[:, None],
+                             (40, 4))
+        out = dd.scatter_back(b, u)
+        applied = np.zeros((12, 4), np.float32)
+        np.add.at(applied, ids_np, np.asarray(out))
+        for i in set(ids_np.tolist()):
+            np.testing.assert_allclose(applied[i], float(i), atol=1e-6)
+        # untouched ids stay zero
+        for i in set(range(12)) - set(ids_np.tolist()):
+            np.testing.assert_allclose(applied[i], 0.0)
+
+    def test_gather_back_every_occurrence(self):
+        ids = jnp.asarray([4, 4, 9, 4], jnp.int32)
+        rows = jnp.ones((4, 2), jnp.float32)
+        b = dd.dedup_rows(ids, rows)
+        u = jnp.broadcast_to(b.unique_ids.astype(jnp.float32)[:, None],
+                             (4, 2))
+        np.testing.assert_allclose(np.asarray(dd.gather_back(b, u))[:, 0],
+                                   [4, 4, 9, 4])
+
+
+class TestPadToMultiple:
+    def test_pads_and_preserves(self):
+        rng = np.random.RandomState(4)
+        ids = jnp.asarray(rng.randint(0, 9, 10), jnp.int32)
+        rows = jnp.asarray(rng.randn(10, 4), jnp.float32)
+        b = dd.dedup_rows(ids, rows)
+        p = dd.pad_to_multiple(b, 8)
+        assert p.unique_ids.shape[0] == 16
+        assert int(p.n_unique) == int(b.n_unique)
+        np.testing.assert_allclose(np.asarray(p.rows[:10]),
+                                   np.asarray(b.rows))
+        assert np.asarray(p.rows[10:]).sum() == 0.0
+        assert (np.asarray(p.unique_ids[10:]) == -1).all()
+        # scatter_back on the padded batch drops padding rows
+        u = jnp.ones((16, 4), jnp.float32)
+        np.testing.assert_allclose(np.asarray(dd.scatter_back(p, u)),
+                                   np.asarray(dd.scatter_back(b, u[:10])))
+
+    def test_noop_when_aligned(self):
+        b = dd.dedup_rows(jnp.arange(8, dtype=jnp.int32), jnp.ones((8, 2)))
+        assert dd.pad_to_multiple(b, 8) is b
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_prop_dedup_invariants():
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**20), k=st.integers(1, 64),
+           pool=st.integers(1, 32))
+    def prop(seed, k, pool):
+        rng = np.random.RandomState(seed % 2**31)
+        ids = rng.randint(0, pool, size=k)
+        rows = rng.randn(k, 4).astype(np.float32)
+        _check_batch(ids, rows)
+    prop()
+
+
+def test_prop_dedup_invariants_fallback():
+    """Seeded sweep of the same invariants (runs with or without
+    hypothesis, so the property is never silently skipped)."""
+    rng = np.random.RandomState(0)
+    for _ in range(15):
+        k = int(rng.randint(1, 64))
+        pool = int(rng.randint(1, 32))
+        ids = rng.randint(0, pool, size=k)
+        rows = rng.randn(k, 4).astype(np.float32)
+        _check_batch(ids, rows)

@@ -92,8 +92,7 @@ class TestConstraint:
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
     def test_applies_inside_mesh(self):
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = shd.make_mesh_compat((1, 1), ("data", "model"))
 
         @jax.jit
         def f(x):
@@ -104,8 +103,7 @@ class TestConstraint:
         assert out.shape == (4, 4)
 
     def test_drops_indivisible(self):
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = shd.make_mesh_compat((1, 1), ("data", "model"))
 
         @jax.jit
         def f(x):
@@ -180,8 +178,7 @@ class TestSketchedReduce:
         from repro.core import sketch as cs
         from repro.distributed import sketched_reduce as sr
         from jax.sharding import PartitionSpec as P
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = shd.make_mesh_compat((1,), ("data",))
         spec = cs.for_param((128, 8), compression=4.0, width_multiple=8)
         ids = jnp.arange(16, dtype=jnp.int32)
         rows = jnp.ones((16, 8), jnp.float32)
@@ -189,7 +186,7 @@ class TestSketchedReduce:
         def f(ids, rows):
             return sr.reduce_gradient_sketch(spec, ids, rows, "data")
 
-        out = jax.jit(jax.shard_map(
+        out = jax.jit(shd.shard_map_compat(
             f, mesh=mesh, in_specs=(P(), P()), out_specs=P()))(ids, rows)
         want = sr.local_sketch(spec, ids, rows)
         np.testing.assert_allclose(np.asarray(out), np.asarray(want),

@@ -1,9 +1,57 @@
-"""Count-sketch tensor: unit + hypothesis property tests (paper §2, §5)."""
+"""Count-sketch tensor: unit + hypothesis property tests (paper §2, §5).
+
+The property tests prefer ``hypothesis`` (see requirements-test.txt) but
+must not abort collection of the whole suite when it is missing — in that
+case a minimal shim replays each property on a fixed number of seeded
+pseudo-random draws instead of searching.
+"""
+
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    class _Strategies:
+        """Tiny stand-in: each strategy describes one seeded draw."""
+
+        @staticmethod
+        def integers(lo, hi):
+            return lambda rng: int(rng.randint(lo, hi + 1))
+
+        @staticmethod
+        def floats(lo, hi):
+            return lambda rng: float(rng.uniform(lo, hi))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return lambda rng: seq[rng.randint(len(seq))]
+
+    st = _Strategies()
+
+    def settings(max_examples=10, **_kw):
+        def deco(fn):
+            fn._max_examples = min(max_examples, 10)
+            return fn
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            # no functools.wraps: pytest must see the 0-arg signature, not
+            # the property's (it would mistake the params for fixtures)
+            def wrapper():
+                rng = np.random.RandomState(0)
+                # @settings sits OUTSIDE @given, so it annotates `wrapper`
+                for _ in range(getattr(wrapper, "_max_examples", 10)):
+                    fn(**{name: draw(rng) for name, draw in strats.items()})
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
 
 from repro.core import sketch as cs
 from repro.core.hashing import HashFamily
