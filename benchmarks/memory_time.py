@@ -3,44 +3,109 @@
 Protocol: a mid-size LM (vocab 16k, d=256) so the embedding/softmax aux
 state dominates, as in Wikitext-103/LM1B.  Reports bytes of optimizer
 state, steps/s, and the paper-style "Size" ratio vs dense Adam.
+
+Every scheme also records the **planner-predicted vs measured** aux bytes
+(``repro.plan.accounting``) — the predicted/measured gap is the planner's
+calibration check (EXPERIMENTS.md §Planner).  With ``--aux-budget`` the
+memory/accuracy trade-off axis is driven by the planner itself: each
+budget (a fraction of the dense-Adam aux cost, e.g. ``0.35x``, or
+``floor``) is solved into a per-leaf plan and trained, replacing the old
+hand compression sweep.
+
+    PYTHONPATH=src python benchmarks/memory_time.py --quick \
+        --aux-budget floor,0.35x,0.6x,1.0x
 """
 from __future__ import annotations
+
+import argparse
+
+import jax
 
 from benchmarks.common import save_result, small_lm_cfg, strip_arrays, \
     train_small_lm
 from repro.core import lowrank, optimizers as O
-from repro.core.partition import SketchPolicy
+from repro.core.partition import SketchPolicy, nothing_policy
+from repro.models import transformer as tf
+from repro.plan import accounting, parse_budget, plan_for_params, \
+    min_budget_bytes
 
 POL = SketchPolicy(min_rows=512)
 HP = O.SketchHParams(compression=5.0, width_multiple=16)
 
 
-def run(quick: bool = False):
+def _entry(res, predicted):
+    measured = accounting.measure_aux_bytes(res["opt_state"])
+    out = strip_arrays(res)
+    out["predicted_aux_bytes"] = int(predicted)
+    out["measured_aux_bytes"] = int(measured)
+    out["predicted_vs_measured_gap"] = (
+        abs(predicted - measured) / measured if measured else 0.0)
+    return out
+
+
+def run(quick: bool = False, aux_budgets=()):
     steps = 30 if quick else 80
     cfg = small_lm_cfg(vocab=16384, d_model=256, n_layers=2)
     kw = dict(cfg=cfg, steps=steps, batch=4, seq=64)
+    ps = jax.eval_shape(lambda k: tf.init(k, cfg), jax.random.PRNGKey(0))
+
+    def predict(policy=nothing_policy, rank1_policy=nothing_policy,
+                track_first=True, sketch_first=True):
+        return accounting.predict_policy_bytes(
+            ps, policy=policy, rank1_policy=rank1_policy, hparams=HP,
+            track_first_moment=track_first, sketch_first_moment=sketch_first)
+
     out = {}
-    for name, opt in [
-        ("adam", O.adam(1e-3)),
-        ("cs_mv", O.countsketch_adam(1e-3, policy=POL, hparams=HP)),
+    for name, opt, predicted in [
+        ("adam", O.adam(1e-3), predict()),
+        ("cs_mv", O.countsketch_adam(1e-3, policy=POL, hparams=HP),
+         predict(policy=POL)),
         ("cs_v", O.countsketch_adam(1e-3, policy=POL, hparams=HP,
-                                    sketch_first_moment=False)),
+                                    sketch_first_moment=False),
+         predict(policy=POL, sketch_first=False)),
         ("cs_rmsprop_b1_0", O.countsketch_rmsprop(1e-3, policy=POL,
-                                                  hparams=HP)),
-        ("lr_nmf_v", lowrank.nmf_rank1_adam(1e-3, policy=POL)),
-        ("adagrad", O.adagrad(0.1)),
-        ("cs_adagrad", O.countsketch_adagrad(0.1, policy=POL, hparams=HP)),
+                                                  hparams=HP),
+         predict(policy=POL, track_first=False, sketch_first=False)),
+        ("lr_nmf_v", lowrank.nmf_rank1_adam(1e-3, policy=POL),
+         predict(rank1_policy=POL)),
+        ("adagrad", O.adagrad(0.1), predict(track_first=False)),
+        ("cs_adagrad", O.countsketch_adagrad(0.1, policy=POL, hparams=HP),
+         predict(policy=POL, track_first=False)),
     ]:
-        out[name] = strip_arrays(train_small_lm(opt, **kw))
+        out[name] = _entry(train_small_lm(opt, **kw), predicted)
+
+    # --- planner-driven budget axis (replaces the hand compression sweep)
+    dense = accounting.dense_budget_bytes(ps)
+    floor = min_budget_bytes(ps, width_multiple=16, min_rows=512)
+    for b in aux_budgets:
+        budget = parse_budget(b, dense_bytes=dense, floor_bytes=floor)
+        plan = plan_for_params(ps, budget, width_multiple=16, min_rows=512)
+        res = train_small_lm(plan.make_optimizer(1e-3), **kw)
+        e = _entry(res, plan.predicted_aux_bytes)
+        e.update(aux_budget=b, budget_bytes=int(budget),
+                 plan_modes=plan.n_by_mode())
+        out[f"plan@{b}"] = e
+
     base = out["adam"]["opt_state_bytes"]
     table = {k: {"bytes": v["opt_state_bytes"],
+                 "predicted_aux_bytes": v["predicted_aux_bytes"],
+                 "measured_aux_bytes": v["measured_aux_bytes"],
                  "size_ratio": round(v["opt_state_bytes"] / base, 3),
                  "steps_per_s": round(v["steps_per_s"], 2),
                  "final_loss": round(v["final_loss"], 3)}
              for k, v in out.items()}
-    save_result("memory_time", {"detail": out, "table": table})
+    save_result("memory_time", {"detail": out, "table": table,
+                                "dense_aux_bytes": int(dense),
+                                "floor_aux_bytes": int(floor)})
     return table
 
 
 if __name__ == "__main__":
-    print(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--aux-budget", default="",
+                    help="comma-separated budgets driving the planner axis "
+                         "('floor', fractions of dense like '0.35x', bytes)")
+    a = ap.parse_args()
+    budgets = [b for b in a.aux_budget.split(",") if b]
+    print(run(quick=a.quick, aux_budgets=budgets))

@@ -56,8 +56,14 @@ def _flatten(tree):
 
 
 def save(ckpt_dir, step: int, tree, *, async_: bool = False,
-         keep: int = 3) -> Optional[threading.Thread]:
-    """Write ``tree`` as step-<step>.  Returns the writer thread if async."""
+         keep: int = 3,
+         extra: Optional[Dict[str, Any]] = None) -> Optional[threading.Thread]:
+    """Write ``tree`` as step-<step>.  Returns the writer thread if async.
+
+    ``extra``: JSON-serializable metadata recorded in the manifest (e.g.
+    the memory-budget plan under key 'plan' — see ``repro.plan.Plan
+    .to_json`` — so restore, including the Hokusai fold, reconstructs the
+    exact sketch specs).  Read back with ``read_manifest``."""
     ckpt_dir = pathlib.Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     flat, _ = _flatten(tree)
@@ -72,6 +78,8 @@ def save(ckpt_dir, step: int, tree, *, async_: bool = False,
             shutil.rmtree(tmp)
         tmp.mkdir()
         manifest = {"step": step, "leaves": []}
+        if extra is not None:
+            manifest["extra"] = extra
         for i, (path, arr) in enumerate(host_leaves):
             entry = {"path": path, "file": None}
             if arr is not None:
@@ -114,6 +122,18 @@ def latest_step(ckpt_dir) -> Optional[int]:
     if not (pathlib.Path(ckpt_dir) / f"step-{step}").exists():
         return None
     return step
+
+
+def read_manifest(ckpt_dir, step: Optional[int] = None) -> Dict[str, Any]:
+    """The manifest dict of step-<step> (default: latest) — including the
+    'extra' metadata recorded at save time (e.g. the memory plan)."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    return json.loads(
+        (ckpt_dir / f"step-{step}" / "manifest.json").read_text())
 
 
 def restore(ckpt_dir, tree_like, step: Optional[int] = None,

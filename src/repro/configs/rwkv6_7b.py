@@ -9,4 +9,8 @@ CONFIG = ArchConfig(
     name="rwkv6-7b", family="rwkv6",
     n_layers=32, d_model=4096, n_heads=64, n_kv=64, head_dim=64,
     d_ff=14336, vocab_size=65536, rwkv_head_dim=64, rwkv_chunk=64,
+    # Memory-planner budget (--aux-budget config): dense CS-Adam aux is
+    # ~60.3 GB, floor ~56.0 GB (the 65k-vocab tables are the only
+    # compressible mass on a 7B dense body) — 57 GB sketches both.
+    aux_budget_bytes=57_000_000_000,
 )

@@ -9,7 +9,7 @@ from repro.core import sketch  # noqa: F401
 from repro.core.cleaning import CleaningSchedule  # noqa: F401
 from repro.core.hashing import HashFamily  # noqa: F401
 from repro.core.optimizers import (  # noqa: F401
-    SketchHParams, Transform, adagrad, adam, apply_updates,
+    Rank1Moment, SketchHParams, Transform, adagrad, adam, apply_updates,
     clip_by_global_norm, countsketch_adagrad, countsketch_adam,
     countsketch_momentum, countsketch_rmsprop, linear_decay, momentum, sgd,
     state_bytes)

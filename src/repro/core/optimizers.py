@@ -40,6 +40,15 @@ class Transform(NamedTuple):
     update: Callable[..., Tuple[Any, Any]]  # (grads, state, params) -> (updates, state)
 
 
+class Rank1Moment(NamedTuple):
+    """Non-negative rank-1 factorization of a 2nd-moment leaf (Adafactor /
+    the paper's LR-NMF-V baseline): V̂ᵢⱼ = rᵢ·cⱼ / mean(r).  A pytree node
+    (NamedTuple), so it checkpoints, shards (replicated vectors), and
+    tree-maps like any other state leaf."""
+    r: jnp.ndarray  # (n,) row sums EMA
+    c: jnp.ndarray  # (d,) col sums EMA
+
+
 def _lr_at(lr: Schedule, step: jnp.ndarray) -> jnp.ndarray:
     return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
 
@@ -93,7 +102,16 @@ class SketchHParams:
     ``backend``: which kernel backend the sparse-rows fast path runs on —
     a name registered in ``repro.kernels`` ('ref' | 'xla' | 'stream' |
     'tiled' | 'interpret') or None/'auto' for the per-host best (tiled on
-    TPU, xla elsewhere).  See DESIGN.md §10."""
+    TPU, xla elsewhere).  See DESIGN.md §10.
+
+    ``overrides``: per-path (depth, width) assignments — the hook the
+    memory-budget planner (``repro.plan``, DESIGN.md §11) uses to replace
+    the global ``compression`` ratio with a solved per-leaf spec.  A
+    tuple-of-tuples (not a dict) so the dataclass stays hashable.
+
+    ``dtype``: element type of the sketch arrays ('float32' | 'bfloat16'
+    | ...).  ``SketchSpec.nbytes`` is dtype-aware, so the planner's byte
+    accounting and the allocated state agree for bf16 sketches too."""
     compression: float = 5.0
     depth: int = 3
     width_multiple: int = 256
@@ -103,12 +121,32 @@ class SketchHParams:
     dense_chunk: int = 8192
     lazy: bool = True
     backend: Optional[str] = None
+    dtype: str = "float32"
+    overrides: Tuple[Tuple[str, Tuple[int, int]], ...] = ()
+
+    def override_for(self, path: str) -> Optional[Tuple[int, int]]:
+        for p, dw in self.overrides:
+            if p == path:
+                return dw
+        return None
 
     def spec(self, path: str, shape, *, signed: bool) -> cs.SketchSpec:
+        dw = self.override_for(path)
+        if dw is not None:
+            if len(shape) != 2:
+                raise ValueError(f"sketch override at {path!r} needs a "
+                                 f"rank-2 leaf, got {tuple(shape)}")
+            depth, width = dw
+            return cs.SketchSpec(depth=int(depth), width=int(width),
+                                 dim=int(shape[1]), signed=signed,
+                                 seed=_leaf_seed(path, self.seed),
+                                 dtype=jnp.dtype(self.dtype),
+                                 identity=self.identity)
         return cs.for_param(tuple(shape), compression=self.compression,
                             depth=self.depth, signed=signed,
                             seed=_leaf_seed(path, self.seed),
                             width_multiple=self.width_multiple,
+                            dtype=jnp.dtype(self.dtype),
                             identity=self.identity)
 
 
@@ -349,6 +387,7 @@ def countsketch_adagrad(lr: Schedule, eps: float = 1e-10, *,
 def countsketch_adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
                      eps: float = 1e-8, *,
                      policy: PolicyFn = nothing_policy,
+                     rank1_policy: PolicyFn = nothing_policy,
                      hparams: SketchHParams = SketchHParams(),
                      cleaning: Optional[CleaningSchedule] = None,
                      track_first_moment: bool = True,
@@ -360,17 +399,28 @@ def countsketch_adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
     Theorem 5.1 — what the paper runs for the 49.5M-class Amazon task —
     where the 1st-moment state is dropped entirely (None leaves) for the
     sketched *and* dense parameters.  ``sketch_first_moment=False`` is the
-    paper's "CS-V" ablation: dense 1st moment, sketched 2nd."""
+    paper's "CS-V" ablation: dense 1st moment, sketched 2nd.
+
+    ``rank1_policy`` selects leaves whose 2nd moment lives in a
+    ``Rank1Moment`` NMF factorization instead (1st moment dense), the
+    LR-NMF-V baseline numerics of ``lowrank.nmf_rank1_adam`` — so one
+    transform can execute a mixed dense / sketch / rank-1 memory plan
+    (``repro.plan``).  It takes precedence over ``policy``."""
 
     def init(params):
         def m_leaf(path, p):
             if not track_first_moment:
                 return None
+            if rank1_policy(path, p.shape):
+                return jnp.zeros_like(p)          # rank-1 keeps a dense m
             if policy(path, p.shape) and sketch_first_moment:
                 return cs.init(hparams.spec(path, p.shape, signed=True))
             return jnp.zeros_like(p)
 
         def v_leaf(path, p):
+            if rank1_policy(path, p.shape):
+                return Rank1Moment(jnp.zeros((p.shape[0],), jnp.float32),
+                                   jnp.zeros((p.shape[1],), jnp.float32))
             if policy(path, p.shape):
                 return cs.init(hparams.spec(path, p.shape, signed=False))
             return jnp.zeros_like(p)
@@ -387,6 +437,22 @@ def countsketch_adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
         bc2 = 1.0 - b2 ** t
 
         def leaf(path, g, M, V):
+            if rank1_policy(path, g.shape):
+                # LR-NMF-V leaf: rank-1 2nd moment, dense 1st — numerics
+                # identical to lowrank.nmf_rank1_adam.
+                g2 = jnp.square(g.astype(jnp.float32))
+                r = b2 * V.r + (1.0 - b2) * jnp.mean(g2, axis=1)
+                c = b2 * V.c + (1.0 - b2) * jnp.mean(g2, axis=0)
+                vhat = (r[:, None] * c[None, :]) / (jnp.mean(r) + 1e-30)
+                if track_first_moment:
+                    m_new = b1 * M + (1.0 - b1) * g
+                    M_out, mhat = m_new, m_new / bc1
+                else:
+                    M_out, mhat = None, g
+                upd = -eta * mhat / (jnp.sqrt(jnp.maximum(vhat / bc2, 0.0))
+                                     + eps)
+                return M_out, Rank1Moment(r, c), upd
+
             sketched = policy(path, g.shape)
             sketched_m = sketched and sketch_first_moment and track_first_moment
 

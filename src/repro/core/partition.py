@@ -23,6 +23,11 @@ PolicyFn = Callable[[str, Tuple[int, ...]], bool]
 SPARSE_TABLE_PATTERN = re.compile(
     r"(tok_embed|lm_head|softmax|embed_out|class_head|expert_table)")
 
+# Below this row count a sketch cannot win: ``sketch.for_param`` floors the
+# width at one ``width_multiple`` stripe, so depth × width_multiple × dim can
+# exceed the dense rows × dim buffer (e.g. a (4, d) head would inflate ~190×).
+MIN_SKETCH_ROWS = 1024
+
 
 @dataclasses.dataclass(frozen=True)
 class SketchPolicy:
@@ -34,7 +39,7 @@ class SketchPolicy:
     expert weights are rank-3 (experts, d_in, d_out) and are sketched over
     the flattened (experts*d_in) row axis."""
 
-    min_rows: int = 1024
+    min_rows: int = MIN_SKETCH_ROWS
     pattern: "re.Pattern" = SPARSE_TABLE_PATTERN
     sketch_experts: bool = False
 
@@ -54,8 +59,11 @@ def nothing_policy(path: str, shape: Tuple[int, ...]) -> bool:
 
 
 def everything_policy(path: str, shape: Tuple[int, ...]) -> bool:
-    """Compress every rank-2 leaf — stress-test mode."""
-    return len(shape) == 2
+    """Compress every rank-2 leaf big enough for a sketch to actually be
+    smaller than the dense buffer — stress-test mode.  Tiny leaves (e.g.
+    (4, d) heads) are clamped by the same ``min_rows`` guard as
+    ``SketchPolicy``; sketching them would *inflate* memory."""
+    return len(shape) == 2 and shape[0] >= MIN_SKETCH_ROWS
 
 
 def leaf_paths(tree):

@@ -65,6 +65,9 @@ class SketchSpec:
         return (self.depth, self.width, self.dim)
 
     def nbytes(self) -> int:
+        """Exact byte footprint of ``init(self)`` — dtype-aware (a bf16
+        sketch is half an fp32 one), the ground truth the memory-budget
+        planner's accounting (``repro.plan.accounting``) must agree with."""
         return self.depth * self.width * self.dim * jnp.dtype(self.dtype).itemsize
 
     def fold(self) -> "SketchSpec":
@@ -93,6 +96,34 @@ def for_param(shape: Tuple[int, ...], *, compression: float = 5.0,
     w = min(w, max(n, width_multiple))
     return SketchSpec(depth=depth, width=w, dim=d, signed=signed, seed=seed,
                       dtype=dtype, identity=identity)
+
+
+def for_budget(shape: Tuple[int, ...], nbytes: int, *, depth: int = 3,
+               signed: bool = True, seed: int = 0, dtype=jnp.float32,
+               width_multiple: int = 256,
+               identity: bool = False) -> SketchSpec:
+    """Inverse of ``for_param``: the widest spec whose ``nbytes()`` fits a
+    byte budget.  Width is floored to ``width_multiple`` (the result never
+    exceeds the budget) and capped at the identity point — ≥ n buckets is
+    already an exact table, more would be pure waste.
+
+    Raises ``ValueError`` when the budget cannot fund even one
+    ``width_multiple`` stripe of buckets; callers wanting a fallback
+    should catch it and keep the leaf dense (or rank-1)."""
+    if len(shape) != 2:
+        raise ValueError(f"sketched params must be rank-2 (rows, dim), got {shape}")
+    n, d = shape
+    itemsize = jnp.dtype(dtype).itemsize
+    w = int(nbytes) // (depth * d * itemsize)
+    w = (w // width_multiple) * width_multiple      # floor to multiple
+    if w < width_multiple:
+        need = depth * width_multiple * d * itemsize
+        raise ValueError(
+            f"budget {int(nbytes)} B funds no {width_multiple}-bucket stripe "
+            f"for shape {shape} at depth {depth} (needs ≥ {need} B)")
+    w = min(w, -(-n // width_multiple) * width_multiple)
+    return SketchSpec(depth=depth, width=w, dim=d, signed=signed, seed=seed,
+                      dtype=jnp.dtype(dtype), identity=identity)
 
 
 def init(spec: SketchSpec) -> jnp.ndarray:

@@ -18,6 +18,7 @@ in EXPERIMENTS.md are generated from these artifacts.
 import argparse
 import json
 import pathlib
+import re
 import time
 import traceback
 
@@ -50,15 +51,17 @@ def _jsonable(x):
 
 
 def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
-               optimizer: str = TRAIN_OPTIMIZER):
-    """Returns (lowered, n_params_shape_tree, tokens, kind)."""
+               optimizer: str = TRAIN_OPTIMIZER, plan=None):
+    """Returns (lowered, n_params_shape_tree, tokens, kind).  ``plan``: an
+    optional ``repro.plan.Plan`` replacing the regex policy for train
+    cells (serve cells carry no optimizer state)."""
     n_dev = mesh.devices.size
     if shape.kind == "train":
         from repro.train.steps import make_train_step
         sampled = optimizer.endswith("+sampled")
         opt_name = optimizer.replace("+sampled", "")
         ts = make_train_step(cfg, optimizer=opt_name,
-                             sampled_softmax=sampled)
+                             sampled_softmax=sampled, plan=plan)
         ps = ts.params_shape()
         os_ = ts.opt_shape(ps)
         batch = configs.train_batch_specs(cfg, shape,
@@ -110,12 +113,32 @@ def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
     return lowered, ps, tokens, "decode"
 
 
+def plan_cell(cfg: ArchConfig, budget: str, *, optimizer: str):
+    """Solve + print the memory plan a train cell will execute: the plan
+    table and per-leaf predicted error, before anything is lowered."""
+    from repro.plan import plan_for_config
+    opt_name = optimizer.replace("+sampled", "")
+    plan = plan_for_config(cfg, budget, optimizer=opt_name)
+    print(f"[plan] {cfg.name} aux-budget={budget} "
+          f"({plan.budget_bytes:,} B)", flush=True)
+    print(plan.table(), flush=True)
+    return plan
+
+
 def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
              force: bool = False, optimizer: str = TRAIN_OPTIMIZER,
-             out_root: pathlib.Path = OUT_ROOT, tag: str = "") -> dict:
+             out_root: pathlib.Path = OUT_ROOT, tag: str = "",
+             aux_budget: str = "") -> dict:
     out_dir = out_root / mesh_kind
     out_dir.mkdir(parents=True, exist_ok=True)
+    shape = SHAPES[shape_name]
     suffix = f"__{tag}" if tag else ""
+    if aux_budget and shape.kind == "train":
+        # budgeted train records get their own cache key — a planned sweep
+        # must never return a stale unplanned record (or another budget's);
+        # serve cells carry no optimizer state, so theirs is unchanged
+        token = re.sub(r"[^A-Za-z0-9.]+", "-", aux_budget)
+        suffix += f"__plan-{token}"
     out_path = out_dir / f"{arch}__{shape_name}{suffix}.json"
     if out_path.exists() and not force:
         return json.loads(out_path.read_text())
@@ -128,13 +151,19 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         return rec
 
     cfg = configs.get(arch)
-    shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     n_dev = mesh.devices.size
+    plan = None
     t0 = time.time()
     try:
+        # inside the try: an infeasible budget (or an arch without
+        # aux_budget_bytes under --aux-budget config) is recorded as this
+        # cell's error and the sweep continues
+        if aux_budget and shape.kind == "train":
+            plan = plan_cell(cfg, aux_budget, optimizer=optimizer)
         lowered, ps, tokens, kind = lower_cell(cfg, shape, mesh,
-                                               optimizer=optimizer)
+                                               optimizer=optimizer,
+                                               plan=plan)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
@@ -154,6 +183,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
             "memory": mem,
             "roofline": roof.to_dict(),
         }
+        if plan is not None:
+            rec["plan"] = {"aux_budget": aux_budget,
+                           "budget_bytes": plan.budget_bytes,
+                           "predicted_aux_bytes": plan.predicted_aux_bytes,
+                           "modes": plan.n_by_mode()}
     except Exception as e:  # noqa: BLE001 — recorded, sweep continues
         rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
                "status": "error", "error": f"{type(e).__name__}: {e}",
@@ -170,6 +204,11 @@ def main() -> int:
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--optimizer", default=TRAIN_OPTIMIZER)
     ap.add_argument("--tag", default="", help="suffix for perf-iteration runs")
+    ap.add_argument("--aux-budget", default="",
+                    help="aux-memory budget for train cells: bytes | "
+                         "'8.6GB' | '0.85x' of dense | 'floor' | 'config' "
+                         "(the arch's aux_budget_bytes); prints the plan "
+                         "table before lowering")
     args = ap.parse_args()
 
     archs = [args.arch] if args.arch else list(configs.ARCH_IDS)
@@ -182,7 +221,8 @@ def main() -> int:
         for arch in archs:
             for shape_name in shapes:
                 rec = run_cell(arch, shape_name, mesh_kind, force=args.force,
-                               optimizer=args.optimizer, tag=args.tag)
+                               optimizer=args.optimizer, tag=args.tag,
+                               aux_budget=args.aux_budget)
                 st = rec["status"]
                 if st == "ok":
                     r = rec["roofline"]

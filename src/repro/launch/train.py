@@ -17,6 +17,7 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.checkpoint import store
 from repro.data import ZipfLM, ZipfLMConfig
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_host_mesh
@@ -37,6 +38,11 @@ def main() -> int:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--aux-budget", default="",
+                    help="optimizer aux-memory budget: bytes | '8.6GB' | "
+                         "'0.85x' of dense | 'floor' | 'config'; the solved "
+                         "plan replaces the regex sketch policy and is "
+                         "recorded in every checkpoint manifest")
     args = ap.parse_args()
 
     if os.environ.get("JAX_COORDINATOR"):
@@ -46,7 +52,46 @@ def main() -> int:
     if args.reduced:
         cfg = cfg.reduced()
     mesh = make_host_mesh()
-    ts = make_train_step(cfg, optimizer=args.optimizer, lr=args.lr)
+    ckpt_plan = None
+    if args.ckpt_dir and store.latest_step(args.ckpt_dir) is not None:
+        saved = store.read_manifest(args.ckpt_dir).get("extra", {})
+        if saved.get("plan") is not None:
+            from repro.plan import Plan
+            ckpt_plan = Plan.from_json(saved["plan"])
+    plan = None
+    if args.aux_budget:
+        from repro.plan import plan_for_config
+        plan = plan_for_config(cfg, args.aux_budget,
+                               optimizer=args.optimizer)
+        if (ckpt_plan is None
+                and args.ckpt_dir
+                and store.latest_step(args.ckpt_dir) is not None):
+            raise ValueError(
+                f"{args.ckpt_dir} holds a checkpoint written WITHOUT a "
+                f"memory plan (regex-policy state); restoring it under "
+                f"--aux-budget {args.aux_budget} would load mismatched "
+                f"optimizer state — resume without the flag, or start a "
+                f"fresh --ckpt-dir")
+        if ckpt_plan is not None and plan != ckpt_plan:
+            # The checkpointed sketch arrays were written under the
+            # recorded plan's (width, seed) specs; querying them through
+            # a differently-solved plan would misread state silently.
+            raise ValueError(
+                f"--aux-budget {args.aux_budget} solves a plan that "
+                f"differs from the one recorded in {args.ckpt_dir}'s "
+                f"manifest ({ckpt_plan.budget_bytes:,} B budget) — resume "
+                f"without --aux-budget to reuse the recorded plan, or "
+                f"point --ckpt-dir at a fresh run")
+        print(plan.table(), flush=True)
+    elif ckpt_plan is not None:
+        # Resuming a planned run without --aux-budget: the optimizer MUST
+        # be rebuilt from the manifest's plan, or the restored sketch
+        # state would be queried with mismatched (width, seed) specs.
+        plan = ckpt_plan
+        print("[plan] recovered from checkpoint manifest "
+              f"({plan.budget_bytes:,} B budget)", flush=True)
+    ts = make_train_step(cfg, optimizer=args.optimizer, lr=args.lr,
+                         plan=plan)
 
     with shd.active_mesh(mesh):
         params = ts.init_fn(jax.random.PRNGKey(args.seed))
@@ -69,7 +114,7 @@ def main() -> int:
                     (args.batch, cfg.n_patches, cfg.d_model), cfg.dtype))
             return step_fn(params, opt_state, batch)
 
-        trainer = Trainer(wrapped_step, data, tcfg)
+        trainer = Trainer(wrapped_step, data, tcfg, plan=plan)
         state = trainer.restore_or_init(
             TrainState(step=0, params=params, opt_state=opt_state))
         state = trainer.fit(state)

@@ -64,6 +64,12 @@ class ArchConfig:
     # --- count-sketch optimizer integration -------------------------------
     sketch_compression: float = 5.0
     sketch_depth: int = 3
+    # Aux-memory budget in bytes for the optimizer state (None = no budget:
+    # the regex SketchPolicy + global compression above).  When set, the
+    # memory-budget planner (repro.plan, DESIGN.md §11) solves per-leaf
+    # dense / sketch(depth,width) / rank-1 assignments under this budget;
+    # launch entry points opt in via --aux-budget config.
+    aux_budget_bytes: Optional[int] = None
 
     @property
     def vocab(self) -> int:
@@ -109,6 +115,7 @@ class ArchConfig:
             attn_chunk=16,
             compute_dtype="float32",
             name=self.name + "-smoke",
+            aux_budget_bytes=None,   # full-size budgets don't scale down
         )
         small.update(overrides)
         return dataclasses.replace(self, **small)

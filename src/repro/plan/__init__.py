@@ -1,0 +1,26 @@
+"""Memory-budget planner (DESIGN.md §11): "spend at most B bytes on
+optimizer state" → an executable per-leaf compression plan.
+
+    from repro.plan import plan_for_params, plan_for_config, Plan
+
+    plan = plan_for_params(params, budget_bytes)      # solve
+    print(plan.table())                               # inspect
+    opt = plan.make_optimizer(lr=1e-3)                # execute
+    ckpt_manifest["plan"] = plan.to_json()            # persist
+
+Modules: ``accounting`` (predicted vs measured aux bytes),
+``error_model`` (CMS/CS collision error under power-law traffic),
+``allocator`` (greedy water-filling over discrete width ladders),
+``plan`` (the executable Plan + serialization), ``cli``
+(``python -m repro.plan.cli``).
+"""
+from repro.plan.accounting import (  # noqa: F401
+    dense_budget_bytes, measure_aux_bytes, predict_policy_bytes)
+from repro.plan.allocator import (  # noqa: F401
+    leaf_candidates, min_budget_bytes, plan_for_params, water_fill)
+from repro.plan.cli import (  # noqa: F401
+    MOMENT_MODES, parse_budget, params_shapes_for_config, plan_for_config)
+from repro.plan.error_model import TableStats, measure_freqs  # noqa: F401
+from repro.plan.plan import (  # noqa: F401
+    InfeasibleBudgetError, LeafPlan, Plan, MODE_DENSE, MODE_RANK1,
+    MODE_SKETCH)

@@ -1,0 +1,109 @@
+"""Byte accounting for optimizer auxiliary state — predicted and measured.
+
+All predictions are *exact by construction*: sketch bytes come from
+``SketchSpec.nbytes()`` (dtype-aware, the same spec the optimizer will
+build through ``SketchHParams.spec``), dense moments from the parameter
+leaf's own shape/dtype, rank-1 factors from the fp32 (n,) + (d,) vectors
+``Rank1Moment`` allocates.  ``measure_aux_bytes`` sums the real state
+pytree, so "predicted within 5% of measured" (ISSUE 2 acceptance) holds
+with margin zero unless someone changes an allocation without updating
+the matching predictor — which the property tests then catch.
+
+"aux" means the m/v moment trees only; the (step,) scalar and the
+parameters themselves are excluded everywhere.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import sketch as cs
+from repro.core.optimizers import SketchHParams
+from repro.core.partition import PolicyFn, leaf_paths, nothing_policy
+
+
+def _itemsize(dtype) -> int:
+    return np.dtype(dtype).itemsize
+
+
+def _leaf_size(shape: Tuple[int, ...]) -> int:
+    size = 1
+    for s in shape:
+        size *= int(s)
+    return size
+
+
+def dense_leaf_bytes(shape, dtype, *, track_first_moment: bool = True
+                     ) -> Tuple[int, int]:
+    """(m, v) bytes of a dense Adam leaf: ``zeros_like(param)`` each."""
+    b = _leaf_size(shape) * _itemsize(dtype)
+    return (b if track_first_moment else 0, b)
+
+
+def sketch_leaf_bytes(shape, dtype, depth: int, width: int, *,
+                      sketch_dtype="float32", track_first_moment: bool = True,
+                      sketch_first_moment: bool = True) -> Tuple[int, int]:
+    """(m, v) bytes of a sketched leaf at (depth, width).  The v sketch is
+    always present; m is a same-shape sketch (CS-MV), a dense buffer
+    (CS-V), or absent (β₁=0)."""
+    n, d = int(shape[0]), int(shape[1])
+    sb = cs.SketchSpec(depth=depth, width=width, dim=d,
+                       dtype=np.dtype(sketch_dtype)).nbytes()
+    if not track_first_moment:
+        return 0, sb
+    if sketch_first_moment:
+        return sb, sb
+    return _leaf_size(shape) * _itemsize(dtype), sb
+
+
+def rank1_leaf_bytes(shape, dtype, *, track_first_moment: bool = True
+                     ) -> Tuple[int, int]:
+    """(m, v) bytes of an LR-NMF-V leaf: dense m (when tracked), fp32
+    (n,) + (d,) factors for v (``Rank1Moment``)."""
+    n, d = int(shape[0]), int(shape[1])
+    m = _leaf_size(shape) * _itemsize(dtype) if track_first_moment else 0
+    return m, (n + d) * 4
+
+
+def predict_policy_bytes(params_like, *, policy: PolicyFn,
+                         hparams: SketchHParams,
+                         rank1_policy: PolicyFn = nothing_policy,
+                         track_first_moment: bool = True,
+                         sketch_first_moment: bool = True) -> int:
+    """Aux bytes ``countsketch_adam(policy, rank1_policy, hparams).init``
+    will allocate for ``params_like`` (arrays or ShapeDtypeStructs) —
+    computed by ``eval_shape`` of the *real* init (zero allocation), so
+    it cannot drift from the optimizer's allocation logic."""
+    from repro.core.optimizers import countsketch_adam
+    opt = countsketch_adam(1e-3, policy=policy, rank1_policy=rank1_policy,
+                           hparams=hparams,
+                           track_first_moment=track_first_moment,
+                           sketch_first_moment=sketch_first_moment)
+    return measure_aux_bytes(jax.eval_shape(opt.init, params_like))
+
+
+def measure_aux_bytes(opt_state: Any) -> int:
+    """Measured bytes of the m/v moment trees of an optimizer state —
+    real arrays or an ``eval_shape`` tree (the ground truth the planner's
+    prediction is checked against)."""
+    total = 0
+    for key in ("m", "v"):
+        if key not in opt_state:
+            continue
+        for leaf in jax.tree_util.tree_leaves(opt_state[key]):
+            if hasattr(leaf, "dtype") and hasattr(leaf, "shape"):
+                total += _leaf_size(tuple(leaf.shape)) * _itemsize(leaf.dtype)
+    return total
+
+
+def dense_budget_bytes(params_like, *, track_first_moment: bool = True) -> int:
+    """Aux bytes of the dense Adam baseline — the budget at which a plan
+    must reproduce ``nothing_policy`` bit-identically."""
+    total = 0
+    for _, leaf in leaf_paths(params_like):
+        m, v = dense_leaf_bytes(tuple(leaf.shape), leaf.dtype,
+                                track_first_moment=track_first_moment)
+        total += m + v
+    return total

@@ -1,0 +1,185 @@
+"""Plan CLI: solve and print a memory-budget plan for a registry config.
+
+    PYTHONPATH=src python -m repro.plan.cli --arch qwen2_0_5b --budget 0.85x
+    PYTHONPATH=src python -m repro.plan.cli --arch qwen2_0_5b \
+        --budgets floor,0.9x,1.0x --check        # CI smoke (soundness)
+
+Budgets parse as raw bytes ("123456789"), sizes ("8.6GB", "512MiB"),
+fractions of the dense-Adam aux cost ("0.85x"), the literal "floor"
+(cheapest feasible plan), or "config" (the arch's ``aux_budget_bytes``).
+
+``--check`` asserts, per budget: predicted bytes ≤ budget, and — when the
+budget covers the dense cost — that the plan compresses nothing, i.e. it
+reproduces the ``nothing_policy`` dense baseline.  Exit code 1 on any
+violation (used by the planner-smoke CI job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+from typing import Optional
+
+import jax
+
+from repro.models.config import ArchConfig
+from repro.plan import accounting, allocator
+from repro.plan.error_model import TableStats
+from repro.plan.plan import MODE_DENSE, Plan
+
+_SIZE_RE = re.compile(r"^([0-9.]+)\s*([KMGT]i?)?B?$", re.IGNORECASE)
+_UNIT = {None: 1, "K": 10**3, "M": 10**6, "G": 10**9, "T": 10**12,
+         "KI": 2**10, "MI": 2**20, "GI": 2**30, "TI": 2**40}
+
+# optimizer mode → (track_first_moment, sketch_first_moment).  dense_adam
+# is deliberately ABSENT: a plan under a sub-dense budget compresses, and
+# silently compressing a run labeled "dense_adam" would invalidate any
+# baseline comparison — the dense baseline is simply "no --aux-budget".
+MOMENT_MODES = {
+    "cs_adam": (True, True),      # CS-MV: both moments sketched
+    "cs_adam_v": (True, False),   # CS-V: dense 1st, sketched 2nd
+    "cs_rmsprop": (False, False),  # β₁=0 (Theorem 5.1 / extreme-scale)
+}
+
+
+def parse_budget(text: str, *, dense_bytes: int, floor_bytes: int,
+                 cfg: Optional[ArchConfig] = None) -> int:
+    t = str(text).strip()
+    if t == "floor":
+        return int(floor_bytes)
+    if t == "config":
+        if cfg is None or cfg.aux_budget_bytes is None:
+            raise ValueError("budget 'config' needs an arch whose "
+                             "aux_budget_bytes is set")
+        return int(cfg.aux_budget_bytes)
+    if t.endswith(("x", "X")):
+        return int(float(t[:-1]) * dense_bytes)
+    m = _SIZE_RE.match(t)
+    if not m:
+        raise ValueError(f"cannot parse budget {text!r}")
+    mul = _UNIT[m.group(2).upper() if m.group(2) else None]
+    return int(float(m.group(1)) * mul)
+
+
+def params_shapes_for_config(cfg: ArchConfig):
+    """ShapeDtypeStruct pytree of the model's params — no allocation."""
+    from repro.train.steps import family_module
+    mod = family_module(cfg)
+    return jax.eval_shape(lambda rng: mod.init(rng, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def plan_for_config(cfg: ArchConfig, budget, *, optimizer: str = "cs_adam",
+                    stats=None, default_alpha: float = 1.1,
+                    sketch_dtype: str = "float32", seed: int = 0,
+                    params_shapes=None) -> Plan:
+    """Solve a plan against the config's real parameter shapes.  ``budget``
+    may be an int (bytes) or any ``parse_budget`` string.
+
+    ``params_shapes``: pass a precomputed ``params_shapes_for_config``
+    tree when planning several budgets, to avoid re-tracing the model
+    init per call."""
+    if optimizer not in MOMENT_MODES:
+        raise ValueError(
+            f"the planner executes Adam-family moment layouts only "
+            f"({sorted(MOMENT_MODES)}); optimizer {optimizer!r} has no "
+            f"plan mapping — run it without --aux-budget")
+    track, sketch_first = MOMENT_MODES[optimizer]
+    ps = (params_shapes if params_shapes is not None
+          else params_shapes_for_config(cfg))
+    if not isinstance(budget, int):
+        # dense/floor are only needed to resolve relative budget strings
+        dense = accounting.dense_budget_bytes(ps, track_first_moment=track)
+        floor = allocator.min_budget_bytes(
+            ps, stats=stats, default_alpha=default_alpha,
+            depth=cfg.sketch_depth, sketch_dtype=sketch_dtype,
+            track_first_moment=track, sketch_first_moment=sketch_first)
+        budget = parse_budget(budget, dense_bytes=dense, floor_bytes=floor,
+                              cfg=cfg)
+    return allocator.plan_for_params(
+        ps, budget, stats=stats, default_alpha=default_alpha,
+        depth=cfg.sketch_depth, sketch_dtype=sketch_dtype, seed=seed,
+        track_first_moment=track, sketch_first_moment=sketch_first)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen2_0_5b")
+    ap.add_argument("--budget", default=None,
+                    help="bytes | '8.6GB' | '0.85x' (of dense) | 'floor' "
+                         "| 'config'")
+    ap.add_argument("--budgets", default=None,
+                    help="comma-separated list of budgets (plan each)")
+    ap.add_argument("--optimizer", default="cs_adam",
+                    choices=sorted(MOMENT_MODES))
+    ap.add_argument("--alpha", type=float, default=1.1,
+                    help="assumed zipf exponent for table traffic")
+    ap.add_argument("--sketch-dtype", default="float32")
+    ap.add_argument("--json", default=None,
+                    help="write the (last) plan as JSON to this path")
+    ap.add_argument("--check", action="store_true",
+                    help="assert budget soundness; exit 1 on violation")
+    args = ap.parse_args(argv)
+
+    from repro import configs
+    cfg = configs.get(args.arch)
+    track, sketch_first = MOMENT_MODES[args.optimizer]
+    ps = params_shapes_for_config(cfg)
+    dense = accounting.dense_budget_bytes(ps, track_first_moment=track)
+    floor = allocator.min_budget_bytes(
+        ps, default_alpha=args.alpha, depth=cfg.sketch_depth,
+        sketch_dtype=args.sketch_dtype, track_first_moment=track,
+        sketch_first_moment=sketch_first)
+    print(f"[plan] arch={cfg.name} optimizer={args.optimizer} "
+          f"dense={dense:,} B floor={floor:,} B")
+
+    budgets = ([b for b in args.budgets.split(",") if b]
+               if args.budgets else [args.budget or "0.85x"])
+    failures = 0
+    plan = None
+    for b in budgets:
+        budget = parse_budget(b, dense_bytes=dense, floor_bytes=floor,
+                              cfg=cfg)
+        plan = plan_for_config(cfg, budget, optimizer=args.optimizer,
+                               default_alpha=args.alpha,
+                               sketch_dtype=args.sketch_dtype,
+                               params_shapes=ps)
+        print(f"\n=== budget {b} -> {budget:,} B ===")
+        print(plan.table())
+        if args.check:
+            # ground truth, not the planner's own arithmetic: eval_shape
+            # the real optimizer init (zero allocation) and measure it
+            measured = accounting.measure_aux_bytes(
+                jax.eval_shape(plan.make_optimizer(1e-3).init, ps))
+            ok = plan.predicted_aux_bytes <= budget and measured <= budget
+            if not ok:
+                failures += 1
+                print(f"[check] FAIL: predicted {plan.predicted_aux_bytes:,}"
+                      f" / measured {measured:,} B > budget {budget:,} B")
+            if measured != plan.predicted_aux_bytes:
+                failures += 1
+                ok = False
+                print(f"[check] FAIL: allocator prediction "
+                      f"{plan.predicted_aux_bytes:,} B != eval_shape "
+                      f"measured {measured:,} B (accounting drift)")
+            if budget >= dense:
+                all_dense = all(l.mode == MODE_DENSE for l in plan.leaves)
+                if not all_dense:
+                    failures += 1
+                    print("[check] FAIL: dense-cost budget must reproduce "
+                          "the nothing_policy dense baseline")
+                elif ok:
+                    print("[check] OK: plan == dense baseline (no "
+                          "compressed leaves)")
+            elif ok:
+                print(f"[check] OK: {plan.predicted_aux_bytes:,} B <= "
+                      f"{budget:,} B")
+    if args.json and plan is not None:
+        with open(args.json, "w") as f:
+            json.dump(plan.to_json(), f, indent=2)
+        print(f"[plan] wrote {args.json}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,240 @@
+"""The executable ``Plan``: per-leaf compression assignments + glue.
+
+A ``Plan`` is what the allocator emits and every downstream layer
+consumes:
+
+* ``sketch_policy()`` / ``rank1_policy()`` — PolicyFns for
+  ``core.optimizers.countsketch_adam``;
+* ``hparams()`` — a ``SketchHParams`` whose per-path ``overrides`` pin
+  the solved (depth, width) of every sketched leaf (replacing the global
+  ``compression`` ratio);
+* ``make_optimizer()`` — the ready-to-run Transform executing the plan;
+* ``specs()`` — the exact ``SketchSpec`` per sketched path/moment (seed
+  derivation included), for checkpoint-restore verification;
+* ``fold()`` — the Hokusai-folded plan (every sketch width halved),
+  matching ``checkpoint.store.fold_sketches`` applied to the state;
+* ``to_json()`` / ``from_json()`` — the manifest form
+  ``checkpoint.store`` records so restore reconstructs identical specs;
+* ``table()`` — the human-readable plan table ``launch/dryrun.py
+  --aux-budget`` prints before lowering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core import sketch as cs
+from repro.core.optimizers import SketchHParams, Transform
+from repro.core.partition import PolicyFn
+
+MODE_DENSE = "dense"
+MODE_SKETCH = "sketch"
+MODE_RANK1 = "rank1"
+
+_PLAN_VERSION = 1
+
+
+class InfeasibleBudgetError(ValueError):
+    """The budget is below the plan floor (cheapest feasible assignment)."""
+
+    def __init__(self, budget: int, floor: int):
+        super().__init__(
+            f"aux budget {budget:,} B is below the plan floor {floor:,} B "
+            f"(cheapest assignment: every compressible leaf at its smallest "
+            f"mode, everything else dense)")
+        self.budget = int(budget)
+        self.floor = int(floor)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    """One leaf's assignment.  ``bytes_m``/``bytes_v`` are the exact aux
+    bytes of the 1st/2nd-moment state this assignment allocates."""
+
+    path: str
+    shape: Tuple[int, ...]
+    dtype: str                  # parameter dtype (dense/rank-1 m buffers)
+    mode: str                   # dense | sketch | rank1
+    depth: int = 0              # sketch only
+    width: int = 0              # sketch only
+    bytes_m: int = 0
+    bytes_v: int = 0
+    predicted_error: float = 0.0
+
+    @property
+    def nbytes(self) -> int:
+        return self.bytes_m + self.bytes_v
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    leaves: Tuple[LeafPlan, ...]
+    budget_bytes: int
+    width_multiple: int = 256
+    sketch_dtype: str = "float32"
+    seed: int = 0
+    track_first_moment: bool = True
+    sketch_first_moment: bool = True
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def predicted_aux_bytes(self) -> int:
+        return sum(l.nbytes for l in self.leaves)
+
+    @property
+    def predicted_error(self) -> float:
+        return sum(l.predicted_error for l in self.leaves)
+
+    def leaf(self, path: str) -> Optional[LeafPlan]:
+        for l in self.leaves:
+            if l.path == path:
+                return l
+        return None
+
+    def n_by_mode(self) -> Dict[str, int]:
+        out = {MODE_DENSE: 0, MODE_SKETCH: 0, MODE_RANK1: 0}
+        for l in self.leaves:
+            out[l.mode] += 1
+        return out
+
+    # -- executable surface -------------------------------------------------
+    def sketch_policy(self) -> PolicyFn:
+        paths = frozenset(l.path for l in self.leaves if l.mode == MODE_SKETCH)
+
+        def policy(path: str, shape) -> bool:
+            return path in paths
+
+        return policy
+
+    def rank1_policy(self) -> PolicyFn:
+        paths = frozenset(l.path for l in self.leaves if l.mode == MODE_RANK1)
+
+        def policy(path: str, shape) -> bool:
+            return path in paths
+
+        return policy
+
+    def overrides(self) -> Tuple[Tuple[str, Tuple[int, int]], ...]:
+        return tuple((l.path, (l.depth, l.width)) for l in self.leaves
+                     if l.mode == MODE_SKETCH)
+
+    def hparams(self, base: Optional[SketchHParams] = None,
+                **replace: Any) -> SketchHParams:
+        """A ``SketchHParams`` executing this plan: per-path overrides pin
+        every sketched leaf's (depth, width); ``base`` keeps orthogonal
+        knobs (dense_chunk, lazy, backend, ...)."""
+        base = base if base is not None else SketchHParams()
+        return dataclasses.replace(
+            base, overrides=self.overrides(), seed=self.seed,
+            dtype=self.sketch_dtype, width_multiple=self.width_multiple,
+            **replace)
+
+    def make_optimizer(self, lr=1e-3, *, b1: float = 0.9, b2: float = 0.999,
+                       eps: float = 1e-8, cleaning=None,
+                       base_hparams: Optional[SketchHParams] = None,
+                       backend: Optional[str] = None) -> Transform:
+        from repro.core import optimizers as opt_lib
+        hp = self.hparams(base_hparams)
+        if backend is not None:
+            hp = dataclasses.replace(hp, backend=backend)
+        return opt_lib.countsketch_adam(
+            lr, b1=(0.0 if not self.track_first_moment else b1), b2=b2,
+            eps=eps, policy=self.sketch_policy(),
+            rank1_policy=self.rank1_policy(), hparams=hp, cleaning=cleaning,
+            track_first_moment=self.track_first_moment,
+            sketch_first_moment=self.sketch_first_moment)
+
+    def specs(self) -> Dict[str, Dict[str, cs.SketchSpec]]:
+        """Exact per-path SketchSpecs ({'m': ..., 'v': ...}) derived the
+        same way the optimizer derives them (seed included)."""
+        hp = self.hparams()
+        out: Dict[str, Dict[str, cs.SketchSpec]] = {}
+        for l in self.leaves:
+            if l.mode != MODE_SKETCH:
+                continue
+            d: Dict[str, cs.SketchSpec] = {}
+            if self.track_first_moment and self.sketch_first_moment:
+                d["m"] = hp.spec(l.path, l.shape, signed=True)
+            d["v"] = hp.spec(l.path, l.shape, signed=False)
+            out[l.path] = d
+        return out
+
+    # -- elastic fold -------------------------------------------------------
+    def fold(self) -> "Plan":
+        """The plan after a Hokusai fold: every sketch width halves (the
+        spec-level mirror of ``checkpoint.store.fold_sketches`` on the
+        state).  Collision error roughly doubles (CMS error ∝ 1/width);
+        dense and rank-1 leaves are untouched."""
+        new = []
+        for l in self.leaves:
+            if l.mode != MODE_SKETCH:
+                new.append(l)
+                continue
+            if l.width % 2 != 0:
+                raise ValueError(f"fold requires an even width at {l.path}")
+            bm, bv = l.bytes_m, l.bytes_v
+            if self.track_first_moment and self.sketch_first_moment:
+                bm //= 2
+            bv //= 2
+            new.append(dataclasses.replace(
+                l, width=l.width // 2, bytes_m=bm, bytes_v=bv,
+                predicted_error=l.predicted_error * 2.0))
+        return dataclasses.replace(self, leaves=tuple(new))
+
+    # -- serialization ------------------------------------------------------
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "version": _PLAN_VERSION,
+            "budget_bytes": int(self.budget_bytes),
+            "width_multiple": int(self.width_multiple),
+            "sketch_dtype": self.sketch_dtype,
+            "seed": int(self.seed),
+            "track_first_moment": self.track_first_moment,
+            "sketch_first_moment": self.sketch_first_moment,
+            "leaves": [{
+                "path": l.path, "shape": list(l.shape), "dtype": l.dtype,
+                "mode": l.mode, "depth": int(l.depth), "width": int(l.width),
+                "bytes_m": int(l.bytes_m), "bytes_v": int(l.bytes_v),
+                "predicted_error": float(l.predicted_error),
+            } for l in self.leaves],
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "Plan":
+        if d.get("version") != _PLAN_VERSION:
+            raise ValueError(f"unknown plan version {d.get('version')!r}")
+        leaves = tuple(LeafPlan(
+            path=e["path"], shape=tuple(int(s) for s in e["shape"]),
+            dtype=e["dtype"], mode=e["mode"], depth=int(e["depth"]),
+            width=int(e["width"]), bytes_m=int(e["bytes_m"]),
+            bytes_v=int(e["bytes_v"]),
+            predicted_error=float(e["predicted_error"]),
+        ) for e in d["leaves"])
+        return cls(leaves=leaves, budget_bytes=int(d["budget_bytes"]),
+                   width_multiple=int(d["width_multiple"]),
+                   sketch_dtype=d["sketch_dtype"], seed=int(d["seed"]),
+                   track_first_moment=bool(d["track_first_moment"]),
+                   sketch_first_moment=bool(d["sketch_first_moment"]))
+
+    # -- display ------------------------------------------------------------
+    def table(self) -> str:
+        """Human-readable plan table (dryrun --aux-budget prints this)."""
+        rows = [("path", "shape", "mode", "depth×width", "aux bytes",
+                 "pred. err")]
+        for l in sorted(self.leaves, key=lambda x: -x.nbytes):
+            dw = f"{l.depth}×{l.width}" if l.mode == MODE_SKETCH else "-"
+            rows.append((l.path, "×".join(str(s) for s in l.shape), l.mode,
+                         dw, f"{l.nbytes:,}",
+                         f"{l.predicted_error:.2e}" if l.predicted_error
+                         else "0"))
+        widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+        lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+                 for r in rows]
+        lines.insert(1, "-" * len(lines[0]))
+        counts = self.n_by_mode()
+        lines.append(
+            f"TOTAL predicted {self.predicted_aux_bytes:,} B "
+            f"<= budget {self.budget_bytes:,} B  "
+            f"({counts[MODE_SKETCH]} sketch / {counts[MODE_RANK1]} rank1 / "
+            f"{counts[MODE_DENSE]} dense)")
+        return "\n".join(lines)

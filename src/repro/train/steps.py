@@ -48,12 +48,27 @@ def family_module(cfg: ArchConfig):
 
 def build_optimizer(cfg: ArchConfig, mode: str, lr=1e-3,
                     cleaning: Optional[CleaningSchedule] = None,
-                    kernel_backend: Optional[str] = None) -> Transform:
+                    kernel_backend: Optional[str] = None,
+                    plan=None) -> Transform:
     """``kernel_backend`` selects the ``repro.kernels`` registry backend
     for the SPARSE-ROWS (ids, rows) paths — ``make_sparse_embedding_step``
     and any ``adam_sparse_rows`` caller sharing these hparams.  The dense
     whole-gradient leaf path of the ``countsketch_*`` transforms is an
-    XLA chunked scan and is backend-independent (DESIGN.md §10)."""
+    XLA chunked scan and is backend-independent (DESIGN.md §10).
+
+    ``plan``: a solved ``repro.plan.Plan`` — when given it supersedes the
+    regex policy + global compression entirely (the plan's PolicyFns and
+    per-path (depth, width) overrides execute instead).  Plans encode an
+    Adam-family moment layout, so only the modes in
+    ``repro.plan.MOMENT_MODES`` may be combined with one."""
+    if plan is not None:
+        from repro.plan import MOMENT_MODES
+        if mode not in MOMENT_MODES:
+            raise ValueError(
+                f"optimizer mode {mode!r} cannot execute a memory plan "
+                f"(Adam-family layouts only: {sorted(MOMENT_MODES)})")
+        return plan.make_optimizer(lr, cleaning=cleaning,
+                                   backend=kernel_backend)
     policy = SketchPolicy(min_rows=1024)
     hp = SketchHParams(compression=cfg.sketch_compression,
                        depth=cfg.sketch_depth,
@@ -122,10 +137,11 @@ def make_train_step(cfg: ArchConfig, *, optimizer: str = "cs_adam",
                     sampled_softmax: bool = False,
                     grad_clip: Optional[float] = 1.0,
                     cleaning: Optional[CleaningSchedule] = None,
-                    kernel_backend: Optional[str] = None) -> TrainStep:
+                    kernel_backend: Optional[str] = None,
+                    plan=None) -> TrainStep:
     mod = family_module(cfg)
     opt = build_optimizer(cfg, optimizer, lr=lr, cleaning=cleaning,
-                          kernel_backend=kernel_backend)
+                          kernel_backend=kernel_backend, plan=plan)
     clip = (opt_lib.clip_by_global_norm(grad_clip)
             if grad_clip is not None else (lambda g: g))
 

@@ -39,16 +39,23 @@ class TrainState:
 
 
 class Trainer:
-    """``fit`` runs [start, total); checkpoints; records step times."""
+    """``fit`` runs [start, total); checkpoints; records step times.
+
+    ``plan``: an optional ``repro.plan.Plan`` executing on this run (in
+    place of a bare sketch policy).  It is recorded in every checkpoint
+    manifest, so restore — including an elastic restore that Hokusai-folds
+    the sketches onto a halved budget — reconstructs the exact per-leaf
+    specs (``plan.fold()`` mirrors ``store.fold_sketches``)."""
 
     def __init__(self, step_fn: Callable, data, tcfg: TrainerConfig,
                  monitor: Optional[StragglerMonitor] = None,
-                 fail_at: Optional[int] = None):
+                 fail_at: Optional[int] = None, plan=None):
         self.step_fn = step_fn
         self.data = data
         self.tcfg = tcfg
         self.monitor = monitor or StragglerMonitor()
         self.history: List[Dict[str, float]] = []
+        self.plan = plan
         self._fail_at = fail_at       # test hook: simulate a crash
         self._pending_ckpt = None
 
@@ -60,9 +67,11 @@ class Trainer:
             if self._pending_ckpt is not None:
                 self._pending_ckpt.join()     # backpressure: one in flight
             tree = {"params": state.params, "opt_state": state.opt_state}
+            extra = ({"plan": self.plan.to_json()}
+                     if self.plan is not None else None)
             self._pending_ckpt = store.save(
                 t.ckpt_dir, state.step, tree,
-                async_=t.ckpt_async, keep=t.keep)
+                async_=t.ckpt_async, keep=t.keep, extra=extra)
 
     def restore_or_init(self, init_state: TrainState,
                         shardings=None) -> TrainState:
@@ -73,6 +82,11 @@ class Trainer:
                      "opt_state": init_state.opt_state}
         step, tree = store.restore(t.ckpt_dir, tree_like,
                                    shardings=shardings)
+        if self.plan is None:
+            saved = store.read_manifest(t.ckpt_dir, step).get("extra", {})
+            if saved.get("plan") is not None:
+                from repro.plan import Plan   # deferred: plan pulls configs
+                self.plan = Plan.from_json(saved["plan"])
         return TrainState(step=step, params=tree["params"],
                           opt_state=tree["opt_state"])
 

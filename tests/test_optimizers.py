@@ -113,6 +113,50 @@ class TestVariants:
         db, cb = O.state_bytes(dense_st), O.state_bytes(cs_st)
         assert cb < 0.45 * db   # ~5x compression on the dominant leaves
 
+    def test_everything_policy_never_inflates_memory(self):
+        """Regression: stress-test mode used to sketch tiny rank-2 leaves
+        (e.g. a (4, d) head) whose width-floored sketch is LARGER than the
+        dense buffer; the min_rows clamp keeps them dense."""
+        params = {"tok_embed": {"table": jnp.zeros((2048, 64))},
+                  "head": {"proj": jnp.zeros((4, 64))},
+                  "w": jnp.zeros((64, 64))}
+        assert not everything_policy("head/proj", (4, 64))
+        assert not everything_policy("w", (64, 64))
+        assert everything_policy("tok_embed/table", (2048, 64))
+        st = O.countsketch_adam(1e-3, policy=everything_policy).init(params)
+        # tiny + sub-min_rows leaves stay dense (same shape as the param)
+        assert st["v"]["head"]["proj"].shape == (4, 64)
+        assert st["v"]["w"].shape == (64, 64)
+        assert st["v"]["tok_embed"]["table"].ndim == 3
+        dense_bytes = O.state_bytes(O.adam(1e-3).init(params))
+        assert O.state_bytes(st) < dense_bytes
+
+    def test_rank1_policy_matches_nmf_baseline(self):
+        """countsketch_adam's rank-1 leaves (the planner's third mode)
+        reproduce lowrank.nmf_rank1_adam numerics."""
+        params, grads = _setup()
+        r1 = lambda path, shape: "tok_embed" in path
+        a = O.countsketch_adam(1e-3, rank1_policy=r1)
+        b = lowrank.nmf_rank1_adam(1e-3, policy=r1)
+        sa, sb = a.init(params), b.init(params)
+        assert isinstance(sa["v"]["tok_embed"]["table"], O.Rank1Moment)
+        p1, p2 = params, params
+        for _ in range(4):
+            u1, sa = a.update(grads, sa, p1)
+            u2, sb = b.update(grads, sb, p2)
+            p1, p2 = O.apply_updates(p1, u1), O.apply_updates(p2, u2)
+        assert tree_close(p1, p2)
+
+    def test_hparams_override_pins_spec(self):
+        """The planner's per-path (depth, width) override hook."""
+        hp = O.SketchHParams(overrides=(("tok_embed/table", (2, 48)),))
+        spec = hp.spec("tok_embed/table", (4096, 32), signed=False)
+        assert (spec.depth, spec.width, spec.dim) == (2, 48, 32)
+        # non-overridden paths keep the global compression behavior
+        other = hp.spec("lm_head/table", (4096, 32), signed=False)
+        assert other == O.SketchHParams().spec("lm_head/table", (4096, 32),
+                                               signed=False)
+
     def test_cleaning_decays_sketch(self):
         """Cleaning multiplies the sketch by alpha before the step-2 add:
         cleaned state == 0.5 * uncleaned_prev + fresh_update."""

@@ -1,0 +1,292 @@
+"""Memory-budget planner (DESIGN.md §11, ISSUE 2 acceptance).
+
+Property grid (budgets × power-law exponents): every emitted plan's
+*measured* aux bytes (summed over the real optimizer state) fit the
+budget and equal the prediction; at the dense budget the plan is
+bit-identical to the dense Adam baseline; below the floor it raises.
+Plus: for_budget (the inverse constructor), dtype-aware byte accounting,
+serialization/fold round-trips, and full-size config planning.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import optimizers as O
+from repro.core import sketch as cs
+from repro.plan import (InfeasibleBudgetError, MODE_DENSE, MODE_RANK1,
+                        MODE_SKETCH, Plan, TableStats, accounting,
+                        dense_budget_bytes, measure_freqs, min_budget_bytes,
+                        plan_for_params)
+from repro.plan import error_model
+
+
+def _params(n=4096, d=32):
+    return {"tok_embed": {"table": jnp.zeros((n, d))},
+            "lm_head": {"table": jnp.zeros((n // 2, d))},
+            "w": jnp.zeros((64, 64)),
+            "head": {"proj": jnp.zeros((4, d))}}
+
+
+PK = dict(width_multiple=16)
+
+
+class TestForBudget:
+    def test_inverse_of_for_param(self):
+        """for_budget(shape, for_param(...).nbytes()) recovers the spec."""
+        for comp in (2.0, 5.0, 20.0):
+            spec = cs.for_param((4096, 32), compression=comp,
+                                width_multiple=16)
+            inv = cs.for_budget((4096, 32), spec.nbytes(), depth=spec.depth,
+                                width_multiple=16)
+            assert inv.width == spec.width
+            assert inv.nbytes() == spec.nbytes()
+
+    def test_never_exceeds_budget(self):
+        for budget in (10_000, 50_000, 1_000_000):
+            spec = cs.for_budget((4096, 32), budget, width_multiple=16)
+            assert spec.nbytes() <= budget
+
+    def test_caps_at_identity_point(self):
+        spec = cs.for_budget((100, 8), 10**9, width_multiple=16)
+        assert spec.width == 112      # ceil(100/16)*16, not the budget max
+
+    def test_raises_below_one_stripe(self):
+        with pytest.raises(ValueError):
+            cs.for_budget((4096, 32), 100, width_multiple=16)
+
+    def test_nbytes_dtype_aware(self):
+        f32 = cs.SketchSpec(depth=3, width=64, dim=16, dtype=jnp.float32)
+        bf16 = dataclasses.replace(f32, dtype=jnp.bfloat16)
+        assert f32.nbytes() == 3 * 64 * 16 * 4
+        assert bf16.nbytes() == f32.nbytes() // 2
+        # planner accounting uses the same ground truth
+        _, v32 = accounting.sketch_leaf_bytes((4096, 16), jnp.float32, 3, 64,
+                                              track_first_moment=False)
+        _, v16 = accounting.sketch_leaf_bytes((4096, 16), jnp.float32, 3, 64,
+                                              sketch_dtype="bfloat16",
+                                              track_first_moment=False)
+        assert (v32, v16) == (f32.nbytes(), bf16.nbytes())
+
+
+class TestErrorModel:
+    def test_monotone_in_width(self):
+        st = TableStats(alpha=1.1)
+        errs = [error_model.countmin_error(st, 10_000, w, 3)
+                for w in (16, 64, 256, 1024)]
+        assert errs == sorted(errs, reverse=True)
+        errs = [error_model.countsketch_error(st, 10_000, w, 3)
+                for w in (16, 64, 256, 1024)]
+        assert errs == sorted(errs, reverse=True)
+
+    def test_herfindahl_zipf_vs_explicit(self):
+        """The head+integral zipf sum matches an explicit sum."""
+        n, a = 5000, 1.2
+        f = np.arange(1, n + 1, dtype=np.float64) ** (-a)
+        f /= f.sum()
+        explicit = float(np.sum(f * f))
+        assert abs(TableStats(alpha=a).herfindahl(n) - explicit) < 1e-6
+
+    def test_measured_freqs(self):
+        batches = [{"tokens": np.array([[0, 0, 1], [2, 0, 1]])}]
+        counts = measure_freqs(batches, 5)
+        assert counts.tolist() == [3, 2, 1, 0, 0]
+        st = TableStats(freqs=counts)
+        assert 0.0 < st.herfindahl(5) < 1.0
+
+
+BUDGET_FRACS = ("floor", 0.2, 0.35, 0.6, 0.9, 1.0, 1.4)
+ALPHAS = (0.8, 1.1, 1.5)
+
+
+class TestBudgetSoundness:
+    """ISSUE 2 acceptance: measured ≤ budget, within 5% of prediction (in
+    fact exact), dense budget ⇒ bit-identical dense Adam."""
+
+    @pytest.mark.parametrize("alpha", ALPHAS)
+    @pytest.mark.parametrize("frac", BUDGET_FRACS)
+    def test_measured_fits_budget_and_matches_prediction(self, frac, alpha):
+        params = _params()
+        dense = dense_budget_bytes(params)
+        floor = min_budget_bytes(params, default_alpha=alpha, **PK)
+        budget = floor if frac == "floor" else int(frac * dense)
+        plan = plan_for_params(params, budget, default_alpha=alpha, **PK)
+        assert plan.predicted_aux_bytes <= budget
+        state = plan.make_optimizer(1e-3).init(params)
+        measured = accounting.measure_aux_bytes(state)
+        assert measured <= budget
+        assert abs(measured - plan.predicted_aux_bytes) <= 0.05 * measured
+        assert measured == plan.predicted_aux_bytes   # exact by construction
+
+    @pytest.mark.parametrize("track,sketch_first",
+                             [(True, True), (True, False), (False, False)])
+    def test_moment_modes_accounting_exact(self, track, sketch_first):
+        params = _params(d=512)       # wide dim: rank-1 undercuts sketches
+        floor = min_budget_bytes(params, track_first_moment=track,
+                                 sketch_first_moment=sketch_first, **PK)
+        plan = plan_for_params(params, floor, track_first_moment=track,
+                               sketch_first_moment=sketch_first, **PK)
+        state = plan.make_optimizer(1e-3).init(params)
+        assert accounting.measure_aux_bytes(state) == plan.predicted_aux_bytes
+
+    def test_dense_budget_bit_identical_to_adam(self):
+        params = _params()
+        plan = plan_for_params(params, dense_budget_bytes(params), **PK)
+        assert all(l.mode == MODE_DENSE for l in plan.leaves)
+        opt, ref = plan.make_optimizer(1e-3), O.adam(1e-3)
+        sp, sd = opt.init(params), ref.init(params)
+        g = jax.tree_util.tree_map(
+            lambda p: jnp.sin(jnp.arange(p.size, dtype=jnp.float32)
+                              ).reshape(p.shape), params)
+        p1 = p2 = params
+        for _ in range(3):
+            u1, sp = opt.update(g, sp, p1)
+            u2, sd = ref.update(g, sd, p2)
+            p1, p2 = O.apply_updates(p1, u1), O.apply_updates(p2, u2)
+        for a, b in zip(jax.tree_util.tree_leaves(p1),
+                        jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_below_floor_raises(self):
+        params = _params()
+        floor = min_budget_bytes(params, **PK)
+        with pytest.raises(InfeasibleBudgetError) as ei:
+            plan_for_params(params, floor - 1, **PK)
+        assert ei.value.floor == floor
+
+    def test_larger_budget_never_worse(self):
+        params = _params()
+        dense = dense_budget_bytes(params)
+        floor = min_budget_bytes(params, **PK)
+        errs = [plan_for_params(params, b, **PK).predicted_error
+                for b in (floor, int(0.4 * dense), int(0.8 * dense), dense)]
+        assert errs == sorted(errs, reverse=True)
+        assert errs[-1] == 0.0
+
+    def test_rank1_floor_in_cs_v_mode(self):
+        """Wide tables + CS-V: the floor assignment is the rank-1 mode."""
+        params = {"tok_embed": {"table": jnp.zeros((4096, 512))}}
+        floor = min_budget_bytes(params, sketch_first_moment=False, **PK)
+        plan = plan_for_params(params, floor, sketch_first_moment=False, **PK)
+        assert plan.n_by_mode()[MODE_RANK1] == 1
+        # dense m (n·d·4) + fp32 rank-1 factors (n+d)·4
+        assert floor == 4096 * 512 * 4 + (4096 + 512) * 4
+
+
+class TestPlanObject:
+    def _plan(self, **kw):
+        params = _params()
+        dense = dense_budget_bytes(params)
+        return params, plan_for_params(params, int(0.35 * dense), **PK, **kw)
+
+    def test_json_roundtrip(self):
+        _, plan = self._plan()
+        assert Plan.from_json(plan.to_json()) == plan
+
+    def test_fold_halves_sketch_specs(self):
+        _, plan = self._plan()
+        folded = plan.fold()
+        specs, fspecs = plan.specs(), folded.specs()
+        assert specs and set(specs) == set(fspecs)
+        for path in specs:
+            for moment in specs[path]:
+                assert fspecs[path][moment] == specs[path][moment].fold()
+        assert folded.predicted_aux_bytes < plan.predicted_aux_bytes
+
+    def test_specs_match_optimizer_state_shapes(self):
+        params, plan = self._plan()
+        state = plan.make_optimizer(1e-3).init(params)
+        from repro.core.partition import leaf_paths
+        v_leaves = dict(leaf_paths(state["v"]))
+        for path, d in plan.specs().items():
+            assert v_leaves[path].shape == d["v"].shape
+
+    def test_table_renders(self):
+        _, plan = self._plan()
+        txt = plan.table()
+        assert "tok_embed/table" in txt and "TOTAL" in txt
+
+    def test_overrides_reach_optimizer(self):
+        """The per-path (depth, width) override is what the state uses."""
+        params, plan = self._plan()
+        sk = [l for l in plan.leaves if l.mode == MODE_SKETCH]
+        assert sk, "0.35x budget must sketch the tables"
+        state = plan.make_optimizer(1e-3).init(params)
+        from repro.core.partition import leaf_paths
+        v_leaves = dict(leaf_paths(state["v"]))
+        for l in sk:
+            assert v_leaves[l.path].shape == (l.depth, l.width, l.shape[1])
+
+
+class TestPlanTrains:
+    def test_plan_optimizer_converges(self):
+        """A mid-budget plan trains the sparse-row regression near dense
+        Adam (the planner's executable path, not just its accounting)."""
+        n, d = 1024, 16
+        key = jax.random.PRNGKey(0)
+        true_w = jax.random.normal(key, (n, d))
+        params = {"tok_embed": {"table": jnp.zeros((n, d))}}
+        dense = dense_budget_bytes(params)
+        plan = plan_for_params(params, int(0.6 * dense), **PK)
+        opt = plan.make_optimizer(0.05)
+        st = opt.init(params)
+        rng = np.random.RandomState(0)
+        zipf = (np.arange(1, n + 1) ** -1.1)
+        zipf /= zipf.sum()
+
+        @jax.jit
+        def step(params, st, ids):
+            def loss(p):
+                rows = p["tok_embed"]["table"][ids]
+                return jnp.mean(jnp.square(rows - true_w[ids]))
+            l, g = jax.value_and_grad(loss)(params)
+            u, st2 = opt.update(g, st, params)
+            return O.apply_updates(params, u), st2, l
+
+        for _ in range(60):
+            ids = jnp.asarray(rng.choice(n, size=64, p=zipf), jnp.int32)
+            params, st, l = step(params, st, ids)
+        hot = jnp.arange(32, dtype=jnp.int32)
+        final = float(jnp.mean(jnp.square(
+            params["tok_embed"]["table"][hot] - true_w[hot])))
+        assert np.isfinite(final) and final < 1.0
+
+
+class TestConfigPlanning:
+    """Full-size registry configs plan soundly at floor and dense (shape
+    trees only — nothing is allocated)."""
+
+    @pytest.mark.parametrize("arch", ["qwen2_0_5b", "yi_9b", "rwkv6_7b",
+                                      "whisper_medium", "qwen2_moe_a2_7b"])
+    def test_arch_plans_soundly(self, arch):
+        from repro import configs
+        from repro.plan import params_shapes_for_config, plan_for_config
+        cfg = configs.get(arch)
+        ps = params_shapes_for_config(cfg)
+        dense = dense_budget_bytes(ps)
+        floor = min_budget_bytes(ps, depth=cfg.sketch_depth)
+        for budget in ("floor", (floor + dense) // 2, dense):
+            plan = plan_for_config(cfg, budget, params_shapes=ps)
+            assert plan.predicted_aux_bytes <= plan.budget_bytes
+            assert plan.predicted_aux_bytes <= dense
+            # ground truth: eval_shape the real init, measure, compare
+            measured = accounting.measure_aux_bytes(
+                jax.eval_shape(plan.make_optimizer(1e-3).init, ps))
+            assert measured == plan.predicted_aux_bytes
+            assert measured <= plan.budget_bytes
+        assert all(l.mode == MODE_DENSE
+                   for l in plan_for_config(cfg, "1.0x",
+                                            params_shapes=ps).leaves)
+
+    def test_config_budget_field(self):
+        from repro import configs
+        from repro.plan import plan_for_config
+        cfg = configs.get("qwen2_0_5b")
+        assert cfg.aux_budget_bytes is not None
+        plan = plan_for_config(cfg, "config")
+        assert plan.budget_bytes == cfg.aux_budget_bytes
+        assert plan.predicted_aux_bytes <= cfg.aux_budget_bytes
+        assert plan.n_by_mode()[MODE_SKETCH] >= 1
+        assert cfg.reduced().aux_budget_bytes is None

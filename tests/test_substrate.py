@@ -105,6 +105,107 @@ class TestCheckpoint:
             S[:, :4] + S[:, 4:])
 
 
+class TestPlanCheckpoint:
+    """Crash-recovery of memory-planner output: the checkpoint manifest
+    records the plan, so restore — including an elastic restore onto a
+    HALVED budget (Hokusai fold) — reconstructs the exact specs."""
+
+    def _setup(self):
+        from repro.core.optimizers import apply_updates
+        from repro.plan import dense_budget_bytes, plan_for_params
+        params = {"tok_embed": {"table": jnp.zeros((2048, 16))},
+                  "w": jnp.zeros((32, 32))}
+        dense = dense_budget_bytes(params)
+        plan = plan_for_params(params, int(0.4 * dense), width_multiple=16)
+        assert any(l.mode == "sketch" for l in plan.leaves)
+        opt = plan.make_optimizer(0.05)
+        st = opt.init(params)
+        g = jax.tree_util.tree_map(
+            lambda p: jnp.cos(jnp.arange(p.size, dtype=jnp.float32)
+                              ).reshape(p.shape), params)
+        for _ in range(2):
+            u, st = opt.update(g, st, params)
+            params = apply_updates(params, u)
+        return params, plan, st
+
+    def test_manifest_records_plan(self, tmp_path):
+        from repro.plan import Plan
+        params, plan, st = self._setup()
+        store.save(tmp_path, 7, {"params": params, "opt_state": st},
+                   extra={"plan": plan.to_json()})
+        man = store.read_manifest(tmp_path)
+        assert Plan.from_json(man["extra"]["plan"]) == plan
+
+    def test_restore_onto_halved_budget_folds(self, tmp_path):
+        """Restored specs under a halved budget == plan.fold()'s specs,
+        and queries against the folded state stay finite."""
+        from repro.core import sketch as cs
+        from repro.plan import Plan
+        params, plan, st = self._setup()
+        store.save(tmp_path, 7, {"params": params, "opt_state": st},
+                   extra={"plan": plan.to_json()})
+        _, tree = store.restore(tmp_path, {"params": params,
+                                           "opt_state": st})
+        restored_plan = Plan.from_json(
+            store.read_manifest(tmp_path)["extra"]["plan"])
+        folded_plan = restored_plan.fold()
+        folded_state = store.fold_sketches(tree["opt_state"],
+                                           store.default_is_sketch)
+        for path, moments in folded_plan.specs().items():
+            orig = restored_plan.specs()[path]
+            for key, spec in moments.items():
+                assert spec == orig[key].fold()
+                leaf = folded_state[key]
+                for part in path.split("/"):
+                    leaf = leaf[part]
+                assert tuple(leaf.shape) == spec.shape
+                q = cs.query(spec, leaf,
+                             jnp.arange(64, dtype=jnp.int32))
+                assert np.isfinite(np.asarray(q)).all()
+
+    def test_trainer_records_and_recovers_plan(self, tmp_path):
+        """Trainer(plan=...) writes the plan with every checkpoint; a
+        fresh Trainer recovers it from the manifest on restore, and the
+        recovered plan rebuilds an optimizer whose SKETCHED state matches
+        the checkpoint shape-for-shape (the resume-without---aux-budget
+        flow in launch/train.py depends on exactly this)."""
+        from repro.plan import dense_budget_bytes, plan_for_params
+        from repro.core import optimizers as O
+        params = {"tok_embed": {"table": jnp.zeros((2048, 8))},
+                  "w": jnp.zeros((8, 4))}
+        plan = plan_for_params(params, dense_budget_bytes(params) // 2,
+                               width_multiple=16)
+        assert plan.n_by_mode()["sketch"] >= 1
+        opt = plan.make_optimizer(0.05)
+
+        def step_fn(p, s, batch):
+            def loss(pp):
+                rows = pp["w"][batch["tokens"][:, 0] % 8]
+                return jnp.mean(jnp.square(rows - 2.0))
+            l, g = jax.value_and_grad(loss)(p)
+            u, s = opt.update(g, s, p)
+            return O.apply_updates(p, u), s, {"loss": l}
+
+        data = ZipfLM(ZipfLMConfig(vocab_size=64, seq_len=4, global_batch=2))
+        tcfg = TrainerConfig(total_steps=4, ckpt_dir=str(tmp_path),
+                             ckpt_every=2, ckpt_async=False)
+        tr = Trainer(jax.jit(step_fn), data, tcfg, plan=plan)
+        st = TrainState(step=0, params=params, opt_state=opt.init(params))
+        out = tr.fit(st)
+        tr2 = Trainer(jax.jit(step_fn), data, tcfg)
+        assert tr2.plan is None
+        resumed = tr2.restore_or_init(st)
+        assert resumed.step == 4 and tr2.plan == plan
+        # the recovered plan reconstructs the exact state tree shapes
+        opt2 = tr2.plan.make_optimizer(0.05)
+        for a, b in zip(jax.tree_util.tree_leaves(opt2.init(params)),
+                        jax.tree_util.tree_leaves(resumed.opt_state)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(resumed.opt_state["v"]["tok_embed"]["table"]),
+            np.asarray(out.opt_state["v"]["tok_embed"]["table"]))
+
+
 class TestTrainer:
     def _setup(self, tmp_path, fail_at=None, total=12):
         from repro.core import optimizers as O
