@@ -1,19 +1,22 @@
-"""Paper Tables 5/6: optimizer-state memory + step time per scheme.
+"""Paper Tables 5/6: optimizer-state memory + step time per aux STORE.
 
 Protocol: a mid-size LM (vocab 16k, d=256) so the embedding/softmax aux
 state dominates, as in Wikitext-103/LM1B.  Reports bytes of optimizer
 state, steps/s, and the paper-style "Size" ratio vs dense Adam.
 
-Every scheme also records the **planner-predicted vs measured** aux bytes
-(``repro.plan.accounting``) — the predicted/measured gap is the planner's
-calibration check (EXPERIMENTS.md §Planner).  With ``--aux-budget`` the
-memory/accuracy trade-off axis is driven by the planner itself: each
-budget (a fraction of the dense-Adam aux cost, e.g. ``0.35x``, or
-``floor``) is solved into a per-leaf plan and trained, replacing the old
-hand compression sweep.
+The memory/accuracy axis is the ``--store`` axis (DESIGN.md §12): the
+same ``scale_by_adam`` rule runs over a ``DenseStore``, a
+``CountSketchStore``/``CountMinStore`` pair (the paper's CS-MV), or a
+``Rank1Store`` (LR-NMF-V) — one row per store kind, replacing the old
+per-scheme policy-flag plumbing.  Every row records **per-store
+predicted vs measured** aux bytes (the per-store ``bytes()`` codec
+method summed over the resolved StoreTree) — the predicted/measured gap
+is the store accounting's calibration check (EXPERIMENTS.md §Planner).
+With ``--aux-budget`` the planner itself drives extra rows: each budget
+is solved into a per-leaf plan, whose ``StoreTree`` then executes.
 
-    PYTHONPATH=src python benchmarks/memory_time.py --quick \
-        --aux-budget floor,0.35x,0.6x,1.0x
+    PYTHONPATH=src python -m benchmarks.memory_time --quick \
+        --store dense,sketch,rank1 --aux-budget floor,0.35x,1.0x
 """
 from __future__ import annotations
 
@@ -23,14 +26,41 @@ import jax
 
 from benchmarks.common import save_result, small_lm_cfg, strip_arrays, \
     train_small_lm
-from repro.core import lowrank, optimizers as O
-from repro.core.partition import SketchPolicy, nothing_policy
-from repro.models import transformer as tf
+from repro.core import optimizers as O
+from repro.core.partition import SketchPolicy, leaf_paths
+from repro.core.stores import (CountMinStore, CountSketchStore, DenseStore,
+                               Rank1Store, StoreTree)
 from repro.plan import accounting, parse_budget, plan_for_params, \
     min_budget_bytes
 
 POL = SketchPolicy(min_rows=512)
-HP = O.SketchHParams(compression=5.0, width_multiple=16)
+
+STORE_KINDS = ("dense", "sketch", "rank1")
+
+
+def store_tree_for(kind: str) -> StoreTree:
+    """The StoreTree one ``--store`` row executes: sketched/rank-1 aux on
+    the policy-selected tables, dense elsewhere."""
+    if kind == "dense":
+        return StoreTree()
+    if kind == "sketch":
+        return StoreTree.select(
+            m=CountSketchStore(compression=5.0, width_multiple=16),
+            v=CountMinStore(compression=5.0, width_multiple=16),
+            where=POL)
+    if kind == "rank1":
+        return StoreTree.select(m=DenseStore(), v=Rank1Store(), where=POL)
+    raise ValueError(f"unknown store kind {kind!r} (use {STORE_KINDS})")
+
+
+def predicted_aux_bytes(stores: StoreTree, ps) -> int:
+    """Sum of the per-store ``bytes()`` predictions over the resolved
+    tree — must equal ``accounting.measure_aux_bytes`` of the real state."""
+    total = 0
+    for path, leaf in leaf_paths(ps):
+        m, v = stores.resolve(path, tuple(leaf.shape), leaf.dtype)
+        total += (m.bytes() if m is not None else 0) + v.bytes()
+    return total
 
 
 def _entry(res, predicted):
@@ -43,38 +73,24 @@ def _entry(res, predicted):
     return out
 
 
-def run(quick: bool = False, aux_budgets=()):
+def run(quick: bool = False, store_kinds=STORE_KINDS, aux_budgets=()):
     steps = 30 if quick else 80
     cfg = small_lm_cfg(vocab=16384, d_model=256, n_layers=2)
     kw = dict(cfg=cfg, steps=steps, batch=4, seq=64)
+    from repro.models import transformer as tf
     ps = jax.eval_shape(lambda k: tf.init(k, cfg), jax.random.PRNGKey(0))
 
-    def predict(policy=nothing_policy, rank1_policy=nothing_policy,
-                track_first=True, sketch_first=True):
-        return accounting.predict_policy_bytes(
-            ps, policy=policy, rank1_policy=rank1_policy, hparams=HP,
-            track_first_moment=track_first, sketch_first_moment=sketch_first)
-
     out = {}
-    for name, opt, predicted in [
-        ("adam", O.adam(1e-3), predict()),
-        ("cs_mv", O.countsketch_adam(1e-3, policy=POL, hparams=HP),
-         predict(policy=POL)),
-        ("cs_v", O.countsketch_adam(1e-3, policy=POL, hparams=HP,
-                                    sketch_first_moment=False),
-         predict(policy=POL, sketch_first=False)),
-        ("cs_rmsprop_b1_0", O.countsketch_rmsprop(1e-3, policy=POL,
-                                                  hparams=HP),
-         predict(policy=POL, track_first=False, sketch_first=False)),
-        ("lr_nmf_v", lowrank.nmf_rank1_adam(1e-3, policy=POL),
-         predict(rank1_policy=POL)),
-        ("adagrad", O.adagrad(0.1), predict(track_first=False)),
-        ("cs_adagrad", O.countsketch_adagrad(0.1, policy=POL, hparams=HP),
-         predict(policy=POL, track_first=False)),
-    ]:
-        out[name] = _entry(train_small_lm(opt, **kw), predicted)
+    # --- the --store axis: one row per store kind, same Adam rule
+    for kind in store_kinds:
+        stores = store_tree_for(kind)
+        opt = O.adam_from_stores(1e-3, stores)
+        e = _entry(train_small_lm(opt, **kw),
+                   predicted_aux_bytes(stores, ps))
+        e["store"] = kind
+        out[f"store@{kind}"] = e
 
-    # --- planner-driven budget axis (replaces the hand compression sweep)
+    # --- planner-driven budget axis (the solved per-leaf StoreTree)
     dense = accounting.dense_budget_bytes(ps)
     floor = min_budget_bytes(ps, width_multiple=16, min_rows=512)
     for b in aux_budgets:
@@ -86,11 +102,16 @@ def run(quick: bool = False, aux_budgets=()):
                  plan_modes=plan.n_by_mode())
         out[f"plan@{b}"] = e
 
-    base = out["adam"]["opt_state_bytes"]
+    if not out:
+        raise ValueError("nothing to run: pass at least one --store kind "
+                         "or --aux-budget")
+    # paper-style "Size" ratio is ALWAYS vs dense Adam, whether or not a
+    # dense row was requested (dense aux + the 4 B step scalar)
+    base_bytes = dense + 4
     table = {k: {"bytes": v["opt_state_bytes"],
                  "predicted_aux_bytes": v["predicted_aux_bytes"],
                  "measured_aux_bytes": v["measured_aux_bytes"],
-                 "size_ratio": round(v["opt_state_bytes"] / base, 3),
+                 "size_ratio": round(v["opt_state_bytes"] / base_bytes, 3),
                  "steps_per_s": round(v["steps_per_s"], 2),
                  "final_loss": round(v["final_loss"], 3)}
              for k, v in out.items()}
@@ -103,9 +124,13 @@ def run(quick: bool = False, aux_budgets=()):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--store", default="dense,sketch,rank1",
+                    help="comma-separated store kinds (dense|sketch|rank1) "
+                         "— one benchmark row per kind")
     ap.add_argument("--aux-budget", default="",
                     help="comma-separated budgets driving the planner axis "
                          "('floor', fractions of dense like '0.35x', bytes)")
     a = ap.parse_args()
+    kinds = [s for s in a.store.split(",") if s]
     budgets = [b for b in a.aux_budget.split(",") if b]
-    print(run(quick=a.quick, aux_budgets=budgets))
+    print(run(quick=a.quick, store_kinds=kinds, aux_budgets=budgets))

@@ -3,17 +3,24 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Shows: (1) the Count-Sketch Tensor's UPDATE/QUERY on a power-law vector,
-(2) swapping dense Adam for CS-Adam on a model with a big embedding
-table, and (3) the memory the sketch frees.
+(2) the composable store/transform API — ``chain(clip, scale_by_adam(
+m_store=CountSketchStore(...), v_store=CountMinStore(...)),
+scale_by_lr(...))`` — next to the legacy ``countsketch_adam`` wrapper,
+which is the same rule chain minus the clip link (bit-identity of that
+pairing is pinned in tests/test_transforms.py), and (3) the memory each
+store choice frees.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sketch as cs
-from repro.core.optimizers import (SketchHParams, adam, apply_updates,
-                                   countsketch_adam, state_bytes)
+from repro.core.optimizers import (adam, apply_updates, countsketch_adam,
+                                   state_bytes)
 from repro.core.partition import SketchPolicy
+from repro.core.stores import CountMinStore, CountSketchStore, Rank1Store
+from repro.core.transforms import (chain, clip_by_global_norm, scale_by_adam,
+                                   scale_by_lr)
 
 
 def demo_sketch_tensor():
@@ -39,28 +46,49 @@ def demo_sketch_tensor():
         print(f"  heavy row |x|={mags[h]:7.1f}: rel err {err:.3f}")
 
 
-def demo_optimizer():
-    print("\n=== 2. CS-Adam as a drop-in (paper Alg. 4) ===")
+def demo_composable_optimizer():
+    print("\n=== 2. Composable store/transform API (paper Alg. 4) ===")
     key = jax.random.PRNGKey(0)
     params = {
         "tok_embed": {"table": jax.random.normal(key, (50_000, 64)) * 0.02},
         "lm_head": {"table": jax.random.normal(key, (50_000, 64)) * 0.02},
         "body": jax.random.normal(key, (64, 64)),
     }
-
-    dense = adam(1e-3)
-    sketched = countsketch_adam(
-        1e-3,
-        policy=SketchPolicy(min_rows=1024),          # embedding+softmax only
-        hparams=SketchHParams(compression=5.0))      # the paper's LM setting
-
     grads = jax.tree_util.tree_map(
         lambda p: jax.random.normal(key, p.shape) * 0.01, params)
-    for name, opt in [("dense Adam", dense), ("CS-Adam  ", sketched)]:
+    policy = SketchPolicy(min_rows=1024)        # embedding+softmax only
+
+    # the update rule (Adam) composed with its moment STORES: 1st moment
+    # in a signed Count-Sketch, 2nd in a Count-Min — the paper's CS-MV —
+    # at 5x compression, clipped and lr-scheduled, all one chain.
+    composed = chain(
+        clip_by_global_norm(1.0),
+        scale_by_adam(m_store=CountSketchStore(compression=5.0),
+                      v_store=CountMinStore(compression=5.0),
+                      where=policy),
+        scale_by_lr(1e-3))
+
+    # swapping a store swaps the memory/accuracy trade-off — the rule is
+    # untouched.  Rank1Store is the Adafactor-style LR-NMF-V baseline.
+    rank1 = chain(
+        clip_by_global_norm(1.0),
+        scale_by_adam(v_store=Rank1Store(), where=policy),
+        scale_by_lr(1e-3))
+
+    # the legacy wrapper: the same adam+lr chain behind a policy bridge
+    # (no clip link, so its trajectory differs from `composed` exactly by
+    # the clipping; state memory is identical)
+    legacy = countsketch_adam(1e-3, policy=policy)
+
+    for name, opt in [("dense Adam      ", adam(1e-3)),
+                      ("CS-Adam (chain) ", composed),
+                      ("rank-1 V (chain)", rank1),
+                      ("CS-Adam (legacy)", legacy)]:
         st = opt.init(params)
+        p = params
         for _ in range(3):
-            updates, st = opt.update(grads, st, params)
-            params2 = apply_updates(params, updates)
+            updates, st = opt.update(grads, st, p)
+            p = apply_updates(p, updates)
         mb = state_bytes(st) / 2**20
         print(f"  {name}: optimizer state {mb:7.2f} MiB")
     print("  (the paper's LM1B run saves 25% of total training memory"
@@ -69,4 +97,4 @@ def demo_optimizer():
 
 if __name__ == "__main__":
     demo_sketch_tensor()
-    demo_optimizer()
+    demo_composable_optimizer()

@@ -17,6 +17,9 @@ import numpy as np
 
 from repro.core import optimizers as O
 from repro.core.partition import SketchPolicy
+from repro.core.stores import CountMinStore, CountSketchStore
+from repro.core.transforms import chain, scale_by_adam, scale_by_lr, \
+    scale_by_rmsprop
 from repro.data import ZipfLM, ZipfLMConfig
 from repro.models import transformer as tf
 from repro.models.config import ArchConfig
@@ -51,11 +54,17 @@ def main() -> int:
     n_params = sum(l.size for l in jax.tree_util.tree_leaves(params))
     print(f"model: {cfg.name}  {n_params / 1e6:.1f}M params")
 
+    # the composable store/transform API (DESIGN.md §12): the Adam rule,
+    # parameterized by where its moments live, chained with the lr scale
     policy = SketchPolicy(min_rows=1024)
-    hp = O.SketchHParams(compression=5.0)
-    opt = {"cs_adam": O.countsketch_adam(1e-3, policy=policy, hparams=hp),
-           "cs_rmsprop": O.countsketch_rmsprop(1e-3, policy=policy,
-                                               hparams=hp),
+    m_store = CountSketchStore(compression=5.0)   # signed, median query
+    v_store = CountMinStore(compression=5.0)      # unsigned, min query
+    opt = {"cs_adam": chain(scale_by_adam(m_store=m_store, v_store=v_store,
+                                          where=policy),
+                            scale_by_lr(1e-3)),
+           "cs_rmsprop": chain(scale_by_rmsprop(v_store=v_store,
+                                                where=policy),
+                               scale_by_lr(1e-3)),
            "dense_adam": O.adam(1e-3)}[args.optimizer]
     st = opt.init(params)
     dense_bytes = O.state_bytes(O.adam(1e-3).init(params))

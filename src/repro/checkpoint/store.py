@@ -193,3 +193,30 @@ def default_is_sketch(path: str, leaf) -> bool:
             and any(t in f"/{path}/" for t in
                     ("/tok_embed/", "/lm_head/", "/class_head/",
                      "/embed_out/", "/softmax/")))
+
+
+def is_sketch_from_store_tree(store_tree) -> Callable[[str, Any], bool]:
+    """Exact fold predicate from a rule-based ``repro.core.stores
+    .StoreTree`` (e.g. ``StoreTree.from_json(manifest["extra"]
+    ["store_tree"])``): a leaf folds iff its moment path is one the tree
+    stores in a count-sketch/count-min — no name heuristics.  Moment
+    paths look like ``.../opt_state/m/<param path>`` in the saved tree."""
+    for name, d in (("default_m", store_tree.default_m),
+                    ("default_v", store_tree.default_v)):
+        if d is not None and d.kind in ("sketch", "countmin"):
+            raise ValueError(
+                f"cannot derive a fold predicate from a StoreTree whose "
+                f"{name} is sketch-backed ({d.kind!r}): defaults apply to "
+                f"unenumerated paths — use exact-path rules (e.g. "
+                f"Plan.store_tree()) for foldable trees")
+    sketchy = set()
+    for p, m, v in store_tree.rules:
+        if m is not None and m.kind in ("sketch", "countmin"):
+            sketchy.add(f"m/{p}")
+        if v is not None and v.kind in ("sketch", "countmin"):
+            sketchy.add(f"v/{p}")
+
+    def pred(path: str, leaf) -> bool:
+        return any(path == s or path.endswith(f"/{s}") for s in sketchy)
+
+    return pred

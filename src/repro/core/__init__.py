@@ -1,17 +1,25 @@
 """Core of the paper's contribution: count-sketch compressed optimizers.
 
 Public API:
-    from repro.core import sketch, optimizers, lowrank
+    from repro.core import sketch, stores, transforms, optimizers, lowrank
+    from repro.core.stores import CountSketchStore, CountMinStore, StoreTree
+    from repro.core.transforms import chain, scale_by_adam, scale_by_lr
     from repro.core.partition import SketchPolicy
     from repro.core.cleaning import CleaningSchedule
 """
-from repro.core import sketch  # noqa: F401
+from repro.core import sketch, stores, transforms  # noqa: F401
 from repro.core.cleaning import CleaningSchedule  # noqa: F401
 from repro.core.hashing import HashFamily  # noqa: F401
 from repro.core.optimizers import (  # noqa: F401
-    Rank1Moment, SketchHParams, Transform, adagrad, adam, apply_updates,
-    clip_by_global_norm, countsketch_adagrad, countsketch_adam,
-    countsketch_momentum, countsketch_rmsprop, linear_decay, momentum, sgd,
-    state_bytes)
+    Rank1Moment, SketchHParams, Transform, adagrad, adam, adam_from_stores,
+    apply_updates, clip_by_global_norm, countsketch_adagrad,
+    countsketch_adam, countsketch_momentum, countsketch_rmsprop,
+    linear_decay, momentum, sgd, state_bytes, stores_from_policy)
 from repro.core.partition import (  # noqa: F401
     SketchPolicy, everything_policy, nothing_policy)
+from repro.core.stores import (  # noqa: F401
+    AuxStore, CountMinStore, CountSketchStore, DenseStore, Rank1Store,
+    StoreTree)
+from repro.core.transforms import (  # noqa: F401
+    chain, scale_by_adagrad, scale_by_adam, scale_by_adam_rows, scale_by_lr,
+    scale_by_momentum, scale_by_rmsprop)

@@ -1,83 +1,66 @@
 """Count-sketch first-order optimizers (paper §4, Algorithms 2–4) plus the
 dense baselines they are measured against.
 
-API is optax-shaped but self-contained (optax is not a dependency):
+Since the store/transform refactor (DESIGN.md §12) this module is a thin
+compatibility layer: the update rules live in ``repro.core.transforms``
+(``scale_by_momentum`` / ``scale_by_adagrad`` / ``scale_by_adam`` /
+``scale_by_rmsprop``), the storage codecs in ``repro.core.stores``
+(``DenseStore`` / ``CountSketchStore`` / ``CountMinStore`` /
+``Rank1Store``), and every entry point here is ``chain(rule,
+scale_by_lr(lr))`` presented in the historical ``{"step", "m", "v"}``
+state layout — so checkpoints, sharding rules, and manifests written by
+the old API restore unchanged under the new one.
 
-    opt = countsketch_adam(lr=1e-3, policy=SketchPolicy())
+    opt = countsketch_adam(lr=1e-3, policy=SketchPolicy())   # legacy form
+    opt = chain(clip_by_global_norm(1.0),                    # composable form
+                scale_by_adam(m_store=CountSketchStore(compression=5.0),
+                              v_store=CountMinStore(compression=5.0),
+                              where=SketchPolicy()),
+                scale_by_lr(1e-3))
     state = opt.init(params)
     updates, state = opt.update(grads, state, params)
     params = apply_updates(params, updates)
 
-For every parameter leaf the ``policy`` decides whether its auxiliary
-variables live in a count-sketch tensor (compressed ``depth × width × dim``)
-or a dense same-shape buffer.  Sketched and dense leaves coexist inside one
-transform — exactly how the paper runs LM1B (embedding+softmax sketched,
-LSTM body dense).
+The legacy ``policy``/``rank1_policy``/``hparams.overrides`` triple
+dispatch is bridged onto a ``StoreTree`` by ``stores_from_policy``;
+moment *states* evolve bit-identically to the pre-refactor monoliths
+(the parity grid in tests/test_legacy_parity.py pins this).  The one
+numerical change is the final lr-scale association — ``-η·(x/denom)``
+instead of ``(-η·x)/denom`` — a ≤1-ulp shift on emitted updates that
+composability requires (DESIGN.md §12).
 
-The per-row *sparse* fast path (``*_sparse_rows``) is used by the
-sampled-softmax / embedding train steps where the gradient is materialized
-as (ids, rows) instead of a dense (n, d) array — computation then scales
-with the number of touched rows, the regime the paper targets.
+The per-row *sparse* fast path (``sparse_rows_adam`` /
+``adam_sparse_rows``) is used by the sampled-softmax / embedding train
+steps where the gradient is materialized as (ids, rows) instead of a
+dense (n, d) array — computation then scales with the number of touched
+rows, the regime the paper targets.
 """
 from __future__ import annotations
 
 import dataclasses
-import zlib
-from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import sketch as cs
+from repro.core import stores as stores_lib
+from repro.core import transforms as T
 from repro.core.cleaning import CleaningSchedule, maybe_clean
 from repro.core.partition import PolicyFn, nothing_policy
-
-Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
-
-
-class Transform(NamedTuple):
-    init: Callable[[Any], Any]
-    update: Callable[..., Tuple[Any, Any]]  # (grads, state, params) -> (updates, state)
-
-
-class Rank1Moment(NamedTuple):
-    """Non-negative rank-1 factorization of a 2nd-moment leaf (Adafactor /
-    the paper's LR-NMF-V baseline): V̂ᵢⱼ = rᵢ·cⱼ / mean(r).  A pytree node
-    (NamedTuple), so it checkpoints, shards (replicated vectors), and
-    tree-maps like any other state leaf."""
-    r: jnp.ndarray  # (n,) row sums EMA
-    c: jnp.ndarray  # (d,) col sums EMA
-
-
-def _lr_at(lr: Schedule, step: jnp.ndarray) -> jnp.ndarray:
-    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+from repro.core.stores import (  # noqa: F401  (public re-exports)
+    AuxStore, CountMinStore, CountSketchStore, DenseStore, Rank1Moment,
+    Rank1Store, StoreTree, leaf_seed as _leaf_seed)
+from repro.core.transforms import (  # noqa: F401  (public re-exports)
+    Schedule, Transform, _lr_at, _path_str, chain, clip_by_global_norm,
+    scale_by_adagrad, scale_by_adam, scale_by_adam_rows, scale_by_lr,
+    scale_by_momentum, scale_by_rmsprop, tree_map_with_path)
 
 
 def apply_updates(params, updates):
     return jax.tree_util.tree_map(
         lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
         params, updates, is_leaf=lambda x: x is None)
-
-
-def _path_str(kp) -> str:
-    parts = []
-    for k in kp:
-        if hasattr(k, "key"):
-            parts.append(str(k.key))
-        elif hasattr(k, "idx"):
-            parts.append(str(k.idx))
-        else:
-            parts.append(str(k))
-    return "/".join(parts)
-
-
-def tree_map_with_path(fn, tree, *rest):
-    return jax.tree_util.tree_map_with_path(
-        lambda kp, *leaves: fn(_path_str(kp), *leaves), tree, *rest)
-
-
-def _leaf_seed(path: str, base_seed: int) -> int:
-    return (zlib.crc32(path.encode()) ^ (base_seed * 0x9E3779B1)) & 0x7FFFFFFF
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,7 +71,7 @@ class SketchHParams:
 
     ``dense_chunk``: the dense-gradient path processes the n rows in
     chunks of this size inside one ``lax.scan`` — query(pre-step sketch),
-    delta, scatter, and the parameter-update row all fused per chunk, the
+    delta, scatter, and the direction row all fused per chunk, the
     XLA mirror of the Pallas ``cs_adam_fused`` kernel.  Peak temp drops
     from O(depth·n·d) to O(depth·chunk·d).  0 disables chunking (the
     reference unchunked path; bit-identical results).
@@ -104,10 +87,10 @@ class SketchHParams:
     'tiled' | 'interpret') or None/'auto' for the per-host best (tiled on
     TPU, xla elsewhere).  See DESIGN.md §10.
 
-    ``overrides``: per-path (depth, width) assignments — the hook the
-    memory-budget planner (``repro.plan``, DESIGN.md §11) uses to replace
-    the global ``compression`` ratio with a solved per-leaf spec.  A
-    tuple-of-tuples (not a dict) so the dataclass stays hashable.
+    ``overrides``: per-path (depth, width) assignments.  Legacy hook; new
+    code pins per-leaf specs through a ``StoreTree`` instead (the
+    planner's ``Plan.store_tree()`` — DESIGN.md §12).  A tuple-of-tuples
+    (not a dict) so the dataclass stays hashable.
 
     ``dtype``: element type of the sketch arrays ('float32' | 'bfloat16'
     | ...).  ``SketchSpec.nbytes`` is dtype-aware, so the planner's byte
@@ -150,136 +133,122 @@ class SketchHParams:
                             identity=self.identity)
 
 
-def _pick_chunk(n: int, target: int) -> int:
-    """Largest divisor of n that is ≤ target (rows are vocab-padded to a
-    multiple of 128, so a 128-granular divisor always exists)."""
-    if target <= 0 or n <= target:
-        return n
-    for c in range(target, 0, -1):
-        if n % c == 0:
-            return c
-    return n
+# ---------------------------------------------------------------------------
+# Legacy-layout adapter + policy → StoreTree bridge
+# ---------------------------------------------------------------------------
+
+def _with_lr(rule: Transform, lr: Schedule) -> Transform:
+    """``chain(rule, scale_by_lr(lr))`` presented in the legacy state
+    layout: the rule's own ``{"step", ...}`` dict IS the optimizer state
+    (the lr link's step counter always equals the rule's, so it is
+    reconstructed rather than stored — old checkpoints restore as-is)."""
+    chained = T.chain(rule, T.scale_by_lr(lr))
+
+    def init(params=None):
+        state, _lr_state = chained.init(params)
+        return state
+
+    def update(grads, state, params=None):
+        u, (state, _lr_state) = chained.update(
+            grads, (state, {"step": state["step"]}), params)
+        return u, state
+
+    return Transform(init, update)
 
 
-def _row_active(g):
-    """1.0 for rows with any non-zero gradient, else 0.0 (lazy updates)."""
-    return jnp.any(g != 0, axis=-1, keepdims=True).astype(jnp.float32)
+def stores_from_policy(policy: PolicyFn = nothing_policy, *,
+                       rank1_policy: PolicyFn = nothing_policy,
+                       hparams: SketchHParams = SketchHParams(),
+                       cleaning: Optional[CleaningSchedule] = None,
+                       track_first_moment: bool = True,
+                       sketch_first_moment: bool = True,
+                       rule: str = "adam") -> StoreTree:
+    """Bridge the legacy ``PolicyFn``/``rank1_policy``/``overrides``
+    triple dispatch onto a ``StoreTree``.  Per-leaf sketch specs (seed
+    derivation included) are exactly what ``hparams.spec`` produced, so
+    states are interchangeable with the pre-refactor monoliths.
+
+    ``rule`` picks the slot layout: 'adam' fills (m, v); 'momentum' a
+    signed sketch in the m slot only; 'adagrad' a count-min in the v
+    slot only."""
+    track = track_first_moment
+
+    def _dense_m():
+        return DenseStore() if track else None
+
+    if rule == "momentum":
+        def resolver(path, shape):
+            if policy(path, shape):
+                return (CountSketchStore(
+                    spec=hparams.spec(path, shape, signed=True)), None)
+            return None
+        return StoreTree(default_m=DenseStore(), default_v=None,
+                         resolver=resolver)
+
+    if rule == "adagrad":
+        def resolver(path, shape):
+            if policy(path, shape):
+                return (None, CountMinStore(
+                    spec=hparams.spec(path, shape, signed=False),
+                    cleaning=cleaning))
+            return None
+        return StoreTree(default_m=None, default_v=DenseStore(),
+                         resolver=resolver)
+
+    if rule != "adam":
+        raise ValueError(f"unknown rule {rule!r} (adam | momentum | adagrad)")
+
+    def resolver(path, shape):
+        if rank1_policy(path, shape):
+            return (_dense_m(), Rank1Store())
+        if policy(path, shape):
+            if track and sketch_first_moment:
+                m = CountSketchStore(
+                    spec=hparams.spec(path, shape, signed=True))
+            else:
+                m = _dense_m()
+            return (m, CountMinStore(
+                spec=hparams.spec(path, shape, signed=False),
+                cleaning=cleaning))
+        return None
+
+    return StoreTree(default_m=_dense_m(), default_v=DenseStore(),
+                     resolver=resolver)
 
 
-def _sketched_rows_scan(g, carry0, step_chunk, chunk: int):
-    """Run ``step_chunk(carry, ids, g_chunk) -> (carry, u_chunk)`` over row
-    chunks of the dense gradient ``g`` (n, d) in one ``lax.scan``.  Returns
-    (final_carry, u (n, d))."""
-    n, d = g.shape
-    chunk = _pick_chunk(n, chunk)
-    nc = n // chunk
-    ids = jnp.arange(n, dtype=jnp.int32).reshape(nc, chunk)
-
-    def body(carry, xs):
-        return step_chunk(carry, *xs)
-
-    carry, u = jax.lax.scan(body, carry0, (ids, g.reshape(nc, chunk, d)))
-    return carry, u.reshape(n, d)
-
-
-def _sketched_rows_scan_x(g, extra, carry0, step_chunk, chunk: int):
-    """As ``_sketched_rows_scan`` but with an extra (n, d) array chunked
-    alongside the gradient (CS-V mode passes dense m̂ rows through)."""
-    n, d = g.shape
-    chunk = _pick_chunk(n, chunk)
-    nc = n // chunk
-    ids = jnp.arange(n, dtype=jnp.int32).reshape(nc, chunk)
-    xs = (ids, g.reshape(nc, chunk, d), extra.reshape(nc, chunk, d))
-
-    def body(carry, xs_):
-        return step_chunk(carry, *xs_)
-
-    carry, u = jax.lax.scan(body, carry0, xs)
-    return carry, u.reshape(n, d)
-
-
-def _aux_step(spec, S, delta, strict: bool):
-    """delta: the linear increment for this auxiliary variable.
-    Returns (new_state, new_estimate).  Dense leaves: spec is None."""
-    if spec is None:
-        new = S + delta
-        return new, new
-    ids = jnp.arange(delta.shape[0], dtype=jnp.int32)
-    if strict:
-        return cs.query_after_update(spec, S, ids, delta)
-    return cs.update_and_query(spec, S, ids, delta)
+def adam_from_stores(lr: Schedule, stores: StoreTree, *, b1: float = 0.9,
+                     b2: float = 0.999, eps: float = 1e-8,
+                     dense_chunk: int = 8192, lazy: bool = True,
+                     strict_paper: bool = False) -> Transform:
+    """``chain(scale_by_adam(stores=...), scale_by_lr(lr))`` in the legacy
+    ``{"step", "m", "v"}`` state layout — what the memory-budget planner
+    executes (``plan.Plan.make_optimizer``) and what the benchmarks'
+    ``--store`` axis drives."""
+    return _with_lr(T.scale_by_adam(b1=b1, b2=b2, eps=eps, stores=stores,
+                                    dense_chunk=dense_chunk, lazy=lazy,
+                                    strict_paper=strict_paper), lr)
 
 
 # ---------------------------------------------------------------------------
-# Dense baselines
+# Dense baselines (wrappers over the same rules, all-dense stores)
 # ---------------------------------------------------------------------------
 
 def sgd(lr: Schedule) -> Transform:
-    def init(params):
-        return {"step": jnp.zeros((), jnp.int32)}
-
-    def update(grads, state, params=None):
-        step = state["step"] + 1
-        eta = _lr_at(lr, step)
-        updates = jax.tree_util.tree_map(lambda g: -eta * g, grads)
-        return updates, {"step": step}
-
-    return Transform(init, update)
+    return T.scale_by_lr(lr)
 
 
 def momentum(lr: Schedule, gamma: float = 0.9) -> Transform:
     """Dense Polyak momentum: m ← γm + g ; x ← x − ηm."""
-    def init(params):
-        return {"step": jnp.zeros((), jnp.int32),
-                "m": jax.tree_util.tree_map(jnp.zeros_like, params)}
-
-    def update(grads, state, params=None):
-        step = state["step"] + 1
-        eta = _lr_at(lr, step)
-        m = jax.tree_util.tree_map(lambda mm, g: gamma * mm + g, state["m"], grads)
-        updates = jax.tree_util.tree_map(lambda mm: -eta * mm, m)
-        return updates, {"step": step, "m": m}
-
-    return Transform(init, update)
+    return _with_lr(T.scale_by_momentum(gamma), lr)
 
 
 def adagrad(lr: Schedule, eps: float = 1e-10) -> Transform:
-    def init(params):
-        return {"step": jnp.zeros((), jnp.int32),
-                "v": jax.tree_util.tree_map(jnp.zeros_like, params)}
-
-    def update(grads, state, params=None):
-        step = state["step"] + 1
-        eta = _lr_at(lr, step)
-        v = jax.tree_util.tree_map(lambda vv, g: vv + g * g, state["v"], grads)
-        updates = jax.tree_util.tree_map(
-            lambda g, vv: -eta * g / (jnp.sqrt(vv) + eps), grads, v)
-        return updates, {"step": step, "v": v}
-
-    return Transform(init, update)
+    return _with_lr(T.scale_by_adagrad(eps), lr)
 
 
 def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
          eps: float = 1e-8) -> Transform:
-    def init(params):
-        z = jax.tree_util.tree_map(jnp.zeros_like, params)
-        return {"step": jnp.zeros((), jnp.int32), "m": z,
-                "v": jax.tree_util.tree_map(jnp.zeros_like, params)}
-
-    def update(grads, state, params=None):
-        step = state["step"] + 1
-        eta = _lr_at(lr, step)
-        m = jax.tree_util.tree_map(lambda mm, g: b1 * mm + (1 - b1) * g,
-                                   state["m"], grads)
-        v = jax.tree_util.tree_map(lambda vv, g: b2 * vv + (1 - b2) * g * g,
-                                   state["v"], grads)
-        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
-        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
-        updates = jax.tree_util.tree_map(
-            lambda mm, vv: -eta * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps), m, v)
-        return updates, {"step": step, "m": m, "v": v}
-
-    return Transform(init, update)
+    return _with_lr(T.scale_by_adam(b1=b1, b2=b2, eps=eps), lr)
 
 
 # ---------------------------------------------------------------------------
@@ -290,50 +259,10 @@ def countsketch_momentum(lr: Schedule, gamma: float = 0.9, *,
                          policy: PolicyFn = nothing_policy,
                          hparams: SketchHParams = SketchHParams()) -> Transform:
     """Paper Alg. 2.  Linear form: m += (γ−1)·m_{t−1} + g."""
-
-    def _spec(path, leaf):
-        return hparams.spec(path, leaf.shape, signed=True) \
-            if policy(path, leaf.shape) else None
-
-    def init(params):
-        m = tree_map_with_path(
-            lambda p, leaf: cs.init(_spec(p, leaf)) if _spec(p, leaf) is not None
-            else jnp.zeros_like(leaf), params)
-        return {"step": jnp.zeros((), jnp.int32), "m": m}
-
-    def update(grads, state, params=None):
-        step = state["step"] + 1
-        eta = _lr_at(lr, step)
-
-        def leaf(path, g, M):
-            spec = hparams.spec(path, g.shape, signed=True) \
-                if policy(path, g.shape) else None
-            if spec is None:
-                m_new = gamma * M + g
-                return m_new, -eta * m_new
-            if hparams.dense_chunk and not hparams.strict_paper:
-                def chunk_step(carry, ids, gc):
-                    act = _row_active(gc) if hparams.lazy else 1.0
-                    delta = ((gamma - 1.0) * cs.query(spec, M, ids) + gc) * act
-                    m_old = cs.query(spec, M, ids)
-                    carry = cs.update(spec, carry, ids, delta)
-                    return carry, -eta * act * (m_old + delta)
-                return _sketched_rows_scan(g, M, chunk_step,
-                                           hparams.dense_chunk)
-            act = _row_active(g) if hparams.lazy else 1.0
-            m_old = cs.query_dense(spec, M, g.shape[0])
-            delta = ((gamma - 1.0) * m_old + g) * act
-            M, m_new = _aux_step(spec, M, delta, hparams.strict_paper)
-            return M, -eta * act * m_new
-
-        pairs = tree_map_with_path(leaf, grads, state["m"])
-        m = jax.tree_util.tree_map(lambda t: t[0], pairs,
-                                   is_leaf=lambda x: isinstance(x, tuple))
-        updates = jax.tree_util.tree_map(lambda t: t[1], pairs,
-                                         is_leaf=lambda x: isinstance(x, tuple))
-        return updates, {"step": step, "m": m}
-
-    return Transform(init, update)
+    stores = stores_from_policy(policy, hparams=hparams, rule="momentum")
+    return _with_lr(T.scale_by_momentum(
+        gamma, stores=stores, dense_chunk=hparams.dense_chunk,
+        lazy=hparams.lazy, strict_paper=hparams.strict_paper), lr)
 
 
 def countsketch_adagrad(lr: Schedule, eps: float = 1e-10, *,
@@ -341,47 +270,11 @@ def countsketch_adagrad(lr: Schedule, eps: float = 1e-10, *,
                         hparams: SketchHParams = SketchHParams(),
                         cleaning: Optional[CleaningSchedule] = None) -> Transform:
     """Paper Alg. 3: cumulative squared gradient in a Count-Min sketch."""
-
-    def init(params):
-        def leaf(path, p):
-            if policy(path, p.shape):
-                return cs.init(hparams.spec(path, p.shape, signed=False))
-            return jnp.zeros_like(p)
-        return {"step": jnp.zeros((), jnp.int32),
-                "v": tree_map_with_path(leaf, params)}
-
-    def update(grads, state, params=None):
-        step = state["step"] + 1
-        eta = _lr_at(lr, step)
-
-        def leaf(path, g, V):
-            spec = hparams.spec(path, g.shape, signed=False) \
-                if policy(path, g.shape) else None
-            if spec is None:
-                v_new = V + g * g
-                return v_new, -eta * g / (jnp.sqrt(v_new) + eps)
-            V_in = maybe_clean(cleaning, V, step)
-            if hparams.dense_chunk and not hparams.strict_paper:
-                def chunk_step(carry, ids, gc):
-                    v_old = cs.query(spec, V_in, ids)
-                    dv = gc * gc
-                    carry = cs.update(spec, carry, ids, dv)
-                    v_new = jnp.maximum(v_old + dv, 0.0)
-                    return carry, -eta * gc / (jnp.sqrt(v_new) + eps)
-                return _sketched_rows_scan(g, V_in, chunk_step,
-                                           hparams.dense_chunk)
-            V_out, v_new = _aux_step(spec, V_in, g * g, hparams.strict_paper)
-            v_new = jnp.maximum(v_new, 0.0)
-            return V_out, -eta * g / (jnp.sqrt(v_new) + eps)
-
-        pairs = tree_map_with_path(leaf, grads, state["v"])
-        v = jax.tree_util.tree_map(lambda t: t[0], pairs,
-                                   is_leaf=lambda x: isinstance(x, tuple))
-        updates = jax.tree_util.tree_map(lambda t: t[1], pairs,
-                                         is_leaf=lambda x: isinstance(x, tuple))
-        return updates, {"step": step, "v": v}
-
-    return Transform(init, update)
+    stores = stores_from_policy(policy, hparams=hparams, cleaning=cleaning,
+                                rule="adagrad")
+    return _with_lr(T.scale_by_adagrad(
+        eps, stores=stores, dense_chunk=hparams.dense_chunk,
+        strict_paper=hparams.strict_paper), lr)
 
 
 def countsketch_adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
@@ -402,149 +295,18 @@ def countsketch_adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
     paper's "CS-V" ablation: dense 1st moment, sketched 2nd.
 
     ``rank1_policy`` selects leaves whose 2nd moment lives in a
-    ``Rank1Moment`` NMF factorization instead (1st moment dense), the
+    ``Rank1Store`` NMF factorization instead (1st moment dense), the
     LR-NMF-V baseline numerics of ``lowrank.nmf_rank1_adam`` — so one
     transform can execute a mixed dense / sketch / rank-1 memory plan
     (``repro.plan``).  It takes precedence over ``policy``."""
-
-    def init(params):
-        def m_leaf(path, p):
-            if not track_first_moment:
-                return None
-            if rank1_policy(path, p.shape):
-                return jnp.zeros_like(p)          # rank-1 keeps a dense m
-            if policy(path, p.shape) and sketch_first_moment:
-                return cs.init(hparams.spec(path, p.shape, signed=True))
-            return jnp.zeros_like(p)
-
-        def v_leaf(path, p):
-            if rank1_policy(path, p.shape):
-                return Rank1Moment(jnp.zeros((p.shape[0],), jnp.float32),
-                                   jnp.zeros((p.shape[1],), jnp.float32))
-            if policy(path, p.shape):
-                return cs.init(hparams.spec(path, p.shape, signed=False))
-            return jnp.zeros_like(p)
-
-        return {"step": jnp.zeros((), jnp.int32),
-                "m": tree_map_with_path(m_leaf, params),
-                "v": tree_map_with_path(v_leaf, params)}
-
-    def update(grads, state, params=None):
-        step = state["step"] + 1
-        eta = _lr_at(lr, step)
-        t = step.astype(jnp.float32)
-        bc1 = 1.0 - b1 ** t
-        bc2 = 1.0 - b2 ** t
-
-        def leaf(path, g, M, V):
-            if rank1_policy(path, g.shape):
-                # LR-NMF-V leaf: rank-1 2nd moment, dense 1st — numerics
-                # identical to lowrank.nmf_rank1_adam.
-                g2 = jnp.square(g.astype(jnp.float32))
-                r = b2 * V.r + (1.0 - b2) * jnp.mean(g2, axis=1)
-                c = b2 * V.c + (1.0 - b2) * jnp.mean(g2, axis=0)
-                vhat = (r[:, None] * c[None, :]) / (jnp.mean(r) + 1e-30)
-                if track_first_moment:
-                    m_new = b1 * M + (1.0 - b1) * g
-                    M_out, mhat = m_new, m_new / bc1
-                else:
-                    M_out, mhat = None, g
-                upd = -eta * mhat / (jnp.sqrt(jnp.maximum(vhat / bc2, 0.0))
-                                     + eps)
-                return M_out, Rank1Moment(r, c), upd
-
-            sketched = policy(path, g.shape)
-            sketched_m = sketched and sketch_first_moment and track_first_moment
-
-            if not sketched:
-                # fully dense leaf
-                if not track_first_moment:
-                    mhat, M_out = g, None
-                else:
-                    m_new = b1 * M + (1.0 - b1) * g
-                    M_out = m_new
-                    mhat = m_new / bc1
-                v_new = b2 * V + (1.0 - b2) * g * g
-                upd = -eta * mhat / (jnp.sqrt(v_new / bc2) + eps)
-                return M_out, v_new, upd
-
-            spec_v = hparams.spec(path, g.shape, signed=False)
-            spec_m = hparams.spec(path, g.shape, signed=True) \
-                if sketched_m else None
-            V_in = maybe_clean(cleaning, V, step)
-
-            # dense 1st moment alongside a sketched 2nd (paper's CS-V mode)
-            if track_first_moment and not sketched_m:
-                m_dense = b1 * M + (1.0 - b1) * g
-                M_out, mhat_rows = m_dense, m_dense / bc1
-            else:
-                M_out, mhat_rows = None, None
-
-            if hparams.dense_chunk and not hparams.strict_paper:
-                # fused chunked scan: query(pre-step) → delta → scatter →
-                # param-update row, O(depth·chunk·d) temps.  Queries close
-                # over the PRE-step sketches (canonical batch semantics).
-                def chunk_step(carry, ids, gc, *mh_c):
-                    act = _row_active(gc) if hparams.lazy else 1.0
-                    if sketched_m:
-                        m_old = cs.query(spec_m, M, ids)
-                        dm = (1.0 - b1) * (gc - m_old) * act
-                        carry["M"] = cs.update(spec_m, carry["M"], ids, dm)
-                        mh = (m_old + dm) / bc1
-                    elif track_first_moment:
-                        mh = mh_c[0]
-                    else:
-                        mh = gc
-                    v_old = cs.query(spec_v, V_in, ids)
-                    dv = (1.0 - b2) * (gc * gc - v_old) * act
-                    carry["V"] = cs.update(spec_v, carry["V"], ids, dv)
-                    vh = jnp.maximum(v_old + dv, 0.0) / bc2
-                    return carry, -eta * act * mh / (jnp.sqrt(vh) + eps)
-
-                carry0 = {"V": V_in}
-                if sketched_m:
-                    carry0["M"] = M
-                if mhat_rows is not None:
-                    carry, upd = _sketched_rows_scan_x(
-                        g, mhat_rows, carry0, chunk_step, hparams.dense_chunk)
-                else:
-                    carry, upd = _sketched_rows_scan(
-                        g, carry0, chunk_step, hparams.dense_chunk)
-                if sketched_m:
-                    M_out = carry["M"]
-                return M_out, carry["V"], upd
-
-            # reference unchunked path (also the strict-paper 3-pass mode)
-            act = _row_active(g) if hparams.lazy else 1.0
-            if sketched_m:
-                m_old = cs.query_dense(spec_m, M, g.shape[0])
-                delta_m = (1.0 - b1) * (g - m_old) * act
-                M_out, m_new = _aux_step(spec_m, M, delta_m,
-                                         hparams.strict_paper)
-                mhat = m_new / bc1
-            elif track_first_moment:
-                mhat = mhat_rows
-            else:
-                mhat = g
-            v_old = cs.query_dense(spec_v, V_in, g.shape[0])
-            delta_v = (1.0 - b2) * (g * g - v_old) * act
-            V_out, v_new = _aux_step(spec_v, V_in, delta_v,
-                                     hparams.strict_paper)
-            v_new = jnp.maximum(v_new, 0.0)
-            upd = -eta * act * mhat / (jnp.sqrt(v_new / bc2) + eps)
-            return M_out, V_out, upd
-
-        triples = tree_map_with_path(leaf, grads, state["m"], state["v"]) \
-            if track_first_moment else \
-            tree_map_with_path(lambda p, g, V: leaf(p, g, None, V),
-                               grads, state["v"])
-        is3 = lambda x: isinstance(x, tuple)
-        m = jax.tree_util.tree_map(lambda tpl: tpl[0], triples, is_leaf=is3)
-        v = jax.tree_util.tree_map(lambda tpl: tpl[1], triples, is_leaf=is3)
-        updates = jax.tree_util.tree_map(lambda tpl: tpl[2], triples, is_leaf=is3)
-        return updates, {"step": step, "m": m, "v": v}
-
-    return Transform(init, update)
+    stores = stores_from_policy(
+        policy, rank1_policy=rank1_policy, hparams=hparams,
+        cleaning=cleaning, track_first_moment=track_first_moment,
+        sketch_first_moment=sketch_first_moment)
+    return adam_from_stores(lr, stores, b1=b1, b2=b2, eps=eps,
+                            dense_chunk=hparams.dense_chunk,
+                            lazy=hparams.lazy,
+                            strict_paper=hparams.strict_paper)
 
 
 def countsketch_rmsprop(lr: Schedule, b2: float = 0.999, eps: float = 1e-8, *,
@@ -552,10 +314,15 @@ def countsketch_rmsprop(lr: Schedule, b2: float = 0.999, eps: float = 1e-8, *,
                         hparams: SketchHParams = SketchHParams(),
                         cleaning: Optional[CleaningSchedule] = None) -> Transform:
     """The β₁=0 optimizer analyzed by Theorem 5.1 (Count-Min Sketch Adam
-    without the 1st moment)."""
-    return countsketch_adam(lr, b1=0.0, b2=b2, eps=eps, policy=policy,
-                            hparams=hparams, cleaning=cleaning,
-                            track_first_moment=False)
+    without the 1st moment) — ``chain(scale_by_rmsprop(...),
+    scale_by_lr(lr))``, bit-identical to
+    ``countsketch_adam(track_first_moment=False)``."""
+    stores = stores_from_policy(policy, hparams=hparams, cleaning=cleaning,
+                                track_first_moment=False,
+                                sketch_first_moment=False)
+    return _with_lr(T.scale_by_rmsprop(
+        b2=b2, eps=eps, stores=stores, dense_chunk=hparams.dense_chunk,
+        lazy=hparams.lazy, strict_paper=hparams.strict_paper), lr)
 
 
 # ---------------------------------------------------------------------------
@@ -572,7 +339,9 @@ def adam_sparse_rows(spec_m: Optional[cs.SketchSpec], spec_v: cs.SketchSpec,
                      backend: Optional[str] = None):
     """CS-Adam on ``k`` touched rows.  Returns (M', V', row_updates).
 
-    ``spec_m``/``M`` may be None for the β₁=0 variant.
+    The functional kernel-facing core (spec-level, lr fused) under the
+    ``scale_by_adam_rows`` transform; ``spec_m``/``M`` may be None for
+    the β₁=0 variant.
 
     ``backend`` routes the step through the kernel registry in
     ``repro.kernels`` ('ref' | 'xla' | 'stream' | 'tiled' | 'interpret',
@@ -626,8 +395,12 @@ def sparse_rows_adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
                      path: str = "sparse_rows",
                      hparams: SketchHParams = SketchHParams(),
                      track_first_moment: bool = True,
-                     cleaning: Optional[CleaningSchedule] = None) -> Transform:
-    """Optax-shaped CS-Adam for ONE (n, d) table fed (ids, rows) gradients.
+                     cleaning: Optional[CleaningSchedule] = None,
+                     m_store: Optional[AuxStore] = None,
+                     v_store: Optional[AuxStore] = None) -> Transform:
+    """Optax-shaped CS-Adam for ONE (n, d) table fed (ids, rows) gradients
+    — ``chain(scale_by_adam_rows(m_store=..., v_store=...),
+    scale_by_lr(lr))`` in the legacy state layout.
 
     The transform owns the sketch state for a single embedding/softmax
     table whose gradients arrive as ``{"ids": (k,), "rows": (k, d)}`` —
@@ -636,34 +409,44 @@ def sparse_rows_adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
     named by ``hparams.backend`` (DESIGN.md §10), so the same training code
     runs the jnp oracle on CPU and the tiled Pallas pipeline on TPU.
 
-    ``track_first_moment=False`` is the β₁=0 (Theorem 5.1 / RMSProp)
-    variant the paper uses for the 49.5M-class Amazon task.
-    """
+    ``m_store``/``v_store`` override the ``hparams``-derived stores (any
+    bound ``CountSketchStore``/``CountMinStore``, e.g. from a planner
+    ``StoreTree``).  ``track_first_moment=False`` is the β₁=0 (Theorem
+    5.1 / RMSProp) variant the paper uses for the 49.5M-class Amazon
+    task."""
     if hparams.strict_paper:
         raise ValueError("sparse_rows_adam always runs through the kernel "
                          "registry, which has no strict_paper (3-pass) "
                          "path — use adam_sparse_rows(backend=None, "
                          "strict_paper=True) instead")
-    spec_v = hparams.spec(path, shape, signed=False)
-    spec_m = hparams.spec(path, shape, signed=True) \
-        if track_first_moment else None
-
-    def init(params=None):
-        return {"step": jnp.zeros((), jnp.int32),
-                "m": cs.init(spec_m) if track_first_moment else None,
-                "v": cs.init(spec_v)}
-
-    def update(grads, state, params=None):
-        ids, rows = grads["ids"], grads["rows"]
-        step = state["step"] + 1
-        M, V, upd = adam_sparse_rows(
-            spec_m, spec_v, state["m"], state["v"], ids, rows, step,
-            lr=lr, b1=b1, b2=b2, eps=eps, cleaning=cleaning,
-            backend=hparams.backend if hparams.backend is not None
-            else "auto")
-        return {"ids": ids, "rows": upd}, {"step": step, "m": M, "v": V}
-
-    return Transform(init, update)
+    shape = tuple(int(s) for s in shape)
+    if v_store is None:
+        v_store = CountMinStore(spec=hparams.spec(path, shape, signed=False),
+                                cleaning=cleaning, shape=shape)
+    elif cleaning is not None:
+        # an explicitly requested cleaning schedule must not be silently
+        # dropped just because the store came from elsewhere (e.g. a plan
+        # StoreTree, which carries no cleaning by default)
+        if not isinstance(v_store, CountMinStore):
+            raise ValueError(
+                f"cleaning is a Count-Min hook (paper §4); the given "
+                f"v_store is a {type(v_store).__name__} — drop cleaning= "
+                f"or use a CountMinStore")
+        if v_store.cleaning is None:
+            v_store = dataclasses.replace(v_store, cleaning=cleaning)
+        elif v_store.cleaning != cleaning:
+            raise ValueError(
+                f"conflicting cleaning schedules: v_store carries "
+                f"{v_store.cleaning} but cleaning={cleaning} was also "
+                f"passed — set exactly one")
+    if m_store is None and track_first_moment:
+        m_store = CountSketchStore(spec=hparams.spec(path, shape, signed=True),
+                                   shape=shape)
+    rule = T.scale_by_adam_rows(
+        b1=b1, b2=b2, eps=eps,
+        m_store=m_store if track_first_moment else None, v_store=v_store,
+        backend=hparams.backend if hparams.backend is not None else "auto")
+    return _with_lr(rule, lr)
 
 
 def apply_sparse_updates(table: jnp.ndarray, updates) -> jnp.ndarray:
@@ -691,18 +474,6 @@ def momentum_sparse_rows(spec: cs.SketchSpec, M: jnp.ndarray,
 # Utilities
 # ---------------------------------------------------------------------------
 
-def clip_by_global_norm(max_norm: float):
-    """Returns grads scaled so that ‖grads‖₂ ≤ max_norm (paper clips at
-    0.1–1.0 in every experiment)."""
-    def clip(grads):
-        leaves = jax.tree_util.tree_leaves(grads)
-        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                          for g in leaves))
-        scale = jnp.minimum(1.0, max_norm / (gn + 1e-12))
-        return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads)
-    return clip
-
-
 def linear_decay(base_lr: float, total_steps: int, floor: float = 0.0) -> Schedule:
     def sched(step):
         frac = jnp.clip(step.astype(jnp.float32) / float(total_steps), 0.0, 1.0)
@@ -711,7 +482,11 @@ def linear_decay(base_lr: float, total_steps: int, floor: float = 0.0) -> Schedu
 
 
 def state_bytes(state) -> int:
-    """Total bytes of optimizer auxiliary state (the paper's Tables 5/6)."""
-    return int(sum(leaf.size * leaf.dtype.itemsize
-                   for leaf in jax.tree_util.tree_leaves(state)
-                   if hasattr(leaf, "dtype")))
+    """Total bytes of optimizer auxiliary state (the paper's Tables 5/6):
+    every array leaf counted shape × itemsize — dense buffers, sketch
+    tensors, ``Rank1Moment`` factor pairs, the step scalar — with
+    ``None`` leaves (β₁=0 layouts) contributing zero.  Exact on
+    ``jax.eval_shape`` trees too; each store's own ``bytes()`` is the
+    per-leaf predictor this total is regression-tested against
+    (tests/test_stores.py)."""
+    return stores_lib.tree_bytes(state)

@@ -1,0 +1,502 @@
+"""AuxStore codecs: how an optimizer's auxiliary moment is *stored*.
+
+The paper's core observation is that the storage of a moment (dense
+buffer, count-sketch, count-min, rank-1 factorization) is orthogonal to
+the update rule that maintains it (momentum, Adagrad, Adam).  This module
+is the storage half: a small codec protocol
+
+    store.init()                    -> state            (zeroed)
+    store.accumulate(state, delta,
+                     rows=None, scale=1.0) -> state     (linear add)
+    store.decay(state, beta)        -> state            (multiply)
+    store.read(state, rows=None)    -> values           (estimate rows)
+    store.bytes(state=None)         -> int              (exact footprint)
+    store.clean(state, step)        -> state            (cleaning hook)
+
+with four implementations:
+
+  * ``DenseStore``       — the uncompressed same-shape buffer (exact);
+  * ``CountSketchStore`` — signed Count-Sketch, median query (signed
+    variables: momentum, Adam 1st moment);
+  * ``CountMinStore``    — unsigned Count-Min, min query, with the
+    paper's §4 cleaning heuristic as an optional hook (non-negative
+    variables: Adagrad / Adam 2nd moment);
+  * ``Rank1Store``       — the non-negative rank-1 (row ⊗ col) factor
+    pair of Adafactor / the paper's LR-NMF-V baseline.
+
+Stores are frozen dataclasses that double as *factories*: construct one
+with sizing knobs (``compression``, ``depth``, ...) and ``bind(path,
+shape, dtype)`` resolves it against a concrete parameter leaf (deriving
+the per-leaf hash seed exactly like the legacy ``SketchHParams.spec``
+did, so states are checkpoint-compatible across the two APIs).
+
+``StoreTree`` maps parameter paths to ``(m_store, v_store)`` pairs — the
+single resolver that replaces the old ``PolicyFn`` / ``rank1_policy`` /
+``SketchHParams.overrides`` triple dispatch.  Resolution order:
+``resolver`` callable (programmatic, e.g. the legacy policy bridge) >
+exact-path ``rules`` (the serializable form the planner emits) >
+``default_m``/``default_v``.  ``m_store=None`` anywhere means "no first
+moment" (the β₁=0 / Theorem 5.1 layout).  Rule-based trees serialize to
+JSON and ride in checkpoint manifests (see ``plan.Plan.store_tree``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as cs
+from repro.core.cleaning import CleaningSchedule, maybe_clean
+from repro.core.sketch import SketchSpec
+
+
+class Rank1Moment(NamedTuple):
+    """Non-negative rank-1 factorization of a 2nd-moment leaf (Adafactor /
+    the paper's LR-NMF-V baseline): V̂ᵢⱼ = rᵢ·cⱼ / mean(r).  A pytree node
+    (NamedTuple), so it checkpoints, shards (replicated vectors), and
+    tree-maps like any other state leaf."""
+    r: jnp.ndarray  # (n,) row sums EMA
+    c: jnp.ndarray  # (d,) col sums EMA
+
+
+def leaf_seed(path: str, base_seed: int) -> int:
+    """Per-leaf hash seed — identical derivation to the pre-refactor
+    ``SketchHParams`` so sketch state is portable across the two APIs."""
+    return (zlib.crc32(path.encode()) ^ (base_seed * 0x9E3779B1)) & 0x7FFFFFFF
+
+
+def _size(shape) -> int:
+    size = 1
+    for s in shape:
+        size *= int(s)
+    return size
+
+
+@dataclasses.dataclass(frozen=True)
+class AuxStore:
+    """Base codec.  Subclasses set ``kind`` and implement the protocol.
+    ``accepts(shape)`` is the cheap pre-check ``StoreTree.select`` uses to
+    fall back to dense on leaves the store cannot represent."""
+
+    kind = "abstract"
+
+    # -- factory surface ----------------------------------------------------
+    def accepts(self, shape: Tuple[int, ...]) -> bool:
+        return True
+
+    def bind(self, path: str, shape: Tuple[int, ...], dtype: Any) -> "AuxStore":
+        return self
+
+    # -- codec protocol -----------------------------------------------------
+    def init(self):
+        raise NotImplementedError
+
+    def accumulate(self, state, delta, rows=None, *, scale: float = 1.0):
+        raise NotImplementedError
+
+    def decay(self, state, beta):
+        raise NotImplementedError
+
+    def read(self, state, rows=None):
+        raise NotImplementedError
+
+    def bytes(self, state=None) -> int:
+        raise NotImplementedError
+
+    def clean(self, state, step):
+        """Cleaning hook (paper §4) — identity except on ``CountMinStore``."""
+        return state
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseStore(AuxStore):
+    """The uncompressed baseline: a same-shape (or ``dtype``-overridden)
+    zero buffer.  ``rows`` indexing reads/accumulates single rows — the
+    rows-indexed view the sparse-gradient paths use."""
+
+    dtype: Optional[str] = None          # None: the parameter's own dtype
+    shape: Optional[Tuple[int, ...]] = None   # set by bind()
+
+    kind = "dense"
+
+    def bind(self, path, shape, dtype):
+        return dataclasses.replace(
+            self, shape=tuple(int(s) for s in shape),
+            dtype=self.dtype or jnp.dtype(dtype).name)
+
+    def init(self):
+        return jnp.zeros(self.shape, jnp.dtype(self.dtype))
+
+    def accumulate(self, state, delta, rows=None, *, scale: float = 1.0):
+        if scale != 1.0:
+            delta = scale * delta
+        if rows is None:
+            return state + delta
+        return state.at[rows].add(delta.astype(state.dtype))
+
+    def decay(self, state, beta):
+        return beta * state
+
+    def read(self, state, rows=None):
+        return state if rows is None else state[rows]
+
+    def bytes(self, state=None) -> int:
+        if state is not None:
+            return _size(state.shape) * jnp.dtype(state.dtype).itemsize
+        return _size(self.shape) * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class _SketchStoreBase(AuxStore):
+    """Shared machinery of the two sketch codecs.  Factory mode sizes the
+    sketch from ``compression`` (exactly like ``sketch.for_param``); an
+    explicit ``width`` pins it; an explicit ``spec`` bypasses sizing
+    entirely (the planner / sparse-rows paths)."""
+
+    compression: float = 5.0
+    depth: int = 3
+    width: Optional[int] = None
+    width_multiple: int = 256
+    seed: int = 0
+    dtype: str = "float32"
+    identity: bool = False
+    spec: Optional[SketchSpec] = None         # set by bind() (or explicit)
+    shape: Optional[Tuple[int, int]] = None   # set by bind()
+
+    _signed = True
+
+    def accepts(self, shape) -> bool:
+        return len(shape) == 2
+
+    def bind(self, path, shape, dtype):
+        shape = tuple(int(s) for s in shape)
+        if self.spec is not None:
+            return self if self.shape is not None \
+                else dataclasses.replace(self, shape=shape)
+        if len(shape) != 2:
+            raise ValueError(f"{type(self).__name__} needs a rank-2 "
+                             f"(rows, dim) leaf, got {shape} at {path!r}")
+        if self.width is not None:
+            spec = SketchSpec(depth=int(self.depth), width=int(self.width),
+                              dim=shape[1], signed=self._signed,
+                              seed=leaf_seed(path, self.seed),
+                              dtype=jnp.dtype(self.dtype),
+                              identity=self.identity)
+        else:
+            spec = cs.for_param(shape, compression=self.compression,
+                                depth=self.depth, signed=self._signed,
+                                seed=leaf_seed(path, self.seed),
+                                width_multiple=self.width_multiple,
+                                dtype=jnp.dtype(self.dtype),
+                                identity=self.identity)
+        return dataclasses.replace(self, spec=spec, shape=shape)
+
+    def _rows(self, rows):
+        if rows is not None:
+            return rows
+        if self.shape is None:
+            raise ValueError("rows=None needs a store bound to a table "
+                             "shape (bind() it, or pass explicit rows)")
+        return jnp.arange(self.shape[0], dtype=jnp.int32)
+
+    def init(self):
+        return cs.init(self.spec)
+
+    def accumulate(self, state, delta, rows=None, *, scale: float = 1.0):
+        if scale != 1.0:
+            delta = scale * delta
+        return cs.update(self.spec, state, self._rows(rows), delta)
+
+    def decay(self, state, beta):
+        return cs.decay(state, beta)
+
+    def read(self, state, rows=None):
+        return cs.query(self.spec, state, self._rows(rows))
+
+    def bytes(self, state=None) -> int:
+        return self.spec.nbytes()
+
+
+@dataclasses.dataclass(frozen=True)
+class CountSketchStore(_SketchStoreBase):
+    """Signed Count-Sketch (median query) — signed variables: momentum,
+    the Adam 1st moment."""
+    kind = "sketch"
+    _signed = True
+
+
+@dataclasses.dataclass(frozen=True)
+class CountMinStore(_SketchStoreBase):
+    """Unsigned Count-Min (min query) — non-negative variables: Adagrad /
+    Adam 2nd moment.  ``cleaning`` is the paper's §4 decay heuristic,
+    applied by ``clean(state, step)`` before each step's reads."""
+    cleaning: Optional[CleaningSchedule] = None
+
+    kind = "countmin"
+    _signed = False
+
+    def clean(self, state, step):
+        return maybe_clean(self.cleaning, state, step)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rank1Store(AuxStore):
+    """Non-negative rank-1 (row, col) factor pair: state is a
+    ``Rank1Moment``; ``read`` reconstructs V̂ = r⊗c / mean(r) (optionally
+    only at ``rows``).  ``accumulate`` adds ``scale·mean(delta)`` along
+    each axis — exactly the LR-NMF-V EMA increment of
+    ``lowrank.nmf_rank1_adam`` when chained after ``decay(β₂)``."""
+
+    eps: float = 1e-30
+    shape: Optional[Tuple[int, int]] = None   # set by bind()
+
+    kind = "rank1"
+
+    def accepts(self, shape) -> bool:
+        return len(shape) == 2
+
+    def bind(self, path, shape, dtype):
+        shape = tuple(int(s) for s in shape)
+        if len(shape) != 2:
+            raise ValueError(f"Rank1Store needs a rank-2 (rows, dim) leaf, "
+                             f"got {shape} at {path!r}")
+        return dataclasses.replace(self, shape=shape)
+
+    def init(self):
+        n, d = self.shape
+        return Rank1Moment(jnp.zeros((n,), jnp.float32),
+                           jnp.zeros((d,), jnp.float32))
+
+    def accumulate(self, state, delta, rows=None, *, scale: float = 1.0):
+        if rows is not None:
+            raise ValueError("Rank1Store.accumulate takes full (n, d) "
+                             "deltas (rows=None)")
+        r = state.r + scale * jnp.mean(delta, axis=1)
+        c = state.c + scale * jnp.mean(delta, axis=0)
+        return Rank1Moment(r, c)
+
+    def decay(self, state, beta):
+        return Rank1Moment(beta * state.r, beta * state.c)
+
+    def read(self, state, rows=None):
+        r = state.r if rows is None else state.r[rows]
+        return (r[:, None] * state.c[None, :]) / (jnp.mean(state.r) + self.eps)
+
+    def bytes(self, state=None) -> int:
+        if state is not None:
+            return (_size(state.r.shape) * jnp.dtype(state.r.dtype).itemsize
+                    + _size(state.c.shape) * jnp.dtype(state.c.dtype).itemsize)
+        n, d = self.shape
+        return (n + d) * 4
+
+
+# ---------------------------------------------------------------------------
+# StoreTree: the per-path resolver
+# ---------------------------------------------------------------------------
+
+# (path, shape) -> None (fall through) | (m_store | None, v_store | None)
+StoreResolver = Callable[[str, Tuple[int, ...]],
+                         Optional[Tuple[Optional[AuxStore], Optional[AuxStore]]]]
+
+_DENSE = DenseStore()
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreTree:
+    """path → (m_store, v_store).  Resolution order: ``resolver`` >
+    exact-path ``rules`` > defaults.  A ``None`` store in the m slot means
+    "no first moment" for that leaf (β₁=0); in the v slot it means the
+    transform does not use a second moment (momentum)."""
+
+    rules: Tuple[Tuple[str, Optional[AuxStore], Optional[AuxStore]], ...] = ()
+    default_m: Optional[AuxStore] = _DENSE
+    default_v: Optional[AuxStore] = _DENSE
+    resolver: Optional[StoreResolver] = None
+
+    def resolve(self, path: str, shape, dtype
+                ) -> Tuple[Optional[AuxStore], Optional[AuxStore]]:
+        """The bound ``(m_store, v_store)`` pair for one parameter leaf."""
+        pair = self.resolver(path, tuple(shape)) if self.resolver else None
+        if pair is None:
+            for p, m, v in self.rules:
+                if p == path:
+                    pair = (m, v)
+                    break
+        if pair is None:
+            pair = (self.default_m, self.default_v)
+        m, v = pair
+        return (None if m is None else m.bind(path, shape, dtype),
+                None if v is None else v.bind(path, shape, dtype))
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def select(cls, *, m: Optional[AuxStore] = _DENSE,
+               v: Optional[AuxStore] = _DENSE,
+               where: Optional[Callable[[str, Tuple[int, ...]], bool]] = None,
+               default_m: Optional[AuxStore] = _DENSE,
+               default_v: Optional[AuxStore] = _DENSE) -> "StoreTree":
+        """Give ``where``-selected leaves the ``(m, v)`` stores (every leaf
+        the stores accept, when ``where`` is None); everything else gets
+        the defaults.  The sugar behind ``scale_by_*(m_store=...,
+        v_store=..., where=...)``."""
+        def resolver(path, shape):
+            if where is not None and not where(path, shape):
+                return None
+            if m is not None and not m.accepts(shape):
+                return None
+            if v is not None and not v.accepts(shape):
+                return None
+            return (m, v)
+        return cls(default_m=default_m, default_v=default_v,
+                   resolver=resolver)
+
+    def without_first_moment(self) -> "StoreTree":
+        """The β₁=0 projection: every m slot (defaults, rules, resolver
+        output) forced to None — ``scale_by_rmsprop``'s layout."""
+        rules = tuple((p, None, v) for p, _m, v in self.rules)
+        if self.resolver is None:
+            return dataclasses.replace(self, rules=rules, default_m=None)
+        base = self.resolver
+
+        def resolver(path, shape):
+            pair = base(path, shape)
+            return None if pair is None else (None, pair[1])
+
+        return dataclasses.replace(self, rules=rules, default_m=None,
+                                   resolver=resolver)
+
+    # -- introspection ------------------------------------------------------
+    def sketch_specs(self, params_like) -> Dict[str, Dict[str, SketchSpec]]:
+        """{path: {"m": spec?, "v": spec?}} for every leaf that resolves to
+        a sketch-backed store — checkpoint-restore verification and the
+        Hokusai-fold predicate both read this."""
+        from repro.core.partition import leaf_paths
+        out: Dict[str, Dict[str, SketchSpec]] = {}
+        for path, leaf in leaf_paths(params_like):
+            m, v = self.resolve(path, tuple(leaf.shape), leaf.dtype)
+            d = {}
+            if m is not None and m.kind in ("sketch", "countmin"):
+                d["m"] = m.spec
+            if v is not None and v.kind in ("sketch", "countmin"):
+                d["v"] = v.spec
+            if d:
+                out[path] = d
+        return out
+
+    # -- serialization ------------------------------------------------------
+    def to_json(self) -> Dict[str, Any]:
+        if self.resolver is not None:
+            raise ValueError("only rule-based StoreTrees serialize; "
+                             "resolver-based trees (policy bridges) are "
+                             "programmatic-only")
+        return {
+            "version": 1,
+            "default_m": store_to_json(self.default_m),
+            "default_v": store_to_json(self.default_v),
+            "rules": [{"path": p, "m": store_to_json(m),
+                       "v": store_to_json(v)} for p, m, v in self.rules],
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "StoreTree":
+        if d.get("version") != 1:
+            raise ValueError(f"unknown StoreTree version {d.get('version')!r}")
+        return cls(
+            rules=tuple((e["path"], store_from_json(e["m"]),
+                         store_from_json(e["v"])) for e in d["rules"]),
+            default_m=store_from_json(d["default_m"]),
+            default_v=store_from_json(d["default_v"]))
+
+
+# ---------------------------------------------------------------------------
+# JSON codecs
+# ---------------------------------------------------------------------------
+
+def spec_to_json(spec: SketchSpec) -> Dict[str, Any]:
+    return {"depth": spec.depth, "width": spec.width, "dim": spec.dim,
+            "signed": bool(spec.signed), "seed": int(spec.seed),
+            "dtype": jnp.dtype(spec.dtype).name,
+            "identity": bool(spec.identity)}
+
+
+def spec_from_json(d: Dict[str, Any]) -> SketchSpec:
+    return SketchSpec(depth=int(d["depth"]), width=int(d["width"]),
+                      dim=int(d["dim"]), signed=bool(d["signed"]),
+                      seed=int(d["seed"]), dtype=jnp.dtype(d["dtype"]),
+                      identity=bool(d["identity"]))
+
+
+def store_to_json(store: Optional[AuxStore]) -> Optional[Dict[str, Any]]:
+    if store is None:
+        return None
+    out: Dict[str, Any] = {"kind": store.kind}
+    if isinstance(store, DenseStore):
+        if store.dtype is not None:
+            out["dtype"] = store.dtype
+        if store.shape is not None:
+            out["shape"] = list(store.shape)
+        return out
+    if isinstance(store, _SketchStoreBase):
+        if store.spec is not None:
+            out["spec"] = spec_to_json(store.spec)
+        else:
+            out.update(compression=store.compression, depth=store.depth,
+                       width=store.width, width_multiple=store.width_multiple,
+                       seed=store.seed, dtype=store.dtype,
+                       identity=store.identity)
+        if store.shape is not None:
+            out["shape"] = list(store.shape)
+        if isinstance(store, CountMinStore) and store.cleaning is not None:
+            out["cleaning"] = {"alpha": store.cleaning.alpha,
+                               "every": store.cleaning.every}
+        return out
+    if isinstance(store, Rank1Store):
+        if store.shape is not None:
+            out["shape"] = list(store.shape)
+        return out
+    raise TypeError(f"cannot serialize store {store!r}")
+
+
+def store_from_json(d: Optional[Dict[str, Any]]) -> Optional[AuxStore]:
+    if d is None:
+        return None
+    kind = d["kind"]
+    shape = tuple(int(s) for s in d["shape"]) if d.get("shape") else None
+    if kind == "dense":
+        return DenseStore(dtype=d.get("dtype"), shape=shape)
+    if kind in ("sketch", "countmin"):
+        cls = CountSketchStore if kind == "sketch" else CountMinStore
+        kw: Dict[str, Any] = {"shape": shape}
+        if "spec" in d:
+            kw["spec"] = spec_from_json(d["spec"])
+        else:
+            kw.update(compression=float(d["compression"]),
+                      depth=int(d["depth"]),
+                      width=None if d["width"] is None else int(d["width"]),
+                      width_multiple=int(d["width_multiple"]),
+                      seed=int(d["seed"]), dtype=d["dtype"],
+                      identity=bool(d["identity"]))
+        if kind == "countmin" and d.get("cleaning") is not None:
+            kw["cleaning"] = CleaningSchedule(
+                alpha=float(d["cleaning"]["alpha"]),
+                every=int(d["cleaning"]["every"]))
+        return cls(**kw)
+    if kind == "rank1":
+        return Rank1Store(shape=shape)
+    raise ValueError(f"unknown store kind {kind!r}")
+
+
+def tree_bytes(state) -> int:
+    """Exact bytes of a state pytree: every array-like leaf (including
+    ``Rank1Moment`` factors) counted by shape × itemsize; ``None`` leaves
+    and non-array scalars contribute 0.  Works on real arrays and
+    ``jax.eval_shape`` trees alike — the ground truth the per-store
+    ``bytes()`` predictions are regression-tested against."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(state):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += _size(leaf.shape) * jnp.dtype(leaf.dtype).itemsize
+    return total

@@ -1,0 +1,568 @@
+"""Composable gradient transforms: ``chain(clip_by_global_norm(0.1),
+scale_by_adam(m_store=..., v_store=...), scale_by_lr(sched))``.
+
+The update *rules* of the paper's optimizers (Algorithms 2–4), written
+against the ``AuxStore`` codec protocol (``repro.core.stores``) so the
+same rule runs over a dense buffer, a count-sketch, a count-min, or a
+rank-1 factor pair — whatever the ``StoreTree`` resolves per leaf.
+
+Contract (optax-shaped, self-contained): each transform is a
+``Transform(init, update)`` pair; ``update(updates, state, params) ->
+(updates, state)``.  ``scale_by_*`` rules emit the *ascent-preconditioned
+direction* (no learning rate, no sign); ``scale_by_lr`` multiplies by
+``-η(step)`` as the chain's final elementwise op.
+
+Numerics: every op inside a rule is a verbatim port of the pre-refactor
+``countsketch_*`` monoliths, so moment *states* evolve bit-identically to
+them.  The one deliberate change is the final scale association — the
+monoliths computed ``(-η·x)/denom``, the chain computes ``-η·(x/denom)``
+— a ≤1-ulp difference on the emitted update (documented in DESIGN.md
+§12; the legacy-parity reference in tests/legacy_reference.py pins the
+chain association).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stores import AuxStore, DenseStore, Rank1Moment, StoreTree
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+class Transform(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]  # (grads, state, params) -> (updates, state)
+
+
+def _lr_at(lr: Schedule, step: jnp.ndarray) -> jnp.ndarray:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def tree_map_with_path(fn, tree, *rest):
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, *leaves: fn(_path_str(kp), *leaves), tree, *rest)
+
+
+def _flatten_moments(tree):
+    """Flatten a moment tree keeping ``None`` and ``Rank1Moment`` as
+    leaves (both are single store states, not containers)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None or isinstance(x, Rank1Moment))
+    return [leaf for _, leaf in flat], treedef
+
+
+def _flatten_grads(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_str(kp), leaf) for kp, leaf in flat], treedef
+
+
+# ---------------------------------------------------------------------------
+# Composition
+# ---------------------------------------------------------------------------
+
+def chain(*transforms) -> Transform:
+    """Compose transforms left-to-right; state is the tuple of their
+    states.  Anything with ``.init``/``.update`` composes (e.g. the
+    ``clip_by_global_norm`` transform)."""
+
+    def init(params=None):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(updates, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            updates, s = t.update(updates, s, params)
+            new_state.append(s)
+        return updates, tuple(new_state)
+
+    return Transform(init, update)
+
+
+def scale_by_lr(lr: Schedule) -> Transform:
+    """Multiply float updates by ``-η(step)`` — the chain's terminal
+    descent scale.  Integer leaves (e.g. the ``ids`` of a rows-gradient)
+    and ``None`` leaves pass through untouched."""
+
+    def init(params=None):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(updates, state, params=None):
+        step = state["step"] + 1
+        eta = _lr_at(lr, step)
+
+        def leaf(u):
+            if u is None or not jnp.issubdtype(jnp.asarray(u).dtype,
+                                               jnp.inexact):
+                return u
+            return -eta * u
+
+        updates = jax.tree_util.tree_map(leaf, updates,
+                                         is_leaf=lambda x: x is None)
+        return updates, {"step": step}
+
+    return Transform(init, update)
+
+
+class ClipByGlobalNorm:
+    """Scale updates so ‖updates‖₂ ≤ ``max_norm`` (the paper clips at
+    0.1–1.0 in every experiment).  Usable both as a chain link
+    (``chain(clip_by_global_norm(1.0), ...)``) and as a bare callable on
+    a gradient tree (the pre-refactor calling convention)."""
+
+    def __init__(self, max_norm: float):
+        self.max_norm = float(max_norm)
+
+    def __call__(self, grads):
+        leaves = jax.tree_util.tree_leaves(grads)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in leaves))
+        scale = jnp.minimum(1.0, self.max_norm / (gn + 1e-12))
+        return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype),
+                                      grads)
+
+    def init(self, params=None):
+        return {}
+
+    def update(self, updates, state, params=None):
+        return self(updates), state
+
+
+def clip_by_global_norm(max_norm: float) -> ClipByGlobalNorm:
+    return ClipByGlobalNorm(max_norm)
+
+
+# ---------------------------------------------------------------------------
+# Shared leaf plumbing (ports of the monolith helpers — op-identical)
+# ---------------------------------------------------------------------------
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is ≤ target (rows are vocab-padded to a
+    multiple of 128, so a 128-granular divisor always exists)."""
+    if target <= 0 or n <= target:
+        return n
+    for c in range(target, 0, -1):
+        if n % c == 0:
+            return c
+    return n
+
+
+def _row_active(g):
+    """1.0 for rows with any non-zero gradient, else 0.0 (lazy updates)."""
+    return jnp.any(g != 0, axis=-1, keepdims=True).astype(jnp.float32)
+
+
+def _sketched_rows_scan(g, carry0, step_chunk, chunk: int, extra=None):
+    """Run ``step_chunk(carry, ids, g_chunk, [extra_chunk]) -> (carry, u)``
+    over row chunks of the dense gradient ``g`` (n, d) in one
+    ``lax.scan``; ``extra`` is an optional second (n, d) array chunked
+    alongside (CS-V mode passes dense m̂ rows through)."""
+    n, d = g.shape
+    chunk = _pick_chunk(n, chunk)
+    nc = n // chunk
+    ids = jnp.arange(n, dtype=jnp.int32).reshape(nc, chunk)
+    xs = (ids, g.reshape(nc, chunk, d))
+    if extra is not None:
+        xs = xs + (extra.reshape(nc, chunk, d),)
+
+    def body(carry, xs_):
+        return step_chunk(carry, *xs_)
+
+    carry, u = jax.lax.scan(body, carry0, xs)
+    return carry, u.reshape(n, d)
+
+
+def _linear_step(store: AuxStore, state, delta, strict: bool):
+    """One linear-store step over all rows: accumulate ``delta`` and
+    return (state', new_estimate).  Non-strict uses the canonical batch
+    convention ``est_new = est_old + delta`` (one less sketch pass, see
+    sketch.py); strict (paper 3-pass) re-reads after the write."""
+    if store.kind == "dense":
+        new = state + delta
+        return new, new
+    if strict:
+        state = store.accumulate(state, delta)
+        return state, store.read(state)
+    est_old = store.read(state)
+    state = store.accumulate(state, delta)
+    return state, est_old + delta
+
+
+def _dense_ema(store: AuxStore, state, beta: float, delta):
+    """β·state + delta via the codec: bit-identical to the monoliths'
+    ``beta * state + delta`` (decay then accumulate, one rounding each)."""
+    return store.accumulate(store.decay(state, beta), delta)
+
+
+# ---------------------------------------------------------------------------
+# scale_by_momentum (paper Alg. 2)
+# ---------------------------------------------------------------------------
+
+def scale_by_momentum(gamma: float = 0.9, *,
+                      stores: Optional[StoreTree] = None,
+                      m_store: Optional[AuxStore] = None,
+                      where=None,
+                      dense_chunk: int = 8192, lazy: bool = True,
+                      strict_paper: bool = False) -> Transform:
+    """Polyak momentum ``m ← γm + g``; emits ``m`` (the direction).  The
+    per-leaf m store is the ``StoreTree``'s m slot: ``DenseStore`` runs
+    the closed form, ``CountSketchStore`` the paper's linear form
+    ``Δ = (γ−1)·m̂ + g`` over the sketch."""
+    if stores is None:
+        stores = StoreTree.select(m=m_store if m_store is not None
+                                  else DenseStore(), v=None, where=where,
+                                  default_v=None)
+
+    def _m(path, leaf):
+        m, _ = stores.resolve(path, tuple(leaf.shape), leaf.dtype)
+        if m is None or m.kind not in ("dense", "sketch"):
+            raise ValueError(f"scale_by_momentum needs a dense or signed "
+                             f"count-sketch m store at {path!r}, got "
+                             f"{None if m is None else m.kind}")
+        return m
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": tree_map_with_path(
+                    lambda p, leaf: _m(p, leaf).init(), params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+
+        def leaf(path, g, M):
+            ms = _m(path, g)
+            if ms.kind == "dense":
+                m_new = _dense_ema(ms, M, gamma, g)
+                return m_new, m_new
+            if dense_chunk and not strict_paper:
+                def chunk_step(carry, ids, gc):
+                    act = _row_active(gc) if lazy else 1.0
+                    delta = ((gamma - 1.0) * ms.read(M, ids) + gc) * act
+                    m_old = ms.read(M, ids)
+                    carry = ms.accumulate(carry, delta, ids)
+                    return carry, act * (m_old + delta)
+                return _sketched_rows_scan(g, M, chunk_step, dense_chunk)
+            act = _row_active(g) if lazy else 1.0
+            m_old = ms.read(M)
+            delta = ((gamma - 1.0) * m_old + g) * act
+            M_out, m_new = _linear_step(ms, M, delta, strict_paper)
+            return M_out, act * m_new
+
+        pairs = tree_map_with_path(leaf, grads, state["m"])
+        is2 = lambda x: isinstance(x, tuple)
+        m = jax.tree_util.tree_map(lambda t: t[0], pairs, is_leaf=is2)
+        updates = jax.tree_util.tree_map(lambda t: t[1], pairs, is_leaf=is2)
+        return updates, {"step": step, "m": m}
+
+    return Transform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# scale_by_adagrad (paper Alg. 3)
+# ---------------------------------------------------------------------------
+
+def scale_by_adagrad(eps: float = 1e-10, *,
+                     stores: Optional[StoreTree] = None,
+                     v_store: Optional[AuxStore] = None,
+                     where=None,
+                     dense_chunk: int = 8192,
+                     strict_paper: bool = False) -> Transform:
+    """Adagrad ``v ← v + g²``; emits ``g / (√v + ε)``.  The cumulative
+    squared gradient lives in the ``StoreTree``'s v slot (``DenseStore``
+    or ``CountMinStore`` — the paper's Alg. 3)."""
+    if stores is None:
+        stores = StoreTree.select(v=v_store if v_store is not None
+                                  else DenseStore(), m=None, where=where,
+                                  default_m=None)
+
+    def _v(path, leaf):
+        _, v = stores.resolve(path, tuple(leaf.shape), leaf.dtype)
+        if v is None or v.kind not in ("dense", "countmin"):
+            raise ValueError(f"scale_by_adagrad needs a dense or count-min "
+                             f"v store at {path!r}, got "
+                             f"{None if v is None else v.kind}")
+        return v
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": tree_map_with_path(
+                    lambda p, leaf: _v(p, leaf).init(), params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+
+        def leaf(path, g, V):
+            vs = _v(path, g)
+            if vs.kind == "dense":
+                v_new = vs.accumulate(V, g * g)
+                return v_new, g / (jnp.sqrt(v_new) + eps)
+            V_in = vs.clean(V, step)
+            if dense_chunk and not strict_paper:
+                def chunk_step(carry, ids, gc):
+                    v_old = vs.read(V_in, ids)
+                    dv = gc * gc
+                    carry = vs.accumulate(carry, dv, ids)
+                    v_new = jnp.maximum(v_old + dv, 0.0)
+                    return carry, gc / (jnp.sqrt(v_new) + eps)
+                return _sketched_rows_scan(g, V_in, chunk_step, dense_chunk)
+            V_out, v_new = _linear_step(vs, V_in, g * g, strict_paper)
+            v_new = jnp.maximum(v_new, 0.0)
+            return V_out, g / (jnp.sqrt(v_new) + eps)
+
+        pairs = tree_map_with_path(leaf, grads, state["v"])
+        is2 = lambda x: isinstance(x, tuple)
+        v = jax.tree_util.tree_map(lambda t: t[0], pairs, is_leaf=is2)
+        updates = jax.tree_util.tree_map(lambda t: t[1], pairs, is_leaf=is2)
+        return updates, {"step": step, "v": v}
+
+    return Transform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# scale_by_adam (paper Alg. 4) — the store-parameterized core
+# ---------------------------------------------------------------------------
+
+_UNSET = object()
+
+
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
+                  stores: Optional[StoreTree] = None,
+                  m_store: Any = _UNSET, v_store: Any = _UNSET,
+                  where=None,
+                  dense_chunk: int = 8192, lazy: bool = True,
+                  strict_paper: bool = False) -> Transform:
+    """Adam whose moments live wherever the ``StoreTree`` says: per leaf,
+    the 1st moment in a ``DenseStore``, a ``CountSketchStore`` (signed,
+    median) or nowhere (``None`` ⇒ β₁=0 for that leaf), and the 2nd
+    moment in a ``DenseStore``, ``CountMinStore`` (min query, optional
+    cleaning), ``CountSketchStore`` or ``Rank1Store`` (LR-NMF-V).  Emits
+    the bias-corrected preconditioned direction ``m̂ / (√v̂ + ε)``.
+
+    ``m_store``/``v_store`` + ``where`` is sugar for a two-level
+    ``StoreTree``: selected leaves get those stores, the rest stay dense
+    (pass ``m_store=None`` for the β₁=0 layout).  ``dense_chunk``,
+    ``lazy`` and ``strict_paper`` are the execution knobs of the old
+    ``SketchHParams``, unchanged in meaning."""
+    if stores is None:
+        stores = StoreTree.select(
+            m=DenseStore() if m_store is _UNSET else m_store,
+            v=DenseStore() if v_store is _UNSET else v_store,
+            where=where)
+
+    def _mv(path, leaf):
+        ms, vs = stores.resolve(path, tuple(leaf.shape), leaf.dtype)
+        if vs is None:
+            raise ValueError(f"scale_by_adam needs a v store at {path!r}")
+        if ms is not None and ms.kind not in ("dense", "sketch"):
+            raise ValueError(f"unsupported m store kind {ms.kind!r} at "
+                             f"{path!r} (dense | sketch | None)")
+        if vs.kind == "dense" and ms is not None and ms.kind == "sketch":
+            raise ValueError(f"sketched m over dense v at {path!r} is not "
+                             f"a paper layout (sketch the 2nd moment too)")
+        return ms, vs
+
+    def init(params):
+        def m_leaf(path, p):
+            ms, _ = _mv(path, p)
+            return ms.init() if ms is not None else None
+
+        def v_leaf(path, p):
+            _, vs = _mv(path, p)
+            return vs.init()
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": tree_map_with_path(m_leaf, params),
+                "v": tree_map_with_path(v_leaf, params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def leaf(path, g, M, V):
+            ms, vs = _mv(path, g)
+
+            if vs.kind == "rank1":
+                # LR-NMF-V leaf: rank-1 2nd moment (decay + mean-accumulate
+                # via the codec), dense 1st — numerics identical to
+                # lowrank.nmf_rank1_adam.
+                g2 = jnp.square(g.astype(jnp.float32))
+                V_out = vs.accumulate(vs.decay(V, b2), g2, scale=(1.0 - b2))
+                vhat = vs.read(V_out)
+                if ms is not None:
+                    m_new = _dense_ema(ms, M, b1, (1.0 - b1) * g)
+                    M_out, mhat = m_new, m_new / bc1
+                else:
+                    M_out, mhat = None, g
+                upd = mhat / (jnp.sqrt(jnp.maximum(vhat / bc2, 0.0)) + eps)
+                return M_out, V_out, upd
+
+            if vs.kind == "dense":
+                # fully dense leaf
+                if ms is None:
+                    mhat, M_out = g, None
+                else:
+                    m_new = _dense_ema(ms, M, b1, (1.0 - b1) * g)
+                    M_out, mhat = m_new, m_new / bc1
+                v_new = _dense_ema(vs, V, b2, (1.0 - b2) * g * g)
+                return M_out, v_new, mhat / (jnp.sqrt(v_new / bc2) + eps)
+
+            # sketched 2nd moment (count-min, or signed count-sketch)
+            sketched_m = ms is not None and ms.kind == "sketch"
+            V_in = vs.clean(V, step)
+
+            # dense 1st moment alongside a sketched 2nd (paper's CS-V mode)
+            if ms is not None and not sketched_m:
+                m_dense = _dense_ema(ms, M, b1, (1.0 - b1) * g)
+                M_out, mhat_rows = m_dense, m_dense / bc1
+            else:
+                M_out, mhat_rows = None, None
+
+            if dense_chunk and not strict_paper:
+                # fused chunked scan: query(pre-step) → delta → scatter →
+                # direction row, O(depth·chunk·d) temps.  Queries close
+                # over the PRE-step sketches (canonical batch semantics).
+                def chunk_step(carry, ids, gc, *mh_c):
+                    act = _row_active(gc) if lazy else 1.0
+                    if sketched_m:
+                        m_old = ms.read(M, ids)
+                        dm = (1.0 - b1) * (gc - m_old) * act
+                        carry["M"] = ms.accumulate(carry["M"], dm, ids)
+                        mh = (m_old + dm) / bc1
+                    elif ms is not None:
+                        mh = mh_c[0]
+                    else:
+                        mh = gc
+                    v_old = vs.read(V_in, ids)
+                    dv = (1.0 - b2) * (gc * gc - v_old) * act
+                    carry["V"] = vs.accumulate(carry["V"], dv, ids)
+                    vh = jnp.maximum(v_old + dv, 0.0) / bc2
+                    return carry, act * mh / (jnp.sqrt(vh) + eps)
+
+                carry0 = {"V": V_in}
+                if sketched_m:
+                    carry0["M"] = M
+                carry, upd = _sketched_rows_scan(
+                    g, carry0, chunk_step, dense_chunk, extra=mhat_rows)
+                if sketched_m:
+                    M_out = carry["M"]
+                return M_out, carry["V"], upd
+
+            # reference unchunked path (also the strict-paper 3-pass mode)
+            act = _row_active(g) if lazy else 1.0
+            if sketched_m:
+                m_old = ms.read(M)
+                delta_m = (1.0 - b1) * (g - m_old) * act
+                M_out, m_new = _linear_step(ms, M, delta_m, strict_paper)
+                mhat = m_new / bc1
+            elif ms is not None:
+                mhat = mhat_rows
+            else:
+                mhat = g
+            v_old = vs.read(V_in)
+            delta_v = (1.0 - b2) * (g * g - v_old) * act
+            V_out, v_new = _linear_step(vs, V_in, delta_v, strict_paper)
+            v_new = jnp.maximum(v_new, 0.0)
+            upd = act * mhat / (jnp.sqrt(v_new / bc2) + eps)
+            return M_out, V_out, upd
+
+        flat_g, gdef = _flatten_grads(grads)
+        flat_m, mdef = _flatten_moments(state["m"])
+        flat_v, vdef = _flatten_moments(state["v"])
+        m_out, v_out, dirs = [], [], []
+        for (path, g), M, V in zip(flat_g, flat_m, flat_v):
+            Mo, Vo, u = leaf(path, g, M, V)
+            m_out.append(Mo)
+            v_out.append(Vo)
+            dirs.append(u)
+        unf = jax.tree_util.tree_unflatten
+        return unf(gdef, dirs), {"step": step,
+                                 "m": unf(mdef, m_out),
+                                 "v": unf(vdef, v_out)}
+
+    return Transform(init, update)
+
+
+def scale_by_rmsprop(b2: float = 0.999, eps: float = 1e-8, *,
+                     stores: Optional[StoreTree] = None,
+                     v_store: Any = _UNSET, where=None,
+                     dense_chunk: int = 8192, lazy: bool = True,
+                     strict_paper: bool = False) -> Transform:
+    """The β₁=0 rule of Theorem 5.1 (Count-Min Adam without the 1st
+    moment): ``scale_by_adam`` with every m slot forced to ``None`` —
+    the layout the paper runs for the 49.5M-class Amazon task."""
+    if stores is None:
+        stores = StoreTree.select(
+            m=None, v=DenseStore() if v_store is _UNSET else v_store,
+            where=where, default_m=None)
+    return scale_by_adam(b1=0.0, b2=b2, eps=eps,
+                         stores=stores.without_first_moment(),
+                         dense_chunk=dense_chunk, lazy=lazy,
+                         strict_paper=strict_paper)
+
+
+# ---------------------------------------------------------------------------
+# scale_by_adam over a rows-indexed store view (the sparse fast path)
+# ---------------------------------------------------------------------------
+
+def scale_by_adam_rows(b1: float = 0.9, b2: float = 0.999,
+                       eps: float = 1e-8, *,
+                       m_store: Optional[AuxStore],
+                       v_store: AuxStore,
+                       backend: Optional[str] = None) -> Transform:
+    """``scale_by_adam`` for ONE table fed ``{"ids": (k,), "rows": (k, d)}``
+    gradients — the sampled-softmax / extreme-classification regime where
+    work scales with touched rows.
+
+    ``m_store`` (``CountSketchStore`` or None for β₁=0) and ``v_store``
+    (``CountMinStore``, cleaning hook honored) must be bound (explicit
+    ``spec``); the step routes their specs through the kernel-backend
+    registry (``repro.kernels``: 'ref' | 'xla' | 'stream' | 'tiled' |
+    'interpret', None/'auto' = per-host best), which handles duplicate
+    ids.  Emits ``{"ids", "rows": direction}`` with the direction
+    *unscaled* — compose with ``scale_by_lr`` (which leaves the integer
+    ``ids`` leaf untouched) and apply via ``apply_sparse_updates``."""
+    for name, store, kinds in (("m_store", m_store, ("sketch",)),
+                               ("v_store", v_store, ("countmin", "sketch"))):
+        if store is None:
+            continue
+        if store.kind not in kinds or store.spec is None:
+            raise ValueError(f"{name} must be a bound (explicit-spec) "
+                             f"{'/'.join(kinds)} store, got {store!r}")
+    spec_m = m_store.spec if m_store is not None else None
+    spec_v = v_store.spec
+
+    def init(params=None):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": m_store.init() if m_store is not None else None,
+                "v": v_store.init()}
+
+    def update(grads, state, params=None):
+        from repro import kernels  # deferred: kernels import jax-level deps
+        ids, rows = grads["ids"], grads["rows"]
+        step = state["step"] + 1
+        V_in = v_store.clean(state["v"], step)
+        # lr=-1.0 makes the kernels emit the raw ascent direction (an
+        # exact ±1 multiply), leaving the descent scale to scale_by_lr.
+        M, V, direction = kernels.adam_rows(
+            spec_m, spec_v, state["m"], V_in, ids, rows, step,
+            lr=-1.0, b1=b1, b2=b2, eps=eps, backend=backend)
+        return ({"ids": ids, "rows": direction},
+                {"step": step, "m": M, "v": V})
+
+    return Transform(init, update)

@@ -187,7 +187,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
             rec["plan"] = {"aux_budget": aux_budget,
                            "budget_bytes": plan.budget_bytes,
                            "predicted_aux_bytes": plan.predicted_aux_bytes,
-                           "modes": plan.n_by_mode()}
+                           "modes": plan.n_by_mode(),
+                           # the executable vocabulary this cell ran under
+                           # (self-describing artifact; DESIGN.md §12)
+                           "store_tree": plan.store_tree().to_json()}
     except Exception as e:  # noqa: BLE001 — recorded, sweep continues
         rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
                "status": "error", "error": f"{type(e).__name__}: {e}",

@@ -58,6 +58,18 @@ def main() -> int:
         if saved.get("plan") is not None:
             from repro.plan import Plan
             ckpt_plan = Plan.from_json(saved["plan"])
+            if saved.get("store_tree") is not None:
+                # The manifest's executable vocabulary: the StoreTree the
+                # sketch state was actually written under.  It must agree
+                # with the plan it rode in with (guards manifest skew).
+                from repro.core.stores import StoreTree
+                recorded = StoreTree.from_json(saved["store_tree"])
+                if recorded != ckpt_plan.store_tree():
+                    raise ValueError(
+                        f"{args.ckpt_dir}'s manifest is inconsistent: its "
+                        f"serialized StoreTree does not match the plan it "
+                        f"was recorded with — refusing to restore sketch "
+                        f"state under ambiguous specs")
     plan = None
     if args.aux_budget:
         from repro.plan import plan_for_config

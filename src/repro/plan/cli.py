@@ -175,8 +175,12 @@ def main(argv=None) -> int:
                 print(f"[check] OK: {plan.predicted_aux_bytes:,} B <= "
                       f"{budget:,} B")
     if args.json and plan is not None:
+        out = plan.to_json()
+        # the executable vocabulary alongside the plan (DESIGN.md §12);
+        # Plan.from_json ignores the extra key
+        out["store_tree"] = plan.store_tree().to_json()
         with open(args.json, "w") as f:
-            json.dump(plan.to_json(), f, indent=2)
+            json.dump(out, f, indent=2)
         print(f"[plan] wrote {args.json}")
     return 1 if failures else 0
 

@@ -3,18 +3,23 @@
 A ``Plan`` is what the allocator emits and every downstream layer
 consumes:
 
-* ``sketch_policy()`` / ``rank1_policy()`` — PolicyFns for
-  ``core.optimizers.countsketch_adam``;
-* ``hparams()`` — a ``SketchHParams`` whose per-path ``overrides`` pin
-  the solved (depth, width) of every sketched leaf (replacing the global
-  ``compression`` ratio);
-* ``make_optimizer()`` — the ready-to-run Transform executing the plan;
-* ``specs()`` — the exact ``SketchSpec`` per sketched path/moment (seed
-  derivation included), for checkpoint-restore verification;
+* ``store_tree()`` — the per-path ``StoreTree`` resolver executing this
+  plan: every sketched leaf pinned to explicit ``CountSketchStore`` /
+  ``CountMinStore`` specs (seed derivation included), rank-1 leaves to
+  ``Rank1Store``, everything else dense.  This is the single vocabulary
+  the optimizer, the trainer, the serve online-adapt step, and
+  checkpoint manifests speak (DESIGN.md §12) — it replaces the old
+  ``sketch_policy``/``rank1_policy``/``SketchHParams.overrides`` triple
+  dispatch;
+* ``make_optimizer()`` — ``adam_from_stores(lr, store_tree())``, the
+  ready-to-run Transform executing the plan;
+* ``specs()`` — the exact ``SketchSpec`` per sketched path/moment, for
+  checkpoint-restore verification;
 * ``fold()`` — the Hokusai-folded plan (every sketch width halved),
   matching ``checkpoint.store.fold_sketches`` applied to the state;
 * ``to_json()`` / ``from_json()`` — the manifest form
-  ``checkpoint.store`` records so restore reconstructs identical specs;
+  ``checkpoint.store`` records (alongside the serialized ``StoreTree``)
+  so restore reconstructs identical specs;
 * ``table()`` — the human-readable plan table ``launch/dryrun.py
   --aux-budget`` prints before lowering.
 """
@@ -23,9 +28,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
+import jax.numpy as jnp
+
 from repro.core import sketch as cs
-from repro.core.optimizers import SketchHParams, Transform
-from repro.core.partition import PolicyFn
+from repro.core.optimizers import SketchHParams, Transform, adam_from_stores
+from repro.core.stores import (CountMinStore, CountSketchStore, DenseStore,
+                               Rank1Store, StoreTree, leaf_seed)
 
 MODE_DENSE = "dense"
 MODE_SKETCH = "sketch"
@@ -98,64 +106,64 @@ class Plan:
         return out
 
     # -- executable surface -------------------------------------------------
-    def sketch_policy(self) -> PolicyFn:
-        paths = frozenset(l.path for l in self.leaves if l.mode == MODE_SKETCH)
+    def _leaf_spec(self, l: "LeafPlan", *, signed: bool) -> cs.SketchSpec:
+        return cs.SketchSpec(depth=int(l.depth), width=int(l.width),
+                             dim=int(l.shape[1]), signed=signed,
+                             seed=leaf_seed(l.path, self.seed),
+                             dtype=jnp.dtype(self.sketch_dtype))
 
-        def policy(path: str, shape) -> bool:
-            return path in paths
-
-        return policy
-
-    def rank1_policy(self) -> PolicyFn:
-        paths = frozenset(l.path for l in self.leaves if l.mode == MODE_RANK1)
-
-        def policy(path: str, shape) -> bool:
-            return path in paths
-
-        return policy
-
-    def overrides(self) -> Tuple[Tuple[str, Tuple[int, int]], ...]:
-        return tuple((l.path, (l.depth, l.width)) for l in self.leaves
-                     if l.mode == MODE_SKETCH)
-
-    def hparams(self, base: Optional[SketchHParams] = None,
-                **replace: Any) -> SketchHParams:
-        """A ``SketchHParams`` executing this plan: per-path overrides pin
-        every sketched leaf's (depth, width); ``base`` keeps orthogonal
-        knobs (dense_chunk, lazy, backend, ...)."""
-        base = base if base is not None else SketchHParams()
-        return dataclasses.replace(
-            base, overrides=self.overrides(), seed=self.seed,
-            dtype=self.sketch_dtype, width_multiple=self.width_multiple,
-            **replace)
+    def store_tree(self, cleaning=None) -> StoreTree:
+        """The per-path ``StoreTree`` executing this plan — exact-path
+        rules with explicit specs (serializable; rides in checkpoint
+        manifests).  ``cleaning`` installs the Count-Min cleaning hook on
+        every sketched 2nd moment."""
+        track = self.track_first_moment
+        default_m = DenseStore() if track else None
+        rules = []
+        for l in self.leaves:
+            if l.mode == MODE_SKETCH:
+                if track and self.sketch_first_moment:
+                    m = CountSketchStore(spec=self._leaf_spec(l, signed=True),
+                                         shape=l.shape)
+                else:
+                    m = default_m
+                v = CountMinStore(spec=self._leaf_spec(l, signed=False),
+                                  shape=l.shape, cleaning=cleaning)
+                rules.append((l.path, m, v))
+            elif l.mode == MODE_RANK1:
+                rules.append((l.path, default_m, Rank1Store()))
+        return StoreTree(rules=tuple(rules), default_m=default_m,
+                         default_v=DenseStore())
 
     def make_optimizer(self, lr=1e-3, *, b1: float = 0.9, b2: float = 0.999,
                        eps: float = 1e-8, cleaning=None,
                        base_hparams: Optional[SketchHParams] = None,
                        backend: Optional[str] = None) -> Transform:
-        from repro.core import optimizers as opt_lib
-        hp = self.hparams(base_hparams)
-        if backend is not None:
-            hp = dataclasses.replace(hp, backend=backend)
-        return opt_lib.countsketch_adam(
-            lr, b1=(0.0 if not self.track_first_moment else b1), b2=b2,
-            eps=eps, policy=self.sketch_policy(),
-            rank1_policy=self.rank1_policy(), hparams=hp, cleaning=cleaning,
-            track_first_moment=self.track_first_moment,
-            sketch_first_moment=self.sketch_first_moment)
+        """``adam_from_stores(lr, self.store_tree())`` in the legacy state
+        layout.  ``base_hparams`` keeps the orthogonal execution knobs
+        (dense_chunk, lazy, strict_paper); ``backend`` is accepted for
+        call-site compatibility — the dense-tree path is an XLA chunked
+        scan with no kernel-backend axis (DESIGN.md §10), sparse-rows
+        callers take the plan's stores through ``sparse_rows_adam``."""
+        del backend  # no kernel axis on the dense-tree path
+        hp = base_hparams if base_hparams is not None else SketchHParams()
+        return adam_from_stores(
+            lr, self.store_tree(cleaning=cleaning),
+            b1=(0.0 if not self.track_first_moment else b1), b2=b2, eps=eps,
+            dense_chunk=hp.dense_chunk, lazy=hp.lazy,
+            strict_paper=hp.strict_paper)
 
     def specs(self) -> Dict[str, Dict[str, cs.SketchSpec]]:
         """Exact per-path SketchSpecs ({'m': ..., 'v': ...}) derived the
-        same way the optimizer derives them (seed included)."""
-        hp = self.hparams()
+        same way the optimizer's stores derive them (seed included)."""
         out: Dict[str, Dict[str, cs.SketchSpec]] = {}
         for l in self.leaves:
             if l.mode != MODE_SKETCH:
                 continue
             d: Dict[str, cs.SketchSpec] = {}
             if self.track_first_moment and self.sketch_first_moment:
-                d["m"] = hp.spec(l.path, l.shape, signed=True)
-            d["v"] = hp.spec(l.path, l.shape, signed=False)
+                d["m"] = self._leaf_spec(l, signed=True)
+            d["v"] = self._leaf_spec(l, signed=False)
             out[l.path] = d
         return out
 

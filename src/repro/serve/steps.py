@@ -167,7 +167,8 @@ def make_serve_step(cfg: ArchConfig, *, batch: int, max_seq: int) -> ServeStep:
 def make_online_adapt_step(n_rows: int, dim: int, *, lr=1e-4,
                            b2: float = 0.999, eps: float = 1e-8,
                            hparams: Optional[SketchHParams] = None,
-                           path: str = "serve_adapt"):
+                           path: str = "serve_adapt",
+                           v_store=None):
     """Serve-time sparse adaptation of an embedding table.
 
     Serving workloads that personalize online (session embeddings, bandit
@@ -179,7 +180,10 @@ def make_online_adapt_step(n_rows: int, dim: int, *, lr=1e-4,
 
     Uses the β₁=0 (Theorem 5.1 / RMSProp) variant: no first moment, which
     keeps serve-time state minimal and matches the paper's extreme-scale
-    configuration.
+    configuration.  ``v_store``: an optional bound ``CountMinStore``
+    (e.g. resolved from a planner ``StoreTree``) superseding the
+    ``hparams`` sizing — serve-time adaptation speaks the same store
+    vocabulary as training (DESIGN.md §12).
 
     Returns ``(init_state_fn, adapt_fn)``:
 
@@ -189,7 +193,7 @@ def make_online_adapt_step(n_rows: int, dim: int, *, lr=1e-4,
     hp = hparams if hparams is not None else SketchHParams()
     opt = opt_lib.sparse_rows_adam(
         lr, b2=b2, eps=eps, shape=(n_rows, dim), path=path, hparams=hp,
-        track_first_moment=False)
+        track_first_moment=False, v_store=v_store)
 
     def init_state_fn():
         return opt.init()

@@ -57,9 +57,9 @@ def build_optimizer(cfg: ArchConfig, mode: str, lr=1e-3,
     XLA chunked scan and is backend-independent (DESIGN.md §10).
 
     ``plan``: a solved ``repro.plan.Plan`` — when given it supersedes the
-    regex policy + global compression entirely (the plan's PolicyFns and
-    per-path (depth, width) overrides execute instead).  Plans encode an
-    Adam-family moment layout, so only the modes in
+    regex policy + global compression entirely (the plan's ``StoreTree``
+    executes instead, via ``adam_from_stores``; DESIGN.md §12).  Plans
+    encode an Adam-family moment layout, so only the modes in
     ``repro.plan.MOMENT_MODES`` may be combined with one."""
     if plan is not None:
         from repro.plan import MOMENT_MODES
@@ -172,7 +172,8 @@ def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
                                hparams: Optional[SketchHParams] = None,
                                track_first_moment: bool = True,
                                cleaning: Optional[CleaningSchedule] = None,
-                               path: str = "sparse_embedding"):
+                               path: str = "sparse_embedding",
+                               stores=None):
     """Train step for the (ids, grad-rows) regime — LM1B-style embedding /
     softmax tables and extreme classification, where per-step work is
     O(touched rows), not O(n).
@@ -183,17 +184,39 @@ def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
         opt_state = optimizer.init()
         table', opt_state' = step_fn(table, opt_state, ids, grad_rows)
 
-    The optimizer state is the count-sketch pair; the step routes through
-    the kernel backend named by ``hparams.backend`` (tiled Pallas pipeline
-    on TPU, jnp oracle on CPU — see ``repro.kernels``).  Duplicate ids in
-    a batch are handled by the backend (dedup + segment-sum on the tiled
-    path).
+    The optimizer is ``sparse_rows_adam`` — ``scale_by_adam_rows`` over a
+    count-sketch store pair, chained with ``scale_by_lr`` (DESIGN.md
+    §12).  ``stores``: an optional ``repro.core.stores.StoreTree`` (e.g.
+    a planner ``Plan.store_tree()``) resolved at ``path`` for this
+    table's store pair, superseding the ``hparams`` sizing.  The step
+    routes through the kernel backend named by ``hparams.backend`` (tiled
+    Pallas pipeline on TPU, jnp oracle on CPU — see ``repro.kernels``).
+    Duplicate ids in a batch are handled by the backend (dedup +
+    segment-sum on the tiled path).
     """
     hp = hparams if hparams is not None else SketchHParams()
+    m_store = v_store = None
+    if stores is not None:
+        m_store, v_store = stores.resolve(path, (n_rows, dim), jnp.float32)
+        if v_store is None or v_store.kind not in ("countmin", "sketch"):
+            raise ValueError(
+                f"the sparse-rows pipeline needs a sketch-backed v store "
+                f"at {path!r}; the StoreTree resolved "
+                f"{None if v_store is None else v_store.kind!r} — plan a "
+                f"sketch for this table or drop `stores`")
+        if m_store is not None and m_store.kind != "sketch":
+            raise ValueError(
+                f"the sparse-rows kernels keep the 1st moment in a signed "
+                f"count-sketch or drop it (β₁=0); the StoreTree resolved a "
+                f"{m_store.kind!r} m store at {path!r} — use "
+                f"track_first_moment=False or a sketch-m plan")
+        # the tree's moment layout is authoritative: a β₁=0 plan
+        # (m=None) must not be overridden by this function's default
+        track_first_moment = m_store is not None
     opt = opt_lib.sparse_rows_adam(
         lr, b1=b1, b2=b2, eps=eps, shape=(n_rows, dim), path=path,
         hparams=hp, track_first_moment=track_first_moment,
-        cleaning=cleaning)
+        cleaning=cleaning, m_store=m_store, v_store=v_store)
 
     def init_fn(rng):
         scale = 1.0 / jnp.sqrt(jnp.asarray(dim, jnp.float32))

@@ -42,10 +42,12 @@ class Trainer:
     """``fit`` runs [start, total); checkpoints; records step times.
 
     ``plan``: an optional ``repro.plan.Plan`` executing on this run (in
-    place of a bare sketch policy).  It is recorded in every checkpoint
-    manifest, so restore — including an elastic restore that Hokusai-folds
-    the sketches onto a halved budget — reconstructs the exact per-leaf
-    specs (``plan.fold()`` mirrors ``store.fold_sketches``)."""
+    place of a bare sketch policy).  Both the plan and its executable
+    ``StoreTree`` form are recorded in every checkpoint manifest, so
+    restore — including an elastic restore that Hokusai-folds the
+    sketches onto a halved budget — reconstructs the exact per-leaf
+    stores (``plan.fold()`` mirrors ``store.fold_sketches``; the
+    serialized manifest speaks StoreTree, not PolicyFns/overrides)."""
 
     def __init__(self, step_fn: Callable, data, tcfg: TrainerConfig,
                  monitor: Optional[StragglerMonitor] = None,
@@ -67,8 +69,10 @@ class Trainer:
             if self._pending_ckpt is not None:
                 self._pending_ckpt.join()     # backpressure: one in flight
             tree = {"params": state.params, "opt_state": state.opt_state}
-            extra = ({"plan": self.plan.to_json()}
-                     if self.plan is not None else None)
+            extra = None
+            if self.plan is not None:
+                extra = {"plan": self.plan.to_json(),
+                         "store_tree": self.plan.store_tree().to_json()}
             self._pending_ckpt = store.save(
                 t.ckpt_dir, state.step, tree,
                 async_=t.ckpt_async, keep=t.keep, extra=extra)

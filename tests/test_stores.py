@@ -1,0 +1,274 @@
+"""AuxStore codecs + StoreTree resolver (DESIGN.md §12).
+
+Covers: each store's codec protocol against the raw primitives it wraps
+(dense jnp ops, ``sketch.query/update/decay``, the LR-NMF-V factor EMA),
+StoreTree resolution order (resolver > rules > defaults) and the
+``select``/``without_first_moment`` constructors, JSON round-trips, and
+the ``state_bytes`` satellite: per-store ``bytes()`` predictions must
+equal the ``eval_shape`` ground truth for every moment layout, including
+``None`` leaves (β₁=0) and ``Rank1Moment`` factor pairs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import optimizers as O
+from repro.core import sketch as cs
+from repro.core import stores as S
+from repro.core.cleaning import CleaningSchedule
+from repro.core.partition import SketchPolicy, leaf_paths, nothing_policy
+from repro.core.stores import (CountMinStore, CountSketchStore, DenseStore,
+                               Rank1Moment, Rank1Store, StoreTree)
+
+
+def _arr(shape, seed=0, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+class TestDenseStore:
+    def test_codec_matches_raw_ops(self):
+        st = DenseStore().bind("w", (8, 4), jnp.float32)
+        state = st.init()
+        assert state.shape == (8, 4) and state.dtype == jnp.float32
+        d = _arr((8, 4))
+        np.testing.assert_array_equal(st.accumulate(state, d), d)
+        np.testing.assert_array_equal(st.decay(d, 0.5), 0.5 * d)
+        np.testing.assert_array_equal(st.read(d), d)
+        rows = jnp.asarray([1, 5], jnp.int32)
+        np.testing.assert_array_equal(st.read(d, rows), d[rows])
+        dr = _arr((2, 4), seed=1)
+        np.testing.assert_array_equal(st.accumulate(d, dr, rows),
+                                      d.at[rows].add(dr))
+        assert st.bytes() == 8 * 4 * 4 == st.bytes(state)
+
+    def test_dtype_override(self):
+        st = DenseStore(dtype="bfloat16").bind("w", (4, 4), jnp.float32)
+        assert st.init().dtype == jnp.bfloat16
+        assert st.bytes() == 4 * 4 * 2
+
+
+class TestSketchStores:
+    def _bound(self, cls, n=256, d=8):
+        return cls(compression=4.0, width_multiple=16).bind(
+            "tok_embed/table", (n, d), jnp.float32)
+
+    @pytest.mark.parametrize("cls,signed", [(CountSketchStore, True),
+                                            (CountMinStore, False)])
+    def test_codec_matches_sketch_primitives(self, cls, signed):
+        st = self._bound(cls)
+        assert st.spec.signed is signed
+        state = st.init()
+        ids = jnp.asarray([0, 3, 77, 200], jnp.int32)
+        delta = _arr((4, 8))
+        np.testing.assert_array_equal(
+            st.accumulate(state, delta, ids),
+            cs.update(st.spec, state, ids, delta))
+        S2 = st.accumulate(state, delta, ids)
+        np.testing.assert_array_equal(st.read(S2, ids),
+                                      cs.query(st.spec, S2, ids))
+        np.testing.assert_array_equal(st.decay(S2, 0.25),
+                                      cs.decay(S2, 0.25))
+        # rows=None spans the bound table
+        np.testing.assert_array_equal(
+            st.read(S2), cs.query(st.spec, S2,
+                                  jnp.arange(256, dtype=jnp.int32)))
+        assert st.bytes() == st.spec.nbytes()
+
+    def test_bind_seed_matches_legacy_hparams(self):
+        """Factory sizing must reproduce SketchHParams.spec exactly, so
+        states are portable across the old and new APIs."""
+        hp = O.SketchHParams(compression=4.0, width_multiple=16, seed=7)
+        st = CountSketchStore(compression=4.0, width_multiple=16,
+                              seed=7).bind("lm_head/table", (512, 16),
+                                           jnp.float32)
+        assert st.spec == hp.spec("lm_head/table", (512, 16), signed=True)
+
+    def test_explicit_width_pins_spec(self):
+        st = CountSketchStore(depth=2, width=48).bind("p", (512, 16),
+                                                      jnp.float32)
+        assert (st.spec.depth, st.spec.width, st.spec.dim) == (2, 48, 16)
+
+    def test_countmin_cleaning_hook(self):
+        st = dataclasses.replace(
+            self._bound(CountMinStore),
+            cleaning=CleaningSchedule(alpha=0.5, every=2))
+        state = jnp.ones((st.spec.depth, st.spec.width, st.spec.dim))
+        # step 1: no-op; step 2: ×0.5
+        np.testing.assert_array_equal(st.clean(state, jnp.asarray(1)), state)
+        np.testing.assert_array_equal(st.clean(state, jnp.asarray(2)),
+                                      0.5 * state)
+        # no schedule -> identity
+        np.testing.assert_array_equal(
+            self._bound(CountMinStore).clean(state, jnp.asarray(2)), state)
+
+    def test_rejects_non_rank2(self):
+        assert not CountSketchStore().accepts((64,))
+        with pytest.raises(ValueError):
+            CountSketchStore().bind("b", (64,), jnp.float32)
+
+
+class TestRank1Store:
+    def test_ema_matches_lr_nmf_v(self):
+        """decay(β₂) + accumulate(g², scale=1-β₂) + read == the LR-NMF-V
+        update of lowrank.nmf_rank1_adam, bit for bit."""
+        st = Rank1Store().bind("t", (32, 8), jnp.float32)
+        b2 = 0.999
+        state = Rank1Moment(jnp.abs(_arr((32,), 1)), jnp.abs(_arr((8,), 2)))
+        g2 = jnp.square(_arr((32, 8), 3))
+        out = st.accumulate(st.decay(state, b2), g2, scale=(1.0 - b2))
+        np.testing.assert_array_equal(
+            out.r, b2 * state.r + (1.0 - b2) * jnp.mean(g2, axis=1))
+        np.testing.assert_array_equal(
+            out.c, b2 * state.c + (1.0 - b2) * jnp.mean(g2, axis=0))
+        np.testing.assert_array_equal(
+            st.read(out),
+            (out.r[:, None] * out.c[None, :]) / (jnp.mean(out.r) + 1e-30))
+        rows = jnp.asarray([0, 7], jnp.int32)
+        np.testing.assert_array_equal(st.read(out, rows), st.read(out)[rows])
+
+    def test_bytes(self):
+        st = Rank1Store().bind("t", (32, 8), jnp.float32)
+        assert st.bytes() == (32 + 8) * 4 == st.bytes(st.init())
+
+
+class TestStoreTree:
+    def test_resolution_order(self):
+        """resolver > exact-path rules > defaults."""
+        rule_v = CountMinStore(compression=2.0, width_multiple=16)
+        tree = StoreTree(
+            rules=(("a/t", None, rule_v),),
+            default_m=DenseStore(), default_v=DenseStore(),
+            resolver=lambda p, s: (None, Rank1Store()) if p == "hot" else None)
+        m, v = tree.resolve("hot", (2048, 8), jnp.float32)
+        assert m is None and v.kind == "rank1"
+        m, v = tree.resolve("a/t", (2048, 8), jnp.float32)
+        assert m is None and v.kind == "countmin"
+        m, v = tree.resolve("other", (4, 4), jnp.float32)
+        assert m.kind == "dense" and v.kind == "dense"
+
+    def test_select_where_and_accepts(self):
+        tree = StoreTree.select(m=CountSketchStore(width_multiple=16),
+                                v=CountMinStore(width_multiple=16),
+                                where=SketchPolicy(min_rows=128))
+        m, v = tree.resolve("tok_embed/table", (256, 8), jnp.float32)
+        assert (m.kind, v.kind) == ("sketch", "countmin")
+        # where misses -> dense
+        m, v = tree.resolve("w", (256, 8), jnp.float32)
+        assert (m.kind, v.kind) == ("dense", "dense")
+        # store can't represent the leaf -> dense (rank-1 leaf)
+        tree2 = StoreTree.select(m=CountSketchStore(), v=CountMinStore())
+        m, v = tree2.resolve("bias", (64,), jnp.float32)
+        assert (m.kind, v.kind) == ("dense", "dense")
+
+    def test_without_first_moment(self):
+        tree = StoreTree.select(m=CountSketchStore(width_multiple=16),
+                                v=CountMinStore(width_multiple=16),
+                                where=SketchPolicy(min_rows=128))
+        none_m = tree.without_first_moment()
+        m, v = none_m.resolve("tok_embed/table", (256, 8), jnp.float32)
+        assert m is None and v.kind == "countmin"
+        m, v = none_m.resolve("w", (8, 8), jnp.float32)
+        assert m is None and v.kind == "dense"
+
+    def test_json_roundtrip(self):
+        spec = cs.for_param((512, 8), compression=4.0, signed=False,
+                            width_multiple=16, seed=3)
+        tree = StoreTree(
+            rules=(("tok_embed/table",
+                    CountSketchStore(spec=dataclasses.replace(spec,
+                                                              signed=True),
+                                     shape=(512, 8)),
+                    CountMinStore(spec=spec, shape=(512, 8),
+                                  cleaning=CleaningSchedule(0.5, 4))),
+                   ("lm_head/table", None, Rank1Store(shape=(512, 8)))),
+            default_m=None, default_v=DenseStore())
+        assert StoreTree.from_json(tree.to_json()) == tree
+
+    def test_resolver_trees_do_not_serialize(self):
+        tree = StoreTree(resolver=lambda p, s: None)
+        with pytest.raises(ValueError):
+            tree.to_json()
+
+    def test_sketch_specs_enumerates_resolved_leaves(self):
+        params = {"tok_embed": {"table": jnp.zeros((256, 8))},
+                  "w": jnp.zeros((16, 16))}
+        tree = O.stores_from_policy(SketchPolicy(min_rows=128),
+                                    hparams=O.SketchHParams(
+                                        compression=4.0, width_multiple=16))
+        specs = tree.sketch_specs(params)
+        assert set(specs) == {"tok_embed/table"}
+        assert set(specs["tok_embed/table"]) == {"m", "v"}
+        assert specs["tok_embed/table"]["v"].signed is False
+
+
+POL = SketchPolicy(min_rows=256)
+HP = O.SketchHParams(compression=4.0, width_multiple=16)
+
+
+def _params():
+    return {"tok_embed": {"table": jnp.zeros((512, 16))},
+            "lm_head": {"table": jnp.zeros((384, 16))},
+            "w": jnp.zeros((32, 32)),
+            "b": jnp.zeros((32,))}
+
+
+class TestStateBytes:
+    """Satellite: ``state_bytes`` must agree with the eval_shape ground
+    truth and with the per-store ``bytes()`` predictions for every moment
+    layout — None leaves, Rank1Moment factors, bf16 sketches included."""
+
+    LAYOUTS = {
+        "mv": dict(policy=POL),
+        "cs_v": dict(policy=POL, sketch_first_moment=False),
+        "b1_zero": dict(policy=POL, track_first_moment=False),
+        "rank1": dict(rank1_policy=lambda p, s: "lm_head" in p, policy=POL),
+        "bf16": dict(policy=POL, hparams=dataclasses.replace(
+            HP, dtype="bfloat16")),
+    }
+
+    @pytest.mark.parametrize("layout", sorted(LAYOUTS))
+    def test_matches_eval_shape_ground_truth(self, layout):
+        kw = dict(self.LAYOUTS[layout])
+        hp = kw.pop("hparams", HP)
+        params = _params()
+        opt = O.countsketch_adam(1e-3, hparams=hp, **kw)
+        real = O.state_bytes(opt.init(params))
+        shaped = O.state_bytes(jax.eval_shape(opt.init, params))
+        assert real == shaped
+
+    @pytest.mark.parametrize("layout", sorted(LAYOUTS))
+    def test_matches_per_store_bytes(self, layout):
+        kw = dict(self.LAYOUTS[layout])
+        hp = kw.pop("hparams", HP)
+        params = _params()
+        stores = O.stores_from_policy(
+            kw.get("policy", nothing_policy),
+            rank1_policy=kw.get("rank1_policy", nothing_policy),
+            hparams=hp,
+            track_first_moment=kw.get("track_first_moment", True),
+            sketch_first_moment=kw.get("sketch_first_moment", True))
+        predicted = 4  # the (1,) int32 step scalar
+        for path, leaf in leaf_paths(params):
+            m, v = stores.resolve(path, tuple(leaf.shape), leaf.dtype)
+            predicted += (m.bytes() if m is not None else 0) + v.bytes()
+        opt = O.countsketch_adam(1e-3, hparams=hp, **kw)
+        assert O.state_bytes(opt.init(params)) == predicted
+
+    def test_none_and_rank1_leaves_counted_correctly(self):
+        """The two shapes the old flat special-casing got conceptually
+        wrong: β₁=0 states (None m leaves contribute 0) and Rank1Moment
+        factor pairs ((n+d)·4 B, not a dense n·d buffer)."""
+        params = _params()
+        b10 = O.countsketch_adam(1e-3, policy=POL, hparams=HP,
+                                 track_first_moment=False).init(params)
+        mv = O.countsketch_adam(1e-3, policy=POL, hparams=HP).init(params)
+        assert O.state_bytes(b10) < O.state_bytes(mv)
+        r1 = O.countsketch_adam(
+            1e-3, rank1_policy=lambda p, s: "lm_head" in p).init(params)
+        assert isinstance(r1["v"]["lm_head"]["table"], Rank1Moment)
+        dense = O.adam(1e-3).init(params)
+        assert (O.state_bytes(dense) - O.state_bytes(r1)
+                == 384 * 16 * 4 - (384 + 16) * 4)

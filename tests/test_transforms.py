@@ -1,0 +1,284 @@
+"""Composable transform API (DESIGN.md §12): chain / scale_by_* /
+scale_by_lr.
+
+The load-bearing acceptance test: ``chain(clip_by_global_norm(...),
+scale_by_adam(m_store=CountSketchStore(...), v_store=CountMinStore(...)),
+scale_by_lr(...))`` is bit-identical to the legacy ``countsketch_adam``
+wrapper (states AND updates, over a multi-step trajectory), and
+``countsketch_rmsprop`` is bit-identical to
+``countsketch_adam(track_first_moment=False)`` on the new path.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import optimizers as O
+from repro.core import transforms as T
+from repro.core.partition import SketchPolicy
+from repro.core.stores import (CountMinStore, CountSketchStore, DenseStore,
+                               Rank1Store, StoreTree)
+
+POL = SketchPolicy(min_rows=256)
+HP = O.SketchHParams(compression=4.0, width_multiple=16)
+
+
+def _setup(seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    params = {"tok_embed": {"table": jax.random.normal(k1, (512, 16))},
+              "lm_head": {"table": jax.random.normal(k3, (384, 16))},
+              "w": jax.random.normal(k2, (32, 32))}
+    grads = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(k2, p.shape) * 0.1, params)
+    return params, grads
+
+
+def tree_equal(a, b):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestChainMechanics:
+    def test_state_is_tuple_of_link_states(self):
+        params, grads = _setup()
+        opt = T.chain(T.scale_by_adam(), T.scale_by_lr(1e-3))
+        state = opt.init(params)
+        assert isinstance(state, tuple) and len(state) == 2
+        assert set(state[0]) == {"step", "m", "v"}
+        assert set(state[1]) == {"step"}
+        u, state = opt.update(grads, state, params)
+        assert int(state[0]["step"]) == int(state[1]["step"]) == 1
+
+    def test_scale_by_lr_schedule_and_int_leaves(self):
+        sched = O.linear_decay(1.0, 10)
+        t = T.scale_by_lr(sched)
+        state = t.init(None)
+        upd = {"ids": jnp.asarray([1, 2], jnp.int32),
+               "rows": jnp.ones((2, 4)), "none": None}
+        out, state = t.update(upd, state, None)
+        np.testing.assert_array_equal(out["ids"], upd["ids"])  # untouched
+        eta = float(sched(jnp.asarray(1)))
+        np.testing.assert_array_equal(out["rows"], -eta * upd["rows"])
+        assert out["none"] is None
+
+    def test_clip_is_both_callable_and_chain_link(self):
+        g = {"a": jnp.ones((10,)) * 10.0}
+        clip = O.clip_by_global_norm(1.0)
+        np.testing.assert_allclose(
+            float(jnp.linalg.norm(clip(g)["a"])), 1.0, atol=1e-5)
+        chained = T.chain(clip, T.scale_by_lr(1.0))
+        u, _ = chained.update(g, chained.init(None), None)
+        np.testing.assert_array_equal(np.asarray(u["a"]),
+                                      np.asarray(-clip(g)["a"]))
+
+    def test_scale_by_momentum_requires_m_capable_store(self):
+        with pytest.raises(ValueError):
+            T.scale_by_momentum(stores=StoreTree(default_m=Rank1Store())) \
+             .init({"w": jnp.zeros((8, 8))})
+
+    def test_scale_by_adam_rejects_unbound_rows_stores(self):
+        with pytest.raises(ValueError):
+            T.scale_by_adam_rows(m_store=CountSketchStore(),
+                                 v_store=CountMinStore())
+
+
+class TestCompositionParity:
+    """ISSUE 3 acceptance: the explicit chain == the legacy wrapper."""
+
+    def _run(self, opt, params, grads, steps=4):
+        state = opt.init(params)
+        outs = []
+        p = params
+        for _ in range(steps):
+            u, state = opt.update(grads, state, p)
+            p = O.apply_updates(p, u)
+            outs.append((u, p))
+        return outs, state
+
+    def test_chain_bit_identical_to_countsketch_adam(self):
+        params, grads = _setup()
+        sched = O.linear_decay(1e-3, 100)
+        legacy = O.countsketch_adam(sched, policy=POL, hparams=HP)
+        composed = T.chain(
+            T.scale_by_adam(m_store=CountSketchStore(compression=4.0,
+                                                     width_multiple=16),
+                            v_store=CountMinStore(compression=4.0,
+                                                  width_multiple=16),
+                            where=POL),
+            T.scale_by_lr(sched))
+        lo, ls = self._run(legacy, params, grads)
+        co, cs_ = self._run(composed, params, grads)
+        for (ul, pl), (uc, pc) in zip(lo, co):
+            tree_equal(ul, uc)
+            tree_equal(pl, pc)
+        # legacy state dict == the chain's rule-link state
+        tree_equal(ls, cs_[0])
+
+    def test_chain_with_clip_bit_identical(self):
+        params, grads = _setup(seed=3)
+        legacy = O.countsketch_adam(1e-2, policy=POL, hparams=HP)
+        composed = T.chain(
+            O.clip_by_global_norm(0.5),
+            T.scale_by_adam(m_store=CountSketchStore(compression=4.0,
+                                                     width_multiple=16),
+                            v_store=CountMinStore(compression=4.0,
+                                                  width_multiple=16),
+                            where=POL),
+            T.scale_by_lr(1e-2))
+        clip = O.clip_by_global_norm(0.5)
+        state_l, state_c = legacy.init(params), composed.init(params)
+        p_l = p_c = params
+        for _ in range(3):
+            ul, state_l = legacy.update(clip(grads), state_l, p_l)
+            uc, state_c = composed.update(grads, state_c, p_c)
+            tree_equal(ul, uc)
+            p_l, p_c = O.apply_updates(p_l, ul), O.apply_updates(p_c, uc)
+        tree_equal(p_l, p_c)
+
+    def test_rmsprop_delegates_bit_identical(self):
+        """Satellite: countsketch_rmsprop (via scale_by_rmsprop) ==
+        countsketch_adam(track_first_moment=False)."""
+        params, grads = _setup(seed=1)
+        a = O.countsketch_adam(1e-3, policy=POL, hparams=HP,
+                               track_first_moment=False)
+        r = O.countsketch_rmsprop(1e-3, policy=POL, hparams=HP)
+        sa, sr = a.init(params), r.init(params)
+        tree_equal(sa, sr)
+        assert all(m is None for m in jax.tree_util.tree_leaves(
+            sr["m"], is_leaf=lambda x: x is None))
+        p_a = p_r = params
+        for _ in range(4):
+            ua, sa = a.update(grads, sa, p_a)
+            ur, sr = r.update(grads, sr, p_r)
+            tree_equal(ua, ur)
+            tree_equal(sa, sr)
+            p_a, p_r = O.apply_updates(p_a, ua), O.apply_updates(p_r, ur)
+
+    def test_rank1_store_in_chain_matches_legacy_rank1_policy(self):
+        params, grads = _setup(seed=2)
+        r1 = lambda p, s: "lm_head" in p
+        legacy = O.countsketch_adam(1e-3, policy=POL, rank1_policy=r1,
+                                    hparams=HP)
+        composed = T.chain(
+            T.scale_by_adam(stores=O.stores_from_policy(
+                POL, rank1_policy=r1, hparams=HP)),
+            T.scale_by_lr(1e-3))
+        sl, sc = legacy.init(params), composed.init(params)
+        for _ in range(3):
+            ul, sl = legacy.update(grads, sl, params)
+            uc, sc = composed.update(grads, sc, params)
+            tree_equal(ul, uc)
+        tree_equal(sl, sc[0])
+
+
+class TestRowsTransform:
+    """scale_by_adam_rows ∘ scale_by_lr == sparse_rows_adam (the wrapped
+    sparse fast path), and the direction is the kernel output at lr=-1."""
+
+    def _grads(self, k=12, d=16, seed=0):
+        rng = np.random.RandomState(seed)
+        return {"ids": jnp.asarray(rng.randint(0, 512, size=k), jnp.int32),
+                "rows": jnp.asarray(rng.randn(k, d), jnp.float32)}
+
+    def test_matches_sparse_rows_adam_wrapper(self):
+        hp = O.SketchHParams(compression=4.0, width_multiple=16,
+                             backend="xla")
+        wrapper = O.sparse_rows_adam(1e-2, shape=(512, 16), hparams=hp)
+        m_store = CountSketchStore(
+            spec=hp.spec("sparse_rows", (512, 16), signed=True),
+            shape=(512, 16))
+        v_store = CountMinStore(
+            spec=hp.spec("sparse_rows", (512, 16), signed=False),
+            shape=(512, 16))
+        composed = T.chain(
+            T.scale_by_adam_rows(m_store=m_store, v_store=v_store,
+                                 backend="xla"),
+            T.scale_by_lr(1e-2))
+        sw, sc = wrapper.init(), composed.init(None)
+        for i in range(3):
+            g = self._grads(seed=i)
+            uw, sw = wrapper.update(g, sw)
+            uc, sc = composed.update(g, sc, None)
+            np.testing.assert_array_equal(uw["ids"], uc["ids"])
+            tree_equal(uw, uc)
+            tree_equal(sw, sc[0])
+
+    def test_direction_is_unscaled_kernel_output(self):
+        hp = O.SketchHParams(compression=4.0, width_multiple=16)
+        v_store = CountMinStore(
+            spec=hp.spec("t", (512, 16), signed=False), shape=(512, 16))
+        rule = T.scale_by_adam_rows(m_store=None, v_store=v_store,
+                                    backend="xla")
+        st = rule.init(None)
+        g = self._grads()
+        u, st = rule.update(g, st, None)
+        from repro import kernels
+        _, _, ref = kernels.adam_rows(
+            None, v_store.spec, None, v_store.init(), g["ids"], g["rows"],
+            jnp.asarray(1, jnp.int32), lr=-1.0, backend="xla")
+        np.testing.assert_array_equal(np.asarray(u["rows"]), np.asarray(ref))
+
+    def test_beta1_zero_layout(self):
+        hp = O.SketchHParams(compression=4.0, width_multiple=16,
+                             backend="xla")
+        opt = O.sparse_rows_adam(1e-2, shape=(512, 16), hparams=hp,
+                                 track_first_moment=False)
+        st = opt.init()
+        assert st["m"] is None
+        u, st = opt.update(self._grads(), st)
+        assert np.isfinite(np.asarray(u["rows"])).all()
+
+    def test_store_tree_moment_layout_is_authoritative(self):
+        """A β₁=0 StoreTree (m=None) must not be overridden by
+        make_sparse_embedding_step's track_first_moment default — the
+        recorded vocabulary has to describe the allocated state."""
+        from repro.core.sketch import for_param
+        from repro.core.stores import StoreTree
+        from repro.train.steps import make_sparse_embedding_step
+        spec = for_param((512, 16), compression=4.0, signed=False,
+                         width_multiple=16)
+        tree = StoreTree(rules=(("sparse_embedding", None,
+                                 CountMinStore(spec=spec,
+                                               shape=(512, 16))),),
+                         default_m=None)
+        _, _, opt = make_sparse_embedding_step(
+            512, 16, hparams=O.SketchHParams(backend="xla"), stores=tree)
+        st = opt.init()
+        assert st["m"] is None          # β₁=0 layout honored
+        assert st["v"].shape == spec.shape
+
+    def test_explicit_v_store_still_honors_cleaning(self):
+        """cleaning= must attach to a caller-provided v_store (e.g. from
+        a plan StoreTree, which carries none), and conflicting non-None
+        schedules must be rejected."""
+        from repro.core.cleaning import CleaningSchedule
+        from repro.core.sketch import for_param
+        spec = for_param((512, 16), compression=4.0, signed=False,
+                         width_multiple=16)
+        vs = CountMinStore(spec=spec, shape=(512, 16))
+        clean = CleaningSchedule(alpha=0.5, every=2)
+        hp = O.SketchHParams(backend="xla")
+        with_clean = O.sparse_rows_adam(
+            1e-2, shape=(512, 16), hparams=hp, track_first_moment=False,
+            v_store=vs, cleaning=clean)
+        without = O.sparse_rows_adam(
+            1e-2, shape=(512, 16), hparams=hp, track_first_moment=False,
+            v_store=vs)
+        g = self._grads()
+        sa, sb = with_clean.init(), without.init()
+        for _ in range(2):                     # step 2 triggers the decay
+            _, sa = with_clean.update(g, sa)
+            _, sb = without.update(g, sb)
+        assert (np.abs(np.asarray(sa["v"])).sum()
+                < np.abs(np.asarray(sb["v"])).sum())
+        with pytest.raises(ValueError):
+            O.sparse_rows_adam(
+                1e-2, shape=(512, 16), hparams=hp,
+                v_store=dataclasses.replace(
+                    vs, cleaning=CleaningSchedule(alpha=0.9, every=7)),
+                cleaning=clean)
