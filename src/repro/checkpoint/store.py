@@ -220,3 +220,18 @@ def is_sketch_from_store_tree(store_tree) -> Callable[[str, Any], bool]:
         return any(path == s or path.endswith(f"/{s}") for s in sketchy)
 
     return pred
+
+
+def fold_predicate_from_manifest(manifest: Dict[str, Any]
+                                 ) -> Callable[[str, Any], bool]:
+    """The strongest fold predicate the manifest's own metadata supports:
+    the exact ``is_sketch_from_store_tree`` predicate when a serialized
+    StoreTree rode along in ``extra`` (every planned run records one),
+    else the ``default_is_sketch`` name heuristic.  This is what elastic
+    restore (``repro.distributed.elastic.elastic_restore``) folds with."""
+    extra = manifest.get("extra") or {}
+    if extra.get("store_tree") is not None:
+        from repro.core.stores import StoreTree
+        return is_sketch_from_store_tree(
+            StoreTree.from_json(extra["store_tree"]))
+    return default_is_sketch

@@ -53,8 +53,9 @@ from repro.core.stores import (  # noqa: F401  (public re-exports)
     Rank1Store, StoreTree, leaf_seed as _leaf_seed)
 from repro.core.transforms import (  # noqa: F401  (public re-exports)
     Schedule, Transform, _lr_at, _path_str, chain, clip_by_global_norm,
-    scale_by_adagrad, scale_by_adam, scale_by_adam_rows, scale_by_lr,
-    scale_by_momentum, scale_by_rmsprop, tree_map_with_path)
+    scale_by_adagrad, scale_by_adam, scale_by_adam_rows,
+    scale_by_adam_rows_dp, scale_by_lr, scale_by_momentum, scale_by_rmsprop,
+    tree_map_with_path)
 
 
 def apply_updates(params, updates):
@@ -419,6 +420,56 @@ def sparse_rows_adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
                          "registry, which has no strict_paper (3-pass) "
                          "path — use adam_sparse_rows(backend=None, "
                          "strict_paper=True) instead")
+    m_store, v_store = _sparse_rows_stores(
+        shape, path, hparams, track_first_moment=track_first_moment,
+        cleaning=cleaning, m_store=m_store, v_store=v_store)
+    rule = T.scale_by_adam_rows(
+        b1=b1, b2=b2, eps=eps, m_store=m_store, v_store=v_store,
+        backend=hparams.backend if hparams.backend is not None else "auto")
+    return _with_lr(rule, lr)
+
+
+def sparse_rows_adam_dp(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+                        eps: float = 1e-8, *, shape: Tuple[int, int],
+                        path: str = "sparse_rows",
+                        axis_name: str = "data",
+                        hparams: SketchHParams = SketchHParams(),
+                        track_first_moment: bool = True,
+                        cleaning: Optional[CleaningSchedule] = None,
+                        error_feedback: bool = False,
+                        dir_clip: Optional[float] = 10.0,
+                        m_store: Optional[AuxStore] = None,
+                        v_store: Optional[AuxStore] = None) -> Transform:
+    """Data-parallel ``sparse_rows_adam``: identical store derivation and
+    legacy ``{"step", "m", "v", "residual"}`` state layout, but ``update``
+    must run inside ``shard_map``/``vmap(axis_name=...)`` over
+    ``axis_name`` — the collective all-reduces the (depth, width, dim)
+    gradient sketches instead of the (k, d) rows (DESIGN.md §13).
+
+    ``error_feedback=True`` adds the residual sketch that accumulates the
+    2nd-moment cross-replica term.  The emitted ``{"ids", "rows"}`` are
+    at the GLOBAL unique ids (out-of-range padding; the scatter in
+    ``apply_sparse_updates`` drops it)."""
+    m_store, v_store = _sparse_rows_stores(
+        shape, path, hparams, track_first_moment=track_first_moment,
+        cleaning=cleaning, m_store=m_store, v_store=v_store)
+    rule = T.scale_by_adam_rows_dp(
+        b1=b1, b2=b2, eps=eps, m_store=m_store, v_store=v_store,
+        axis_name=axis_name, error_feedback=error_feedback,
+        dir_clip=dir_clip)
+    return _with_lr(rule, lr)
+
+
+def _sparse_rows_stores(shape: Tuple[int, int], path: str,
+                        hparams: SketchHParams, *,
+                        track_first_moment: bool,
+                        cleaning: Optional[CleaningSchedule],
+                        m_store: Optional[AuxStore],
+                        v_store: Optional[AuxStore]
+                        ) -> Tuple[Optional[AuxStore], AuxStore]:
+    """The shared (m_store, v_store) derivation of the sparse-rows
+    optimizers: ``hparams`` sizing unless explicit stores are given, with
+    the cleaning-schedule consistency guards."""
     shape = tuple(int(s) for s in shape)
     if v_store is None:
         v_store = CountMinStore(spec=hparams.spec(path, shape, signed=False),
@@ -442,11 +493,7 @@ def sparse_rows_adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
     if m_store is None and track_first_moment:
         m_store = CountSketchStore(spec=hparams.spec(path, shape, signed=True),
                                    shape=shape)
-    rule = T.scale_by_adam_rows(
-        b1=b1, b2=b2, eps=eps,
-        m_store=m_store if track_first_moment else None, v_store=v_store,
-        backend=hparams.backend if hparams.backend is not None else "auto")
-    return _with_lr(rule, lr)
+    return (m_store if track_first_moment else None), v_store
 
 
 def apply_sparse_updates(table: jnp.ndarray, updates) -> jnp.ndarray:

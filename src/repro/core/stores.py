@@ -386,6 +386,25 @@ class StoreTree:
                 out[path] = d
         return out
 
+    def sketch_state_shapes(self, param_shapes: Dict[str, Tuple[int, ...]]
+                            ) -> Dict[Tuple[str, str], Tuple[int, int, int]]:
+        """{(slot, path): (depth, width, dim)} for every param leaf whose
+        ``m``/``v`` slot resolves to a sketch-backed store — the exact
+        classification table ``distributed.sharding.opt_specs_for_state``
+        shards optimizer state with (slot ∈ {'m', 'v'}; the DP error-
+        feedback ``residual`` shares the 'v' geometry)."""
+        out: Dict[Tuple[str, str], Tuple[int, int, int]] = {}
+        for path, shape in param_shapes.items():
+            try:
+                m, v = self.resolve(path, shape, jnp.float32)
+            except Exception:   # noqa: BLE001 — stores rejecting the leaf
+                continue
+            for slot, s in (("m", m), ("v", v)):
+                if s is not None and s.kind in ("sketch", "countmin") \
+                        and getattr(s, "spec", None) is not None:
+                    out[(slot, path)] = tuple(s.spec.shape)
+        return out
+
     # -- serialization ------------------------------------------------------
     def to_json(self) -> Dict[str, Any]:
         if self.resolver is not None:

@@ -498,6 +498,65 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
     return Transform(init, update)
 
 
+def scale_by_adam_rows_dp(b1: float = 0.9, b2: float = 0.999,
+                          eps: float = 1e-8, *,
+                          m_store: Optional[AuxStore],
+                          v_store: AuxStore,
+                          axis_name: str = "data",
+                          error_feedback: bool = False,
+                          dir_clip: Optional[float] = 10.0) -> Transform:
+    """Data-parallel ``scale_by_adam_rows``: the same one-table (ids, rows)
+    contract, but ``update`` must run inside ``shard_map`` (or
+    ``vmap(axis_name=...)``) over ``axis_name`` with the sketch state
+    replicated and the (ids, rows) batch sharded.
+
+    Each replica sketches its LOCAL gradient shard; the collectives move
+    the (depth, width, dim) sketches and the int32 id shards — never the
+    (k, d) gradient rows (``repro.distributed.sketched_reduce.dp_adam_rows``
+    is the body; DESIGN.md §13).  ``error_feedback=True`` adds the
+    MicroAdam-style residual sketch that accumulates the 2nd-moment
+    cross-replica term instead of dropping it.
+
+    Emits ``{"ids": global_unique_ids, "rows": direction}`` with the
+    direction unscaled — compose with ``scale_by_lr`` and apply via
+    ``apply_sparse_updates`` (the fill-id padding is out of range, so the
+    scatter drops it).  ``dir_clip``: the per-coordinate trust clamp on
+    the emitted direction (sketch-noise guard — see ``dp_adam_rows``;
+    None disables)."""
+    for name, store, kinds in (("m_store", m_store, ("sketch",)),
+                               ("v_store", v_store, ("countmin", "sketch"))):
+        if store is None:
+            continue
+        if store.kind not in kinds or store.spec is None:
+            raise ValueError(f"{name} must be a bound (explicit-spec) "
+                             f"{'/'.join(kinds)} store, got {store!r}")
+    spec_m = m_store.spec if m_store is not None else None
+    spec_v = v_store.spec
+
+    def init(params=None):
+        from repro.distributed import sketched_reduce as sr
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": m_store.init() if m_store is not None else None,
+                "v": v_store.init(),
+                "residual": (sr.init_feedback(spec_v)
+                             if error_feedback else None)}
+
+    def update(grads, state, params=None):
+        from repro.distributed import sketched_reduce as sr
+        ids, rows = grads["ids"], grads["rows"]
+        step = state["step"] + 1
+        V_in = v_store.clean(state["v"], step)
+        out = sr.dp_adam_rows(
+            spec_m, spec_v, state["m"], V_in, ids, rows, step,
+            axis_name=axis_name, b1=b1, b2=b2, eps=eps,
+            residual=state["residual"], dir_clip=dir_clip)
+        return ({"ids": out.uids, "rows": out.rows},
+                {"step": step, "m": out.M, "v": out.V,
+                 "residual": out.residual})
+
+    return Transform(init, update)
+
+
 def scale_by_rmsprop(b2: float = 0.999, eps: float = 1e-8, *,
                      stores: Optional[StoreTree] = None,
                      v_store: Any = _UNSET, where=None,

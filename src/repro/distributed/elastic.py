@@ -104,6 +104,31 @@ def plan_resize(available_chips: int, *, model_axis: int = 16,
                        fold_sketch=growth > 1.0 / memory_headroom)
 
 
+def elastic_restore(ckpt_dir, tree_like, plan: ElasticPlan, *,
+                    store_tree=None, shardings=None):
+    """Checkpoint restore onto a (possibly shrunken) fleet, honoring the
+    resize decision: when ``plan.fold_sketch`` every count-sketch leaf of
+    the restored tree is Hokusai-folded (width halved, upper half added
+    into the lower — ``repro.checkpoint.store.fold_sketches``), so the
+    accumulated optimizer state survives the memory loss without reset.
+
+    Sketch leaves are identified EXACTLY via ``is_sketch_from_store_tree``
+    when a ``store_tree`` is given or the checkpoint manifest recorded one
+    (planned runs always do); otherwise the name heuristic applies.
+    Returns ``(step, tree, folded)``."""
+    from repro.checkpoint import store as ckpt
+
+    step, tree = ckpt.restore(ckpt_dir, tree_like, shardings=shardings)
+    if not plan.fold_sketch:
+        return step, tree, False
+    if store_tree is not None:
+        pred = ckpt.is_sketch_from_store_tree(store_tree)
+    else:
+        pred = ckpt.fold_predicate_from_manifest(
+            ckpt.read_manifest(ckpt_dir, step))
+    return step, ckpt.fold_sketches(tree, pred), True
+
+
 @dataclasses.dataclass
 class RecoveryOutcome:
     steps_run: int

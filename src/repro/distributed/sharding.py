@@ -258,31 +258,86 @@ def sketch_spec(mesh: Mesh, shape: Tuple[int, int, int]) -> P:
     return P(*axes)
 
 
-def opt_specs_for_state(state_shape, params_shape, mesh: Mesh, *,
-                        fsdp: bool = False, expert_sharding: str = "ep"):
-    """Spec pytree for an optimizer-state pytree.
+# Moment-tree tags an optimizer state may carry: the chain/legacy rules
+# keep their EMAs under 'm'/'v'; the DP sparse-rows rule adds 'residual'
+# (an error-feedback sketch in the v geometry).
+_MOMENT_TAGS = ("m", "v", "residual")
 
-    Dense moment leaves (same shape as their param) reuse the param spec +
-    ZeRO-1 'data' sharding.  Sketch leaves (depth ≤ 8, rank 3, shape differs
-    from the param) get (None, 'data', 'model').  Everything else (step
-    counters, scalars) replicates.
+
+def _looks_like_sketch(shape: Tuple[int, ...]) -> bool:
+    """Cheap structural test: (depth ≤ 8, width, dim) rank-3 tensors."""
+    return len(shape) == 3 and shape[0] <= 8
+
+
+def opt_specs_for_state(state_shape, params_shape, mesh: Mesh, *,
+                        fsdp: bool = False, expert_sharding: str = "ep",
+                        store_tree=None, strict: bool = True):
+    """Spec pytree for an optimizer-state pytree, resolving paths in the
+    real ``chain``/``AuxStore`` state layout (DESIGN.md §12–13):
+
+      * leading integer components (``chain`` tuple indices) are stripped,
+        so ``0/m/<param path>`` and the legacy ``m/<param path>`` resolve
+        identically;
+      * dense moment leaves (same shape as their param) reuse the param
+        spec + ZeRO-1 'data' sharding on the first free divisible dim;
+      * sketch leaves — ``(depth, width, dim)`` — shard width over 'data'
+        and dim over 'model'.  With a ``store_tree`` (``repro.core.stores
+        .StoreTree``, e.g. ``Plan.store_tree()``) the classification is
+        exact: a moment leaf is a sketch iff the tree resolves its param
+        path to a sketch-backed store whose bound spec has this shape.
+        Without one, the structural fallback (rank 3, depth ≤ 8, dim ==
+        the param's trailing dim — or a bare single-table ``m``/``v``/
+        ``residual`` state with no param path) applies;
+      * ``Rank1Moment`` factors (trailing ``r``/``c`` vector leaves) and
+        scalars (step counters) replicate.
+
+    ``strict`` (default): a moment leaf that *looks* like a sketch but
+    matches neither its param's shape nor a resolvable sketch spec raises
+    instead of silently replicating — the failure mode that left sketch
+    state unsharded when the state layout changed under the old rules.
     """
     param_shapes = {p: tuple(l.shape) for p, l in _iter_with_path(params_shape)}
+    resolved_sketch_shapes = (store_tree.sketch_state_shapes(param_shapes)
+                              if store_tree is not None else {})
 
     def leaf(path, x):
         if x is None or not hasattr(x, "shape") or x.ndim == 0:
             return P()
         shape = tuple(x.shape)
-        # state paths look like 'm/<param path>' or 'v/<param path>'
-        sub = path.split("/", 1)[1] if "/" in path else path
+        parts = [p for p in path.split("/") if p]
+        while parts and parts[0].isdigit():      # chain tuple indices
+            parts.pop(0)
+        if not parts:
+            return P()
+        tag, rest = parts[0], parts[1:]
+        if tag not in _MOMENT_TAGS:
+            return P()                           # step counters, scalars
+        # Rank1Moment factors flatten with a trailing attribute key
+        if rest and rest[-1].lstrip(".") in ("r", "c") and x.ndim == 1:
+            return P()                           # rank-1 factors replicate
+        sub = "/".join(rest)
         pshape = param_shapes.get(sub)
         if pshape == shape:
             base = spec_for(sub, shape, mesh, fsdp=fsdp,
                             expert_sharding=expert_sharding)
             return zero1_spec(base, shape, mesh)
-        if len(shape) == 3 and shape[0] <= 8 and pshape is not None \
+        if not sub and _looks_like_sketch(shape):
+            return sketch_spec(mesh, shape)      # bare single-table state
+        if store_tree is not None and sub:
+            want = resolved_sketch_shapes.get(
+                ("v" if tag == "residual" else tag, sub))
+            if want == shape:
+                return sketch_spec(mesh, shape)
+        elif _looks_like_sketch(shape) and pshape is not None \
                 and len(pshape) == 2 and shape[2] == pshape[1]:
             return sketch_spec(mesh, shape)
+        if strict and _looks_like_sketch(shape) and (
+                not sub or pshape is None or len(pshape) == 2):
+            raise ValueError(
+                f"optimizer-state leaf {path!r} with sketch-like shape "
+                f"{shape} matched no sharding rule (param shape "
+                f"{pshape}); refusing to silently replicate sketch state "
+                f"— pass the run's StoreTree or fix the rules")
         return P()
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(
@@ -350,9 +405,68 @@ def current_mesh() -> Optional[Mesh]:
     return _ACTIVE_MESH[-1] if _ACTIVE_MESH else None
 
 
+_MANUAL_DEPTH: list = []
+
+
+class manual_collectives:
+    """Context for tracing code INSIDE a ``shard_map`` body: mesh axes are
+    manual there, so ``with_sharding_constraint`` is illegal —
+    ``constraint`` becomes a no-op while this context is active (the DP
+    train step wraps the model's loss in it; DESIGN.md §13)."""
+
+    def __enter__(self):
+        _MANUAL_DEPTH.append(True)
+        return self
+
+    def __exit__(self, *exc):
+        _MANUAL_DEPTH.pop()
+        return False
+
+
+def dp_sparse_wrap(local_fn, *, mesh: Optional[Mesh] = None,
+                   dp_axis: str = "data"):
+    """The one-table sparse DP calling convention, in one place: wrap
+    ``local_fn(table, state, ids, rows) -> (table, state)`` in a
+    ``shard_map`` over ``dp_axis`` with table/state replicated and the
+    (ids, rows) batch sharded on dim 0.  ``mesh`` falls back to the
+    active mesh at call/trace time (train sparse steps, serve adaptation,
+    and the traffic benchmark's dense baseline all share this shape)."""
+
+    def wrapped(table, state, ids, rows):
+        use_mesh = mesh if mesh is not None else current_mesh()
+        if use_mesh is None:
+            raise ValueError(
+                f"dp sparse steps over {dp_axis!r} need a mesh: pass "
+                f"mesh= or trace inside shd.active_mesh(mesh)")
+        dp = P(dp_axis)
+        return shard_map_unchecked(
+            local_fn, mesh=use_mesh,
+            in_specs=(P(), P(), dp, dp),
+            out_specs=(P(), P()))(table, state, ids, rows)
+
+    return wrapped
+
+
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, across the JAX
+    versions that spell the knob ``check_rep`` (≤ 0.4.x) or ``check_vma``
+    (newer): the DP step's outputs are replicated by construction (psum /
+    all_gather derived), which the static checker cannot always prove."""
+    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return shard_map_compat(f, mesh=mesh, in_specs=in_specs,
+                                    out_specs=out_specs, **kw)
+        except TypeError:
+            continue
+    raise AssertionError("unreachable: bare shard_map rejected")
+
+
 def constraint(x, spec: P):
     """with_sharding_constraint that is a no-op outside an ``active_mesh``
-    context and silently drops axes the mesh doesn't have / can't divide."""
+    context (or inside a ``manual_collectives`` region) and silently drops
+    axes the mesh doesn't have / can't divide."""
+    if _MANUAL_DEPTH:
+        return x
     mesh = current_mesh()
     if mesh is None:
         return x

@@ -86,7 +86,7 @@ def main() -> int:
     cfg = configs.get(args.arch)
     shape = SHAPES[args.shape]
     mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
-    lowered, ps, tokens, kind = lower_cell(cfg, shape, mesh,
+    lowered, ps, tokens, kind, _info = lower_cell(cfg, shape, mesh,
                                            optimizer=args.optimizer)
     compiled = lowered.compile()
     rows = collect_rows(compiled.as_text(), mesh.devices.size)

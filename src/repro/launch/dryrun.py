@@ -50,11 +50,42 @@ def _jsonable(x):
     return str(x)
 
 
+def opt_sharding_summary(opt_shape, oshard) -> dict:
+    """Coverage stats of the optimizer-state sharding tree: how many
+    array leaves resolved to a sharded (non-replicated) spec, split into
+    sketch-shaped leaves and the rest — the dryrun artifact records this
+    so a state-layout change that silently un-shards sketch state shows
+    up as a diff (the failure the PR-3 refactor exposed)."""
+    # flatten BOTH trees None-aware: the state may hold None leaves
+    # (β₁=0 m slots, feedback off) and the sharding tree has a
+    # NamedSharding at those positions — plain tree_leaves would drop
+    # the Nones from one side only and misalign every following pair
+    flat_o = jax.tree_util.tree_leaves(opt_shape,
+                                       is_leaf=lambda x: x is None)
+    flat_s = jax.tree_util.tree_leaves(
+        oshard, is_leaf=lambda x: x is None or hasattr(x, "spec"))
+    out = {"leaves": 0, "sharded": 0, "sketch_leaves": 0,
+           "sketch_sharded": 0}
+    for leaf, sh in zip(flat_o, flat_s):
+        if leaf is None or not hasattr(leaf, "ndim") or leaf.ndim == 0:
+            continue
+        out["leaves"] += 1
+        sharded = bool(tuple(sh.spec))
+        out["sharded"] += sharded
+        if leaf.ndim == 3 and leaf.shape[0] <= 8:
+            out["sketch_leaves"] += 1
+            out["sketch_sharded"] += sharded
+    return out
+
+
 def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
                optimizer: str = TRAIN_OPTIMIZER, plan=None):
-    """Returns (lowered, n_params_shape_tree, tokens, kind).  ``plan``: an
-    optional ``repro.plan.Plan`` replacing the regex policy for train
-    cells (serve cells carry no optimizer state)."""
+    """Returns (lowered, n_params_shape_tree, tokens, kind, info).
+    ``plan``: an optional ``repro.plan.Plan`` replacing the regex policy
+    for train cells (serve cells carry no optimizer state); its
+    ``StoreTree`` rides into ``TrainStep.shardings`` so the optimizer-
+    state sharding classification is exact.  ``info``: extra artifact
+    fields (train cells record the opt-state sharding coverage)."""
     n_dev = mesh.devices.size
     if shape.kind == "train":
         from repro.train.steps import make_train_step
@@ -74,7 +105,8 @@ def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
         with shd.active_mesh(mesh):
             lowered = fn.lower(ps, os_, batch)
         tokens = shape.global_batch * shape.seq_len
-        return lowered, ps, tokens, "train"
+        info = {"opt_sharding": opt_sharding_summary(os_, oshard)}
+        return lowered, ps, tokens, "train", info
 
     from repro.serve.steps import make_serve_step
     ss = make_serve_step(cfg, batch=shape.global_batch, max_seq=shape.seq_len)
@@ -95,7 +127,7 @@ def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
         with shd.active_mesh(mesh):
             lowered = fn.lower(ps, batch)
         tokens = shape.global_batch * shape.seq_len
-        return lowered, ps, tokens, "prefill"
+        return lowered, ps, tokens, "prefill", {}
 
     # decode: one token against a seq_len cache
     cache = ss.cache_shape()
@@ -110,7 +142,7 @@ def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
     with shd.active_mesh(mesh):
         lowered = fn.lower(ps, cache, token)
     tokens = shape.global_batch
-    return lowered, ps, tokens, "decode"
+    return lowered, ps, tokens, "decode", {}
 
 
 def plan_cell(cfg: ArchConfig, budget: str, *, optimizer: str):
@@ -161,7 +193,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         # cell's error and the sweep continues
         if aux_budget and shape.kind == "train":
             plan = plan_cell(cfg, aux_budget, optimizer=optimizer)
-        lowered, ps, tokens, kind = lower_cell(cfg, shape, mesh,
+        lowered, ps, tokens, kind, info = lower_cell(cfg, shape, mesh,
                                                optimizer=optimizer,
                                                plan=plan)
         t_lower = time.time() - t0
@@ -182,6 +214,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
             "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
             "memory": mem,
             "roofline": roof.to_dict(),
+            **info,
         }
         if plan is not None:
             rec["plan"] = {"aux_budget": aux_budget,

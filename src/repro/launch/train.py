@@ -9,6 +9,18 @@ path on one CPU device.  ``--reduced`` swaps in the smoke-size config.
 Recovery: on restart the trainer restores the latest atomic checkpoint
 and the deterministic zipf stream replays the remaining steps
 bit-identically (tests/test_substrate.py::TestTrainer).
+
+Distributed data parallelism (DESIGN.md §13):
+
+  * ``--dp`` runs the step as an explicit ``shard_map`` over a 'data'
+    axis spanning every local device (manual collectives instead of
+    GSPMD), with the derived param/opt-state/batch shardings threaded
+    through ``jax.jit`` and checkpoint restore;
+  * ``--workload sparse_embedding`` trains a standalone (rows, dim)
+    embedding table in the paper's (ids, grad-rows) regime — under
+    ``--dp`` the gradient collective moves (depth, width, dim) COUNT
+    SKETCHES instead of the (k, d) rows, and the sketch state itself is
+    stored width-sharded over 'data' (``sharding.opt_specs_for_state``).
 """
 import argparse
 import os
@@ -21,8 +33,73 @@ from repro.checkpoint import store
 from repro.data import ZipfLM, ZipfLMConfig
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_host_mesh
-from repro.train.steps import make_train_step
+from repro.train.steps import make_sparse_embedding_step, make_train_step
 from repro.train.trainer import Trainer, TrainerConfig, TrainState
+
+
+def run_sparse_embedding(args, mesh) -> int:
+    """The (ids, grad-rows) workload: pull a zipf-touched embedding table
+    toward a fixed target table (∇ = table[ids] − target[ids] on touched
+    rows — a convergent quadratic), through the DP sparse step when
+    ``--dp``.  Store state (m/v sketches, optional residual) is sharded
+    per ``opt_specs_for_state`` at the jit boundary."""
+    import jax.numpy as jnp
+    from repro.core.optimizers import SketchHParams
+
+    n_rows, dim = args.sparse_rows, args.sparse_dim
+    hp = SketchHParams(compression=args.sparse_compression)
+    dp_axis = "data" if args.dp else None
+    init_fn, step_fn, opt = make_sparse_embedding_step(
+        n_rows, dim, lr=args.lr, hparams=hp, dp_axis=dp_axis, mesh=mesh,
+        error_feedback=args.error_feedback)
+
+    data = ZipfLM(ZipfLMConfig(
+        vocab_size=n_rows, seq_len=args.seq, global_batch=args.batch,
+        seed=args.seed, n_hosts=jax.process_count(),
+        host_id=jax.process_index()))
+
+    with shd.active_mesh(mesh):
+        table = init_fn(jax.random.PRNGKey(args.seed))
+        opt_state = opt.init()
+        target = init_fn(jax.random.PRNGKey(args.seed + 1))
+
+        # shardings: table replicated, sketch state width-over-'data'
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        table_spec = NamedSharding(mesh, P())
+        opt_shape = jax.eval_shape(opt.init)
+        opt_spec = shd.named(mesh, shd.opt_specs_for_state(
+            opt_shape, table, mesh))
+        bspec = shd.named(mesh, {
+            "tokens": shd.batch_spec(mesh, (args.batch, args.seq)),
+            "labels": shd.batch_spec(mesh, (args.batch, args.seq))})
+        mspec = NamedSharding(mesh, P())
+
+        def train_step(table, opt_state, batch):
+            ids = batch["tokens"].reshape(-1).astype(jnp.int32)
+            rows = table[ids] - target[ids]
+            loss = jnp.mean(jnp.square(rows))
+            table, opt_state = step_fn(table, opt_state, ids, rows)
+            gn = jnp.sqrt(jnp.sum(jnp.square(rows)))
+            return table, opt_state, {"loss": loss, "grad_norm": gn}
+
+        jit_step = jax.jit(train_step,
+                           in_shardings=(table_spec, opt_spec, bspec),
+                           out_shardings=(table_spec, opt_spec, mspec),
+                           donate_argnums=(0, 1))
+        tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                             ckpt_every=args.ckpt_every)
+        trainer = Trainer(jit_step, data, tcfg)
+        state = trainer.restore_or_init(
+            TrainState(step=0, params=table, opt_state=opt_state))
+        state = trainer.fit(state)
+
+    hist = trainer.history
+    first = np.mean([h["loss"] for h in hist[:10]])
+    last = np.mean([h["loss"] for h in hist[-10:]])
+    print(f"[train] workload=sparse_embedding rows={n_rows} dim={dim} "
+          f"dp={bool(args.dp)} feedback={bool(args.error_feedback)} "
+          f"steps={state.step} loss {first:.4f} -> {last:.4f}")
+    return 0 if last < first else 1
 
 
 def main() -> int:
@@ -38,6 +115,20 @@ def main() -> int:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dp", action="store_true",
+                    help="explicit shard_map data parallelism over a "
+                         "'data' axis spanning every local device")
+    ap.add_argument("--workload", default="lm",
+                    choices=["lm", "sparse_embedding"],
+                    help="lm: full model train step; sparse_embedding: "
+                         "the (ids, grad-rows) table regime (sketched "
+                         "all-reduce under --dp)")
+    ap.add_argument("--sparse-rows", type=int, default=65536)
+    ap.add_argument("--sparse-dim", type=int, default=64)
+    ap.add_argument("--sparse-compression", type=float, default=5.0)
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="accumulate the 2nd-moment cross-replica term "
+                         "in a residual sketch (MicroAdam-style)")
     ap.add_argument("--aux-budget", default="",
                     help="optimizer aux-memory budget: bytes | '8.6GB' | "
                          "'0.85x' of dense | 'floor' | 'config'; the solved "
@@ -48,10 +139,19 @@ def main() -> int:
     if os.environ.get("JAX_COORDINATOR"):
         jax.distributed.initialize()
 
+    mesh = (make_host_mesh(data=jax.device_count()) if args.dp
+            else make_host_mesh())
+    if args.dp and args.batch % jax.device_count() != 0:
+        raise ValueError(
+            f"--dp needs the global batch ({args.batch}) divisible by the "
+            f"device count ({jax.device_count()})")
+
+    if args.workload == "sparse_embedding":
+        return run_sparse_embedding(args, mesh)
+
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    mesh = make_host_mesh()
     ckpt_plan = None
     if args.ckpt_dir and store.latest_step(args.ckpt_dir) is not None:
         saved = store.read_manifest(args.ckpt_dir).get("extra", {})
@@ -103,17 +203,37 @@ def main() -> int:
         print("[plan] recovered from checkpoint manifest "
               f"({plan.budget_bytes:,} B budget)", flush=True)
     ts = make_train_step(cfg, optimizer=args.optimizer, lr=args.lr,
-                         plan=plan)
+                         plan=plan, dp_axis="data" if args.dp else None)
 
     with shd.active_mesh(mesh):
+        import jax.numpy as jnp
         params = ts.init_fn(jax.random.PRNGKey(args.seed))
         opt_state = ts.optimizer.init(params)
-        step_fn = jax.jit(ts.step_fn, donate_argnums=(0, 1))
 
         data = ZipfLM(ZipfLMConfig(
             vocab_size=cfg.vocab, seq_len=args.seq,
             global_batch=args.batch, seed=args.seed,
             n_hosts=jax.process_count(), host_id=jax.process_index()))
+
+        # derive the full in/out shardings (params per the rule table,
+        # optimizer state ZeRO-1 / sketch layout, batch over 'data') and
+        # thread them through jit AND checkpoint restore — the same trees
+        # launch/dryrun.py lowers against.
+        sample = data.batch(0)
+        batch_tpl = {k: jax.ShapeDtypeStruct(np.asarray(v).shape,
+                                             jnp.asarray(v).dtype)
+                     for k, v in sample.items()}
+        if cfg.family == "encdec":
+            batch_tpl["frames"] = jax.ShapeDtypeStruct(
+                (args.batch, cfg.enc_seq, cfg.d_model), cfg.dtype)
+        if cfg.family == "vlm":
+            batch_tpl["patches"] = jax.ShapeDtypeStruct(
+                (args.batch, cfg.n_patches, cfg.d_model), cfg.dtype)
+        pshard, oshard, bshard, mshard = ts.shardings(mesh, batch_tpl)
+        step_fn = jax.jit(ts.step_fn,
+                          in_shardings=(pshard, oshard, bshard),
+                          out_shardings=(pshard, oshard, mshard),
+                          donate_argnums=(0, 1))
         tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                              ckpt_every=args.ckpt_every)
 
@@ -128,14 +248,16 @@ def main() -> int:
 
         trainer = Trainer(wrapped_step, data, tcfg, plan=plan)
         state = trainer.restore_or_init(
-            TrainState(step=0, params=params, opt_state=opt_state))
+            TrainState(step=0, params=params, opt_state=opt_state),
+            shardings={"params": pshard, "opt_state": oshard})
         state = trainer.fit(state)
 
     hist = trainer.history
     first = np.mean([h["loss"] for h in hist[:10]])
     last = np.mean([h["loss"] for h in hist[-10:]])
     print(f"[train] arch={cfg.name} optimizer={args.optimizer} "
-          f"steps={state.step} loss {first:.3f} -> {last:.3f} "
+          f"dp={bool(args.dp)} steps={state.step} "
+          f"loss {first:.3f} -> {last:.3f} "
           f"({np.mean([h['time_s'] for h in hist[5:]]):.3f}s/step)")
     return 0
 

@@ -168,7 +168,11 @@ def make_online_adapt_step(n_rows: int, dim: int, *, lr=1e-4,
                            b2: float = 0.999, eps: float = 1e-8,
                            hparams: Optional[SketchHParams] = None,
                            path: str = "serve_adapt",
-                           v_store=None):
+                           v_store=None,
+                           dp_axis: Optional[str] = None,
+                           mesh: Optional[Mesh] = None,
+                           error_feedback: bool = False,
+                           dir_clip: Optional[float] = 10.0):
     """Serve-time sparse adaptation of an embedding table.
 
     Serving workloads that personalize online (session embeddings, bandit
@@ -185,22 +189,39 @@ def make_online_adapt_step(n_rows: int, dim: int, *, lr=1e-4,
     ``hparams`` sizing — serve-time adaptation speaks the same store
     vocabulary as training (DESIGN.md §12).
 
+    ``dp_axis``: replicated serving fleets adapt the SAME table from
+    per-replica feedback shards — ``adapt_fn`` becomes a ``shard_map``
+    over that axis of ``mesh`` (or the active mesh at trace time) whose
+    collective all-reduces the (depth, width, dim) 2nd-moment gradient
+    sketch plus the int32 ids instead of the (k, d) rows, keeping every
+    replica's table and sketch state identical (DESIGN.md §13).
+
     Returns ``(init_state_fn, adapt_fn)``:
 
         opt_state          = init_state_fn()
         table', opt_state' = adapt_fn(table, opt_state, ids, grad_rows)
     """
     hp = hparams if hparams is not None else SketchHParams()
-    opt = opt_lib.sparse_rows_adam(
-        lr, b2=b2, eps=eps, shape=(n_rows, dim), path=path, hparams=hp,
-        track_first_moment=False, v_store=v_store)
+    if dp_axis is None:
+        opt = opt_lib.sparse_rows_adam(
+            lr, b2=b2, eps=eps, shape=(n_rows, dim), path=path, hparams=hp,
+            track_first_moment=False, v_store=v_store)
+    else:
+        opt = opt_lib.sparse_rows_adam_dp(
+            lr, b2=b2, eps=eps, shape=(n_rows, dim), path=path,
+            axis_name=dp_axis, hparams=hp, track_first_moment=False,
+            error_feedback=error_feedback, dir_clip=dir_clip,
+            v_store=v_store)
 
     def init_state_fn():
         return opt.init()
 
-    def adapt_fn(table, opt_state, ids, grad_rows):
+    def local_adapt(table, opt_state, ids, grad_rows):
         updates, opt_state = opt.update(
             {"ids": ids, "rows": grad_rows}, opt_state)
         return opt_lib.apply_sparse_updates(table, updates), opt_state
 
-    return init_state_fn, adapt_fn
+    if dp_axis is None:
+        return init_state_fn, local_adapt
+    return init_state_fn, shd.dp_sparse_wrap(local_adapt, mesh=mesh,
+                                             dp_axis=dp_axis)

@@ -107,6 +107,11 @@ class TrainStep:
     step_fn: Callable
     optimizer: Transform
     batch_template: Dict[str, Any]
+    # the run's StoreTree (set when a memory plan executes) — makes the
+    # optimizer-state sharding classification exact (DESIGN.md §13)
+    store_tree: Any = None
+    # manual data-parallel mode: step_fn is shard_map'd over this axis
+    dp_axis: Optional[str] = None
 
     # -- shape trees (no allocation) ---------------------------------------
     def params_shape(self):
@@ -124,7 +129,8 @@ class TrainStep:
         pspec = shd.param_specs(ps, mesh, fsdp=cfg.fsdp,
                                 expert_sharding=cfg.expert_sharding)
         ospec = shd.opt_specs_for_state(os_, ps, mesh, fsdp=cfg.fsdp,
-                                        expert_sharding=cfg.expert_sharding)
+                                        expert_sharding=cfg.expert_sharding,
+                                        store_tree=self.store_tree)
         bspec = jax.tree_util.tree_map(
             lambda s: shd.batch_spec(mesh, s.shape), batch_specs)
         mspec = P()  # metrics replicated
@@ -138,7 +144,13 @@ def make_train_step(cfg: ArchConfig, *, optimizer: str = "cs_adam",
                     grad_clip: Optional[float] = 1.0,
                     cleaning: Optional[CleaningSchedule] = None,
                     kernel_backend: Optional[str] = None,
-                    plan=None) -> TrainStep:
+                    plan=None, dp_axis: Optional[str] = None) -> TrainStep:
+    """``dp_axis``: manual data-parallel mode — the step body runs inside
+    ``shard_map`` over that mesh axis with the batch sharded on dim 0,
+    params/optimizer state replicated in the body, and the gradient
+    moved by explicit ``pmean`` collectives.  The step must then be
+    TRACED inside ``shd.active_mesh(mesh)`` (launch/train.py --dp does);
+    per-replica loss is pmean'd so metrics match the global-batch step."""
     mod = family_module(cfg)
     opt = build_optimizer(cfg, optimizer, lr=lr, cleaning=cleaning,
                           kernel_backend=kernel_backend, plan=plan)
@@ -149,8 +161,12 @@ def make_train_step(cfg: ArchConfig, *, optimizer: str = "cs_adam",
         return mod.train_loss(cfg, params, batch, remat=remat,
                               sampled_softmax=sampled_softmax)
 
-    def step_fn(params, opt_state, batch):
+    def step_body(params, opt_state, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if dp_axis is not None:
+            loss = jax.lax.pmean(loss, dp_axis)
+            grads = jax.tree_util.tree_map(
+                lambda g: jax.lax.pmean(g, dp_axis), grads)
         grads = clip(grads)
         updates, opt_state = opt.update(grads, opt_state, params)
         params = opt_lib.apply_updates(params, updates)
@@ -159,11 +175,35 @@ def make_train_step(cfg: ArchConfig, *, optimizer: str = "cs_adam",
         metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gn}
         return params, opt_state, metrics
 
+    if dp_axis is None:
+        step_fn = step_body
+    else:
+        def step_fn(params, opt_state, batch):
+            mesh = shd.current_mesh()
+            if mesh is None:
+                raise ValueError(
+                    "dp_axis train steps must be traced inside "
+                    "shd.active_mesh(mesh) — the shard_map needs the mesh")
+
+            def inner(params, opt_state, batch):
+                # mesh axes are manual here: the model's activation
+                # sharding constraints must not fire
+                with shd.manual_collectives():
+                    return step_body(params, opt_state, batch)
+
+            return shd.shard_map_unchecked(
+                inner, mesh=mesh,
+                in_specs=(P(), P(), P(dp_axis)),
+                out_specs=(P(), P(), P()))(params, opt_state, batch)
+
     def init_fn(rng):
         return mod.init(rng, cfg)
 
     return TrainStep(cfg=cfg, init_fn=init_fn, step_fn=step_fn,
-                     optimizer=opt, batch_template={})
+                     optimizer=opt, batch_template={},
+                     store_tree=plan.store_tree() if plan is not None
+                     else None,
+                     dp_axis=dp_axis)
 
 
 def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
@@ -173,7 +213,11 @@ def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
                                track_first_moment: bool = True,
                                cleaning: Optional[CleaningSchedule] = None,
                                path: str = "sparse_embedding",
-                               stores=None):
+                               stores=None,
+                               dp_axis: Optional[str] = None,
+                               mesh: Optional[Mesh] = None,
+                               error_feedback: bool = False,
+                               dir_clip: Optional[float] = 10.0):
     """Train step for the (ids, grad-rows) regime — LM1B-style embedding /
     softmax tables and extreme classification, where per-step work is
     O(touched rows), not O(n).
@@ -193,6 +237,21 @@ def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
     Pallas pipeline on TPU, jnp oracle on CPU — see ``repro.kernels``).
     Duplicate ids in a batch are handled by the backend (dedup +
     segment-sum on the tiled path).
+
+    ``dp_axis``: data-parallel mode (DESIGN.md §13) — ``step_fn`` becomes
+    a ``shard_map`` over that mesh axis (``mesh``, or the active mesh at
+    trace time): each replica gets a shard of the GLOBAL (ids, grad_rows)
+    batch (dim 0 sharded over ``dp_axis``), sketches its local gradient,
+    and the collectives move the (depth, width, dim) sketches plus the
+    int32 ids — never the (k, d) rows.  The 1st-moment sketch state
+    evolves exactly as the single-device step on the concatenated batch
+    (count-sketch linearity); the 2nd moment misses the cross-replica
+    square terms unless ``error_feedback=True`` adds the MicroAdam-style
+    residual sketch, and ``dir_clip`` trust-clamps the emitted direction
+    against sketch-estimator noise (``sketched_reduce.dp_adam_rows``;
+    None disables).  Sketch state is replicated in the shard_map body;
+    at the jit level it stores sharded per ``sharding.opt_specs_for_state``
+    (width over 'data', dim over 'model').
     """
     hp = hparams if hparams is not None else SketchHParams()
     m_store = v_store = None
@@ -213,18 +272,32 @@ def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
         # the tree's moment layout is authoritative: a β₁=0 plan
         # (m=None) must not be overridden by this function's default
         track_first_moment = m_store is not None
-    opt = opt_lib.sparse_rows_adam(
-        lr, b1=b1, b2=b2, eps=eps, shape=(n_rows, dim), path=path,
-        hparams=hp, track_first_moment=track_first_moment,
-        cleaning=cleaning, m_store=m_store, v_store=v_store)
+    if dp_axis is None:
+        opt = opt_lib.sparse_rows_adam(
+            lr, b1=b1, b2=b2, eps=eps, shape=(n_rows, dim), path=path,
+            hparams=hp, track_first_moment=track_first_moment,
+            cleaning=cleaning, m_store=m_store, v_store=v_store)
+    else:
+        opt = opt_lib.sparse_rows_adam_dp(
+            lr, b1=b1, b2=b2, eps=eps, shape=(n_rows, dim), path=path,
+            axis_name=dp_axis, hparams=hp,
+            track_first_moment=track_first_moment, cleaning=cleaning,
+            error_feedback=error_feedback, dir_clip=dir_clip,
+            m_store=m_store, v_store=v_store)
 
     def init_fn(rng):
         scale = 1.0 / jnp.sqrt(jnp.asarray(dim, jnp.float32))
         return jax.random.normal(rng, (n_rows, dim), jnp.float32) * scale
 
-    def step_fn(table, opt_state, ids, grad_rows):
+    def local_step(table, opt_state, ids, grad_rows):
         updates, opt_state = opt.update(
             {"ids": ids, "rows": grad_rows}, opt_state)
         return opt_lib.apply_sparse_updates(table, updates), opt_state
+
+    if dp_axis is None:
+        step_fn = local_step
+    else:
+        step_fn = shd.dp_sparse_wrap(local_step, mesh=mesh,
+                                     dp_axis=dp_axis)
 
     return init_fn, step_fn, opt

@@ -47,17 +47,30 @@ class Trainer:
     restore — including an elastic restore that Hokusai-folds the
     sketches onto a halved budget — reconstructs the exact per-leaf
     stores (``plan.fold()`` mirrors ``store.fold_sketches``; the
-    serialized manifest speaks StoreTree, not PolicyFns/overrides)."""
+    serialized manifest speaks StoreTree, not PolicyFns/overrides).
+
+    ``store_tree``: record an executable ``StoreTree`` in the manifests
+    of a run with no memory plan (e.g. a DP sparse-table run built from
+    bare stores) — it is what gives elastic restore the EXACT
+    ``is_sketch_from_store_tree`` fold predicate instead of the name
+    heuristic (``repro.distributed.elastic.elastic_restore``)."""
 
     def __init__(self, step_fn: Callable, data, tcfg: TrainerConfig,
                  monitor: Optional[StragglerMonitor] = None,
-                 fail_at: Optional[int] = None, plan=None):
+                 fail_at: Optional[int] = None, plan=None,
+                 store_tree=None):
         self.step_fn = step_fn
         self.data = data
         self.tcfg = tcfg
         self.monitor = monitor or StragglerMonitor()
         self.history: List[Dict[str, float]] = []
         self.plan = plan
+        self.store_tree = store_tree
+        if plan is not None and store_tree is not None \
+                and plan.store_tree() != store_tree:
+            raise ValueError("Trainer got both a plan and a store_tree "
+                             "that disagree — the manifest must record "
+                             "ONE executable vocabulary")
         self._fail_at = fail_at       # test hook: simulate a crash
         self._pending_ckpt = None
 
@@ -73,6 +86,8 @@ class Trainer:
             if self.plan is not None:
                 extra = {"plan": self.plan.to_json(),
                          "store_tree": self.plan.store_tree().to_json()}
+            elif self.store_tree is not None:
+                extra = {"store_tree": self.store_tree.to_json()}
             self._pending_ckpt = store.save(
                 t.ckpt_dir, state.step, tree,
                 async_=t.ckpt_async, keep=t.keep, extra=extra)
