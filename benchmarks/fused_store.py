@@ -1,0 +1,162 @@
+"""(ours) Fused vs composed store execution — steps/sec of the optimizer
+hot path (DESIGN.md §14).
+
+Protocol: one sketched (n, d) table under ``scale_by_adam`` (CS-MV: both
+moments sketched, compression 5×), dense full-table gradients — the
+embedding/softmax regime where the paper's 38% training-throughput claim
+lives.  Each row times the jit'd optimizer update alone (state donated,
+loss/backward excluded) so the fused-vs-composed axis is not washed out
+by model compute:
+
+  composed   backend=None — the chunked-scan fallback (3 codec calls +
+             interleaved EMA math per chunk; bit-identical legacy path)
+  xla        fused one-pass update_read per moment (hash once, host-
+             cached dense addressing, no scan)
+  tiled      the Pallas kernel (TPU only; 'interpret' is a correctness
+             backend, far too slow to time honestly on CPU)
+
+Shapes sweep the cache regimes: the fused one-shot wins while a moment's
+working set fits LLC and loses to the cache-blocked scan beyond it (on
+CPU); the TPU answer at scale is the tiled kernel (VMEM tiles +
+overlapped DMA).  Results: experiments/bench/fused_store.json.
+
+    PYTHONPATH=src python benchmarks/fused_store.py --quick
+    PYTHONPATH=src python -m benchmarks.fused_store --pin   # committed JSON
+
+``--pin`` (must be the launch flag, before jax initializes) pins the
+process to one core and disables the XLA:CPU thread pool: wall time then
+measures the WORK ratio, immune to co-tenant scheduler noise — the
+protocol behind the committed experiments/bench/fused_store.json (this
+container's free-running numbers swing ±2x between minutes).  Unpinned,
+the fused path additionally gains parallelism headroom (the composed
+scan serializes its chunks), but that is not stably measurable here.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if "--pin" in sys.argv:                      # before jax initializes
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_cpu_multi_thread_eigen=false"
+                               ).strip()
+    try:
+        os.sched_setaffinity(0, {0})
+    except (AttributeError, OSError):        # non-Linux hosts
+        pass
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from benchmarks.common import save_result
+except ImportError:  # run as a script: python benchmarks/fused_store.py
+    import pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.common import save_result
+from repro.core import optimizers as O
+from repro.core.stores import CountMinStore, CountSketchStore, StoreTree
+
+# (n, d): vocab-16k/d-64 is the LM1B-scale embedding table; 32k×32 the
+# hash-heavier thin-table regime; 64k×64 probes where the one-shot's
+# temps outgrow the LLC (the fused win inverts there on CPU — the TPU
+# answer at that scale is the tiled Pallas kernel).
+SHAPES = ((16384, 64), (32768, 32), (65536, 64))
+BACKENDS = (None, "xla") + (("tiled",)
+                            if jax.default_backend() == "tpu" else ())
+
+
+def _tree(backend):
+    return StoreTree.select(
+        m=CountSketchStore(compression=5.0, backend=backend),
+        v=CountMinStore(compression=5.0, backend=backend),
+        where=lambda p, s: True)
+
+
+def _prepare(backend, n: int, d: int):
+    opt = O.adam_from_stores(1e-3, _tree(backend))
+    params = {"table": jax.random.normal(jax.random.PRNGKey(0), (n, d))}
+    g = {"table": jax.random.normal(jax.random.PRNGKey(1), (n, d)) * 0.1}
+    state = opt.init(params)
+    step = jax.jit(lambda g, s: opt.update(g, s), donate_argnums=(1,))
+    u, state = step(g, state)
+    jax.block_until_ready(u)                     # compile + warm
+    return [step, g, state]
+
+
+def bench_shape(n: int, d: int, backends, steps: int, windows: int = 5):
+    """{backend: (steps/sec wall, cpu ms/step)} — INTERLEAVED A/B
+    windows with MIN-over-windows per backend: co-tenant interference
+    only ever ADDS time, and interleaving exposes every backend to the
+    same noise regime instead of penalizing whichever ran during a bad
+    stretch (the protocol calibrated in EXPERIMENTS.md §FusedStore)."""
+    runs = {be: _prepare(be, n, d) for be in backends}
+    wall = {be: float("inf") for be in backends}
+    cpu = {be: float("inf") for be in backends}
+    for _ in range(windows):
+        for be in backends:
+            step, g, state = runs[be]
+            c0, t0 = time.process_time(), time.perf_counter()
+            for _ in range(steps):
+                u, state = step(g, state)
+            jax.block_until_ready(u)
+            wall[be] = min(wall[be], (time.perf_counter() - t0) / steps)
+            cpu[be] = min(cpu[be], (time.process_time() - c0) / steps)
+            runs[be][2] = state
+    return {be: (1.0 / wall[be], cpu[be] * 1000.0) for be in backends}
+
+
+def run(quick: bool = False, shapes=SHAPES, backends=BACKENDS):
+    steps = 5 if quick else 10
+    out = {}
+    for n, d in shapes:
+        res = bench_shape(n, d, backends, steps,
+                          windows=3 if quick else 5)
+        row = {(be or "composed"): round(res[be][0], 3) for be in backends}
+        cpu_ms = {(be or "composed"): round(res[be][1], 2)
+                  for be in backends}
+        base = row["composed"]
+        fused = {k: v for k, v in row.items() if k != "composed"}
+        best = max(fused, key=fused.get)
+        out[f"{n}x{d}"] = {
+            "n": n, "dim": d, "steps_per_s": row, "cpu_ms_per_step": cpu_ms,
+            "best_fused_backend": best,
+            "speedup_best_fused": round(fused[best] / base, 3),
+            "cpu_speedup_best_fused": round(cpu_ms["composed"]
+                                            / cpu_ms[best], 3),
+        }
+    best = max(out.values(), key=lambda r: r["speedup_best_fused"])
+    summary = {
+        "protocol": "scale_by_adam on one sketched table, optimizer "
+                    "update only, state donated, compression 5x; "
+                    "interleaved A/B windows, min-over-windows timing "
+                    "(wall + process-CPU)",
+        "pinned": "--pin" in sys.argv,
+        "device": jax.default_backend(),
+        "steps_timed": steps,
+        "rows": out,
+        "max_speedup": best["speedup_best_fused"],
+        "max_speedup_at": f"{best['n']}x{best['dim']}",
+    }
+    save_result("fused_store", summary)
+    return {k: (v["steps_per_s"], f"{v['speedup_best_fused']}x")
+            for k, v in out.items()}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--pin", action="store_true",
+                    help="pin to one core + single-threaded XLA (stable "
+                         "work-ratio protocol; handled before jax init)")
+    ap.add_argument("--shapes", default="",
+                    help="comma-separated NxD overrides, e.g. 16384x64")
+    a = ap.parse_args()
+    shapes = SHAPES
+    if a.shapes:
+        shapes = tuple(tuple(int(x) for x in s.split("x"))
+                       for s in a.shapes.split(","))
+    print(run(quick=a.quick, shapes=shapes))

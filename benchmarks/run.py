@@ -22,6 +22,7 @@ BENCHES = [
     ("extreme", "Tab 8: MACH extreme classification"),
     ("ablations", "(ours) compression sweep / strict semantics / fold"),
     ("kernels", "(ours) sketch kernel micro + traffic model"),
+    ("fused_store", "(ours) fused vs composed update_read steps/sec"),
     ("roofline", "(ours) dry-run roofline tables"),
 ]
 

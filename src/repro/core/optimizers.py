@@ -83,10 +83,16 @@ class SketchHParams:
     median-noise / sqrt(min-estimate ≈ 0), which diverges (observed:
     tests/test_optimizers.py::TestConvergence).
 
-    ``backend``: which kernel backend the sparse-rows fast path runs on —
-    a name registered in ``repro.kernels`` ('ref' | 'xla' | 'stream' |
-    'tiled' | 'interpret') or None/'auto' for the per-host best (tiled on
-    TPU, xla elsewhere).  See DESIGN.md §10.
+    ``backend``: which kernel backend sketch ops run on — a name
+    registered in ``repro.kernels.registry`` ('ref' | 'xla' | 'stream' |
+    'tiled' | 'interpret') or 'auto' for the per-host best (tiled on
+    TPU, xla elsewhere).  Routes BOTH the sparse-rows fast path
+    (DESIGN.md §10) and the dense-path fused ``update_read`` of every
+    sketch-backed store these hparams derive (the stores are created
+    with ``backend=`` — DESIGN.md §14).  None keeps the sparse path on
+    'auto' and the dense path on the composed fallback (bit-identical
+    legacy numerics); 'stream' exists only for the sparse pair op, so
+    the dense path treats it as None.
 
     ``overrides``: per-path (depth, width) assignments.  Legacy hook; new
     code pins per-leaf specs through a ``StoreTree`` instead (the
@@ -157,6 +163,19 @@ def _with_lr(rule: Transform, lr: Schedule) -> Transform:
     return Transform(init, update)
 
 
+def _update_read_backend(backend: Optional[str]) -> Optional[str]:
+    """``hparams.backend`` filtered for the dense-path fused op: names
+    registered for ('sketch', 'update_read') (or 'auto') pass through;
+    sparse-rows-only backends ('stream') map to None — the composed
+    fallback — so one knob can drive both hot paths without the dense
+    one crashing on a pair-op-only name."""
+    if backend is None or backend == "auto":
+        return backend
+    from repro.kernels import registry  # deferred: kernels import jax deps
+    return backend if backend in registry.backends("sketch", "update_read") \
+        else None
+
+
 def stores_from_policy(policy: PolicyFn = nothing_policy, *,
                        rank1_policy: PolicyFn = nothing_policy,
                        hparams: SketchHParams = SketchHParams(),
@@ -171,8 +190,12 @@ def stores_from_policy(policy: PolicyFn = nothing_policy, *,
 
     ``rule`` picks the slot layout: 'adam' fills (m, v); 'momentum' a
     signed sketch in the m slot only; 'adagrad' a count-min in the v
-    slot only."""
+    slot only.  ``hparams.backend`` rides onto every sketch-backed store
+    (its fused ``update_read`` backend — DESIGN.md §14); names that only
+    exist for the sparse-rows pair op (e.g. 'stream') leave the dense
+    path on the composed fallback instead of crashing it."""
     track = track_first_moment
+    backend = _update_read_backend(hparams.backend)
 
     def _dense_m():
         return DenseStore() if track else None
@@ -181,7 +204,8 @@ def stores_from_policy(policy: PolicyFn = nothing_policy, *,
         def resolver(path, shape):
             if policy(path, shape):
                 return (CountSketchStore(
-                    spec=hparams.spec(path, shape, signed=True)), None)
+                    spec=hparams.spec(path, shape, signed=True),
+                    backend=backend), None)
             return None
         return StoreTree(default_m=DenseStore(), default_v=None,
                          resolver=resolver)
@@ -191,7 +215,7 @@ def stores_from_policy(policy: PolicyFn = nothing_policy, *,
             if policy(path, shape):
                 return (None, CountMinStore(
                     spec=hparams.spec(path, shape, signed=False),
-                    cleaning=cleaning))
+                    cleaning=cleaning, backend=backend))
             return None
         return StoreTree(default_m=None, default_v=DenseStore(),
                          resolver=resolver)
@@ -205,12 +229,13 @@ def stores_from_policy(policy: PolicyFn = nothing_policy, *,
         if policy(path, shape):
             if track and sketch_first_moment:
                 m = CountSketchStore(
-                    spec=hparams.spec(path, shape, signed=True))
+                    spec=hparams.spec(path, shape, signed=True),
+                    backend=backend)
             else:
                 m = _dense_m()
             return (m, CountMinStore(
                 spec=hparams.spec(path, shape, signed=False),
-                cleaning=cleaning))
+                cleaning=cleaning, backend=backend))
         return None
 
     return StoreTree(default_m=_dense_m(), default_v=DenseStore(),
@@ -423,9 +448,12 @@ def sparse_rows_adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
     m_store, v_store = _sparse_rows_stores(
         shape, path, hparams, track_first_moment=track_first_moment,
         cleaning=cleaning, m_store=m_store, v_store=v_store)
+    # a backend pinned on the store itself (e.g. by a planner StoreTree /
+    # --store-backend) wins over the hparams knob
+    backend = getattr(v_store, "backend", None) or hparams.backend
     rule = T.scale_by_adam_rows(
         b1=b1, b2=b2, eps=eps, m_store=m_store, v_store=v_store,
-        backend=hparams.backend if hparams.backend is not None else "auto")
+        backend=backend if backend is not None else "auto")
     return _with_lr(rule, lr)
 
 

@@ -130,16 +130,24 @@ def init(spec: SketchSpec) -> jnp.ndarray:
     return jnp.zeros(spec.shape, dtype=spec.dtype)
 
 
+def median_rows(rows) -> jnp.ndarray:
+    """Median over a LIST of per-depth rows.  depth==3 avoids a sort
+    (a+b+c−max−min, pairwise extrema) — the single source of the
+    estimator identity shared by the reference query, the fused XLA
+    update_read, and the Pallas kernels (bit-identity across them
+    depends on these exact forms)."""
+    if len(rows) == 1:
+        return rows[0]
+    if len(rows) == 3:
+        hi = jnp.maximum(jnp.maximum(rows[0], rows[1]), rows[2])
+        lo = jnp.minimum(jnp.minimum(rows[0], rows[1]), rows[2])
+        return rows[0] + rows[1] + rows[2] - hi - lo
+    return jnp.median(jnp.stack(rows), axis=0)
+
+
 def _median_depth(vals: jnp.ndarray) -> jnp.ndarray:
-    """Median over axis 0.  depth==3 avoids a sort: a+b+c-max-min."""
-    v = vals.shape[0]
-    if v == 1:
-        return vals[0]
-    if v == 3:
-        hi = jnp.maximum(jnp.maximum(vals[0], vals[1]), vals[2])
-        lo = jnp.minimum(jnp.minimum(vals[0], vals[1]), vals[2])
-        return vals[0] + vals[1] + vals[2] - hi - lo
-    return jnp.median(vals, axis=0)
+    """Median over axis 0 of a stacked (depth, ...) array."""
+    return median_rows([vals[i] for i in range(vals.shape[0])])
 
 
 def query(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
@@ -188,6 +196,30 @@ def query_after_update(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
 def decay(S: jnp.ndarray, alpha) -> jnp.ndarray:
     """Cleaning heuristic (paper §4): multiply the sketch by ``alpha``."""
     return S * jnp.asarray(alpha, dtype=S.dtype)
+
+
+def ema_delta(est_old: jnp.ndarray, x: jnp.ndarray, beta: float,
+              scale: float) -> jnp.ndarray:
+    """The sketched linear-EMA increment: the Δ that moves a row's content
+    from ``est_old`` to ``β·est_old + scale·x``.
+
+    The THREE algebraic forms below are value-equal but round differently;
+    which one runs is pinned so the fused kernels and the composed
+    fallback stay bit-identical to the historical transforms:
+
+      * Adam moments (``scale == 1-β``):   ``scale·(x − est_old)``
+      * Adagrad (``β == 1``):              ``scale·x``        (no est term)
+      * momentum (``scale == 1``, β=γ):    ``(β−1)·est_old + x``
+
+    ``beta``/``scale`` are static Python floats — the branch resolves at
+    trace time.
+    """
+    sx = x if scale == 1.0 else scale * x
+    if scale == 1.0 - beta:
+        return scale * (x - est_old)
+    if beta == 1.0:
+        return sx
+    return (beta - 1.0) * est_old + sx
 
 
 def fold(spec: SketchSpec, S: jnp.ndarray) -> Tuple[SketchSpec, jnp.ndarray]:

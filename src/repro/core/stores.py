@@ -10,8 +10,18 @@ is the storage half: a small codec protocol
                      rows=None, scale=1.0) -> state     (linear add)
     store.decay(state, beta)        -> state            (multiply)
     store.read(state, rows=None)    -> values           (estimate rows)
+    store.update_read(state, delta, beta,
+                      rows=None, ...) -> (state, est)   (fused EMA step)
     store.bytes(state=None)         -> int              (exact footprint)
     store.clean(state, step)        -> state            (cleaning hook)
+
+``update_read`` is the hot-path op (DESIGN.md §14): one fused pass that
+moves row content to ``β·content + scale·delta`` and returns the post-
+step estimate.  Every store has a default composed from the primitives
+above (bit-identical to calling them separately); sketch-backed stores
+additionally carry a ``backend`` knob routing the op through the kernel
+registry (``repro.kernels.registry``: 'ref' | 'xla' | 'tiled' |
+'interpret', None = composed fallback) for single-kernel execution.
 
 with four implementations:
 
@@ -103,6 +113,29 @@ class AuxStore:
     def read(self, state, rows=None):
         raise NotImplementedError
 
+    def update_read(self, state, delta, beta: float = 1.0, *,
+                    scale: Optional[float] = None, rows=None, mask=None,
+                    read_state=None, strict: bool = False):
+        """Fused EMA step: move row content to ``β·content + scale·delta``
+        (``scale`` defaults to ``1−β``) and return ``(state', estimate)``
+        in one pass — the hot-path op the transforms are built on
+        (DESIGN.md §14).
+
+        This base default composes the primitives — decay, accumulate,
+        read — and is exact for closed-form stores (dense, rank-1);
+        ``_SketchStoreBase`` overrides it with the paper's linear-
+        estimate form and optional fused kernel backends.  ``mask``
+        (rows×1, 0/1) gates the increment (lazy rows); ``read_state``/
+        ``strict`` only apply to sketch-backed stores."""
+        if scale is None:
+            scale = 1.0 - beta
+        if mask is not None:
+            delta = delta * mask
+        if beta != 1.0:
+            state = self.decay(state, beta)
+        state = self.accumulate(state, delta, rows, scale=scale)
+        return state, self.read(state, rows)
+
     def bytes(self, state=None) -> int:
         raise NotImplementedError
 
@@ -165,6 +198,12 @@ class _SketchStoreBase(AuxStore):
     identity: bool = False
     spec: Optional[SketchSpec] = None         # set by bind() (or explicit)
     shape: Optional[Tuple[int, int]] = None   # set by bind()
+    # which kernel backend executes this store's fused ``update_read``
+    # ('ref' | 'xla' | 'tiled' | 'interpret' | 'auto'); None = the
+    # composed fallback (bit-identical legacy numerics, chunked by the
+    # transform).  Serialized with the store, so plans / manifests /
+    # elastic restores round-trip it (DESIGN.md §14).
+    backend: Optional[str] = None
 
     _signed = True
 
@@ -215,6 +254,40 @@ class _SketchStoreBase(AuxStore):
 
     def read(self, state, rows=None):
         return cs.query(self.spec, state, self._rows(rows))
+
+    def update_read(self, state, delta, beta: float = 1.0, *,
+                    scale: Optional[float] = None, rows=None, mask=None,
+                    read_state=None, strict: bool = False):
+        """Fused EMA step in the paper's linear-estimate form:
+
+            est_old = query(read_state or state, rows)
+            d       = ema_delta(est_old, delta, β, scale) · mask
+            state'  = update(state, rows, d)
+            est     = est_old + d          (strict: re-query(state'))
+
+        When ``backend`` is set (and neither ``read_state`` nor
+        ``strict`` forces the composed form), the whole step runs as one
+        fused kernel through the registry — ``repro.kernels.update_read``.
+        ``read_state`` lets the transforms' chunked scan keep canonical
+        batch semantics (estimates off the pre-step sketch) while
+        accumulating into the carry."""
+        if scale is None:
+            scale = 1.0 - beta
+        if self.backend is not None and read_state is None and not strict:
+            from repro import kernels  # deferred: kernels import jax deps
+            return kernels.update_read(self.spec, state, self._rows(rows),
+                                       delta, beta=beta, scale=scale,
+                                       mask=mask, backend=self.backend)
+        ids = self._rows(rows)
+        src = state if read_state is None else read_state
+        est_old = cs.query(self.spec, src, ids)
+        d = cs.ema_delta(est_old, delta, beta, scale)
+        if mask is not None:
+            d = d * mask
+        state = cs.update(self.spec, state, ids, d)
+        if strict:
+            return state, cs.query(self.spec, state, ids)
+        return state, est_old + d
 
     def bytes(self, state=None) -> int:
         return self.spec.nbytes()
@@ -353,6 +426,31 @@ class StoreTree:
         return cls(default_m=default_m, default_v=default_v,
                    resolver=resolver)
 
+    def with_backend(self, backend: Optional[str]) -> "StoreTree":
+        """The same tree with every sketch-backed store (rules, defaults,
+        resolver output) pinned to kernel ``backend`` — how
+        ``--store-backend`` / ``Plan.with_backend`` select fused
+        execution without touching the state layout (specs, seeds and
+        widths are untouched, so states remain interchangeable)."""
+        def conv(s):
+            if isinstance(s, _SketchStoreBase):
+                return dataclasses.replace(s, backend=backend)
+            return s
+
+        rules = tuple((p, conv(m), conv(v)) for p, m, v in self.rules)
+        out = dataclasses.replace(self, rules=rules,
+                                  default_m=conv(self.default_m),
+                                  default_v=conv(self.default_v))
+        if self.resolver is None:
+            return out
+        base = self.resolver
+
+        def resolver(path, shape):
+            pair = base(path, shape)
+            return None if pair is None else (conv(pair[0]), conv(pair[1]))
+
+        return dataclasses.replace(out, resolver=resolver)
+
     def without_first_moment(self) -> "StoreTree":
         """The β₁=0 projection: every m slot (defaults, rules, resolver
         output) forced to None — ``scale_by_rmsprop``'s layout."""
@@ -468,6 +566,8 @@ def store_to_json(store: Optional[AuxStore]) -> Optional[Dict[str, Any]]:
                        identity=store.identity)
         if store.shape is not None:
             out["shape"] = list(store.shape)
+        if store.backend is not None:
+            out["backend"] = store.backend
         if isinstance(store, CountMinStore) and store.cleaning is not None:
             out["cleaning"] = {"alpha": store.cleaning.alpha,
                                "every": store.cleaning.every}
@@ -488,7 +588,7 @@ def store_from_json(d: Optional[Dict[str, Any]]) -> Optional[AuxStore]:
         return DenseStore(dtype=d.get("dtype"), shape=shape)
     if kind in ("sketch", "countmin"):
         cls = CountSketchStore if kind == "sketch" else CountMinStore
-        kw: Dict[str, Any] = {"shape": shape}
+        kw: Dict[str, Any] = {"shape": shape, "backend": d.get("backend")}
         if "spec" in d:
             kw["spec"] = spec_from_json(d["spec"])
         else:

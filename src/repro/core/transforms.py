@@ -19,6 +19,13 @@ monoliths computed ``(-η·x)/denom``, the chain computes ``-η·(x/denom)``
 — a ≤1-ulp difference on the emitted update (documented in DESIGN.md
 §12; the legacy-parity reference in tests/legacy_reference.py pins the
 chain association).
+
+Execution: each rule consumes its stores through the fused
+``AuxStore.update_read`` op (DESIGN.md §14) — one call per moment.
+Stores with ``backend=None`` run the composed fallback under the
+``dense_chunk`` scan (bit-identical legacy numerics); stores pinned to a
+registry backend ('xla' | 'tiled' | 'interpret' | 'ref') take the whole
+table through one fused kernel per moment instead.
 """
 from __future__ import annotations
 
@@ -186,26 +193,11 @@ def _sketched_rows_scan(g, carry0, step_chunk, chunk: int, extra=None):
     return carry, u.reshape(n, d)
 
 
-def _linear_step(store: AuxStore, state, delta, strict: bool):
-    """One linear-store step over all rows: accumulate ``delta`` and
-    return (state', new_estimate).  Non-strict uses the canonical batch
-    convention ``est_new = est_old + delta`` (one less sketch pass, see
-    sketch.py); strict (paper 3-pass) re-reads after the write."""
-    if store.kind == "dense":
-        new = state + delta
-        return new, new
-    if strict:
-        state = store.accumulate(state, delta)
-        return state, store.read(state)
-    est_old = store.read(state)
-    state = store.accumulate(state, delta)
-    return state, est_old + delta
-
-
-def _dense_ema(store: AuxStore, state, beta: float, delta):
-    """β·state + delta via the codec: bit-identical to the monoliths'
-    ``beta * state + delta`` (decay then accumulate, one rounding each)."""
-    return store.accumulate(store.decay(state, beta), delta)
+def _fused(store: Optional[AuxStore]) -> bool:
+    """True when the store's ``update_read`` runs as one fused kernel
+    (a registry backend is pinned) — the transform then hands it the
+    whole table in one call instead of chunk-scanning (DESIGN.md §14)."""
+    return store is not None and getattr(store, "backend", None) is not None
 
 
 # ---------------------------------------------------------------------------
@@ -246,21 +238,27 @@ def scale_by_momentum(gamma: float = 0.9, *,
         def leaf(path, g, M):
             ms = _m(path, g)
             if ms.kind == "dense":
-                m_new = _dense_ema(ms, M, gamma, g)
+                m_new, _ = ms.update_read(M, g, gamma, scale=1.0)
                 return m_new, m_new
+            if _fused(ms) and not strict_paper:
+                # one fused kernel over the whole table (DESIGN.md §14)
+                act = _row_active(g) if lazy else 1.0
+                M_out, m_est = ms.update_read(M, g, gamma, scale=1.0,
+                                              mask=act if lazy else None)
+                return M_out, act * m_est
             if dense_chunk and not strict_paper:
                 def chunk_step(carry, ids, gc):
                     act = _row_active(gc) if lazy else 1.0
-                    delta = ((gamma - 1.0) * ms.read(M, ids) + gc) * act
-                    m_old = ms.read(M, ids)
-                    carry = ms.accumulate(carry, delta, ids)
-                    return carry, act * (m_old + delta)
+                    carry, m_est = ms.update_read(
+                        carry, gc, gamma, scale=1.0, rows=ids,
+                        mask=act if lazy else None, read_state=M)
+                    return carry, act * m_est
                 return _sketched_rows_scan(g, M, chunk_step, dense_chunk)
             act = _row_active(g) if lazy else 1.0
-            m_old = ms.read(M)
-            delta = ((gamma - 1.0) * m_old + g) * act
-            M_out, m_new = _linear_step(ms, M, delta, strict_paper)
-            return M_out, act * m_new
+            M_out, m_est = ms.update_read(M, g, gamma, scale=1.0,
+                                          mask=act if lazy else None,
+                                          strict=strict_paper)
+            return M_out, act * m_est
 
         pairs = tree_map_with_path(leaf, grads, state["m"])
         is2 = lambda x: isinstance(x, tuple)
@@ -308,19 +306,25 @@ def scale_by_adagrad(eps: float = 1e-10, *,
         def leaf(path, g, V):
             vs = _v(path, g)
             if vs.kind == "dense":
-                v_new = vs.accumulate(V, g * g)
+                v_new, _ = vs.update_read(V, g * g, 1.0, scale=1.0)
                 return v_new, g / (jnp.sqrt(v_new) + eps)
             V_in = vs.clean(V, step)
+            if _fused(vs) and not strict_paper:
+                # one fused kernel over the whole table (DESIGN.md §14)
+                V_out, v_est = vs.update_read(V_in, g * g, 1.0, scale=1.0)
+                v_new = jnp.maximum(v_est, 0.0)
+                return V_out, g / (jnp.sqrt(v_new) + eps)
             if dense_chunk and not strict_paper:
                 def chunk_step(carry, ids, gc):
-                    v_old = vs.read(V_in, ids)
-                    dv = gc * gc
-                    carry = vs.accumulate(carry, dv, ids)
-                    v_new = jnp.maximum(v_old + dv, 0.0)
+                    carry, v_est = vs.update_read(carry, gc * gc, 1.0,
+                                                  scale=1.0, rows=ids,
+                                                  read_state=V_in)
+                    v_new = jnp.maximum(v_est, 0.0)
                     return carry, gc / (jnp.sqrt(v_new) + eps)
                 return _sketched_rows_scan(g, V_in, chunk_step, dense_chunk)
-            V_out, v_new = _linear_step(vs, V_in, g * g, strict_paper)
-            v_new = jnp.maximum(v_new, 0.0)
+            V_out, v_est = vs.update_read(V_in, g * g, 1.0, scale=1.0,
+                                          strict=strict_paper)
+            v_new = jnp.maximum(v_est, 0.0)
             return V_out, g / (jnp.sqrt(v_new) + eps)
 
         pairs = tree_map_with_path(leaf, grads, state["v"])
@@ -398,28 +402,30 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
             ms, vs = _mv(path, g)
 
             if vs.kind == "rank1":
-                # LR-NMF-V leaf: rank-1 2nd moment (decay + mean-accumulate
-                # via the codec), dense 1st — numerics identical to
-                # lowrank.nmf_rank1_adam.
+                # LR-NMF-V leaf: rank-1 2nd moment (fused decay + mean-
+                # accumulate + read via the codec), dense 1st — numerics
+                # identical to lowrank.nmf_rank1_adam.
                 g2 = jnp.square(g.astype(jnp.float32))
-                V_out = vs.accumulate(vs.decay(V, b2), g2, scale=(1.0 - b2))
-                vhat = vs.read(V_out)
+                V_out, vhat = vs.update_read(V, g2, b2, scale=(1.0 - b2))
                 if ms is not None:
-                    m_new = _dense_ema(ms, M, b1, (1.0 - b1) * g)
-                    M_out, mhat = m_new, m_new / bc1
+                    M_out, m_new = ms.update_read(M, g, b1)
+                    mhat = m_new / bc1
                 else:
                     M_out, mhat = None, g
                 upd = mhat / (jnp.sqrt(jnp.maximum(vhat / bc2, 0.0)) + eps)
                 return M_out, V_out, upd
 
             if vs.kind == "dense":
-                # fully dense leaf
+                # fully dense leaf.  The v delta is pre-scaled
+                # ``((1−β₂)·g)·g`` — the monoliths' association (the
+                # sketched paths scale ``g²`` inside ``ema_delta``).
                 if ms is None:
                     mhat, M_out = g, None
                 else:
-                    m_new = _dense_ema(ms, M, b1, (1.0 - b1) * g)
-                    M_out, mhat = m_new, m_new / bc1
-                v_new = _dense_ema(vs, V, b2, (1.0 - b2) * g * g)
+                    M_out, m_new = ms.update_read(M, g, b1)
+                    mhat = m_new / bc1
+                v_new, _ = vs.update_read(V, (1.0 - b2) * g * g, b2,
+                                          scale=1.0)
                 return M_out, v_new, mhat / (jnp.sqrt(v_new / bc2) + eps)
 
             # sketched 2nd moment (count-min, or signed count-sketch)
@@ -428,30 +434,52 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
 
             # dense 1st moment alongside a sketched 2nd (paper's CS-V mode)
             if ms is not None and not sketched_m:
-                m_dense = _dense_ema(ms, M, b1, (1.0 - b1) * g)
-                M_out, mhat_rows = m_dense, m_dense / bc1
+                M_out, m_dense = ms.update_read(M, g, b1)
+                mhat_rows = m_dense / bc1
             else:
                 M_out, mhat_rows = None, None
 
+            fused = (not strict_paper and _fused(vs)
+                     and (not sketched_m or _fused(ms)))
+            if fused:
+                # one fused kernel per moment over the whole table —
+                # the single-pass hot path (DESIGN.md §14).  The §4
+                # cleaning hook fired above on V_in, exactly as on the
+                # composed paths.
+                act = _row_active(g) if lazy else 1.0
+                mask = act if lazy else None
+                if sketched_m:
+                    M_out, m_est = ms.update_read(M, g, b1, mask=mask)
+                    mhat = m_est / bc1
+                elif ms is not None:
+                    mhat = mhat_rows
+                else:
+                    mhat = g
+                V_out, v_est = vs.update_read(V_in, g * g, b2, mask=mask)
+                vh = jnp.maximum(v_est, 0.0) / bc2
+                return M_out, V_out, act * mhat / (jnp.sqrt(vh) + eps)
+
             if dense_chunk and not strict_paper:
-                # fused chunked scan: query(pre-step) → delta → scatter →
-                # direction row, O(depth·chunk·d) temps.  Queries close
-                # over the PRE-step sketches (canonical batch semantics).
+                # composed chunked scan: one ``update_read`` per moment
+                # per chunk, O(depth·chunk·d) temps.  Estimates close
+                # over the PRE-step sketches via ``read_state``
+                # (canonical batch semantics).
                 def chunk_step(carry, ids, gc, *mh_c):
                     act = _row_active(gc) if lazy else 1.0
+                    mask = act if lazy else None
                     if sketched_m:
-                        m_old = ms.read(M, ids)
-                        dm = (1.0 - b1) * (gc - m_old) * act
-                        carry["M"] = ms.accumulate(carry["M"], dm, ids)
-                        mh = (m_old + dm) / bc1
+                        carry["M"], m_est = ms.update_read(
+                            carry["M"], gc, b1, rows=ids, mask=mask,
+                            read_state=M)
+                        mh = m_est / bc1
                     elif ms is not None:
                         mh = mh_c[0]
                     else:
                         mh = gc
-                    v_old = vs.read(V_in, ids)
-                    dv = (1.0 - b2) * (gc * gc - v_old) * act
-                    carry["V"] = vs.accumulate(carry["V"], dv, ids)
-                    vh = jnp.maximum(v_old + dv, 0.0) / bc2
+                    carry["V"], v_est = vs.update_read(
+                        carry["V"], gc * gc, b2, rows=ids, mask=mask,
+                        read_state=V_in)
+                    vh = jnp.maximum(v_est, 0.0) / bc2
                     return carry, act * mh / (jnp.sqrt(vh) + eps)
 
                 carry0 = {"V": V_in}
@@ -465,19 +493,18 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
 
             # reference unchunked path (also the strict-paper 3-pass mode)
             act = _row_active(g) if lazy else 1.0
+            mask = act if lazy else None
             if sketched_m:
-                m_old = ms.read(M)
-                delta_m = (1.0 - b1) * (g - m_old) * act
-                M_out, m_new = _linear_step(ms, M, delta_m, strict_paper)
-                mhat = m_new / bc1
+                M_out, m_est = ms.update_read(M, g, b1, mask=mask,
+                                              strict=strict_paper)
+                mhat = m_est / bc1
             elif ms is not None:
                 mhat = mhat_rows
             else:
                 mhat = g
-            v_old = vs.read(V_in)
-            delta_v = (1.0 - b2) * (g * g - v_old) * act
-            V_out, v_new = _linear_step(vs, V_in, delta_v, strict_paper)
-            v_new = jnp.maximum(v_new, 0.0)
+            V_out, v_est = vs.update_read(V_in, g * g, b2, mask=mask,
+                                          strict=strict_paper)
+            v_new = jnp.maximum(v_est, 0.0)
             upd = act * mhat / (jnp.sqrt(v_new / bc2) + eps)
             return M_out, V_out, upd
 

@@ -6,17 +6,24 @@
                      per-item (paper) semantics
   cs_adam_tiled.py — fused TILED Adam: TILE deduplicated rows per grid step,
                      double-buffered grad/update pipeline (DESIGN.md §10)
+  cs_ema_tiled.py  — fused TILED update_read: one moment's query→Δ→scatter
+                     in a single pass — the AuxStore protocol's dense-path
+                     op (DESIGN.md §14)
   dedup.py         — sort + segment-sum pre-pass that turns an (ids, rows)
                      batch collision-free so the tiled kernel applies
   ops.py           — jit'd wrappers w/ TPU→Pallas, CPU→ref dispatch
   ref.py           — pure-jnp oracles (bit-exact semantics definitions)
+  registry.py      — the shared (store kind, op) → {backend: fn} registry
 
 Backend registry
 ----------------
-The sparse-rows CS-Adam step has several interchangeable implementations
-("backends"), selected by name — through ``SketchHParams.backend``, the
-``backend=`` argument of ``core.optimizers.adam_sparse_rows``, or
-``benchmarks/kernels.py --backend``:
+Interchangeable implementations ("backends") are selected by name through
+``registry.lookup(kind, op, backend)`` — reachable from
+``SketchHParams.backend``, the ``backend=`` field on sketch-backed
+``AuxStore`` dataclasses (rides in StoreTrees, plans, and checkpoint
+manifests), ``launch/train.py --store-backend``, and the benchmarks.
+
+('pair', 'adam_rows') — the fused sparse-rows CS-Adam step:
 
   ref        pure-jnp ``lax.scan`` per-item oracle (exact paper semantics)
   xla        dedup pre-pass + the vectorized jnp batch step — no Pallas;
@@ -30,42 +37,48 @@ The sparse-rows CS-Adam step has several interchangeable implementations
   interpret  ``tiled`` with the Pallas interpreter forced on — runs the
              kernel body anywhere (tests, CPU containers)
 
-``resolve_backend(None)`` / ``resolve_backend("auto")`` picks ``tiled`` on
-TPU and ``xla`` elsewhere.  New backends (e.g. a GPU port) register via
-``register_backend``.
+('sketch' | 'countmin', 'update_read') — the dense-path fused one-pass
+EMA op of the ``AuxStore`` protocol (DESIGN.md §14):
+
+  ref        composed primitives one-shot (query → ema_delta → update);
+             bit-identical to the composed fallback
+  xla        one fused gather/Δ/scatter pass, addressing hashed once (and
+             host-cached for the dense arange(n) row set) — bit-identical
+             to ``ref``
+  tiled      the ``cs_ema_tiled`` Pallas kernel (TPU fast path)
+  interpret  ``tiled`` under the Pallas interpreter
+
+'stream' exists only for the pair op (per-item ordering is its point);
+``update_read`` is defined batch-wise.  ``resolve_backend(None|'auto')``
+picks ``tiled`` on TPU and ``xla`` elsewhere.  New backends (e.g. a GPU
+port) attach via ``registry.register``.
 """
 from __future__ import annotations
 
 import functools
 from typing import Callable, Optional, Tuple
 
-import jax
-
-from repro.kernels import dedup, ops, ref  # noqa: F401
-
-# name -> fn(spec_m, spec_v, M, V, ids, g, step, *, lr, b1, b2, eps)
-#          -> (M', V', row_updates)
-_BACKENDS: dict = {}
+from repro.kernels import dedup, ops, ref, registry  # noqa: F401
 
 
 def register_backend(name: str, fn: Callable) -> None:
-    """Register (or override) a sparse-rows CS-Adam backend."""
-    _BACKENDS[name] = fn
+    """Register (or override) a sparse-rows CS-Adam ('pair', 'adam_rows')
+    backend — the PR-1 flat API, kept for compatibility."""
+    registry.register("pair", "adam_rows", name, fn)
 
 
 def backends() -> Tuple[str, ...]:
-    """Registered backend names, registration order."""
-    return tuple(_BACKENDS)
+    """Registered sparse-rows backend names, registration order."""
+    return registry.backends("pair", "adam_rows")
 
 
 def resolve_backend(name: Optional[str] = None) -> str:
-    """Map None/'auto' to the best backend for this host; validate names."""
-    if name is None or name == "auto":
-        return "tiled" if jax.default_backend() == "tpu" else "xla"
-    if name not in _BACKENDS:
-        raise KeyError(f"unknown kernel backend {name!r}; "
-                       f"registered: {backends()}")
-    return name
+    """Map None/'auto' to the best sparse-rows backend for this host;
+    validate names."""
+    try:
+        return registry.resolve("pair", "adam_rows", name)
+    except KeyError as e:
+        raise KeyError(str(e)) from None
 
 
 def adam_rows(spec_m, spec_v, M, V, ids, g, step, *,
@@ -78,9 +91,22 @@ def adam_rows(spec_m, spec_v, M, V, ids, g, step, *,
     correct application under every backend (the tiled backend zeros
     duplicate occurrences after the first; see ``dedup.scatter_back``).
     """
-    fn = _BACKENDS[resolve_backend(backend)]
+    fn = registry.lookup("pair", "adam_rows", backend)
     return fn(spec_m, spec_v, M, V, ids, g, step,
               lr=lr, b1=b1, b2=b2, eps=eps)
+
+
+def update_read(spec, S, ids, delta, *, beta: float, scale: float,
+                mask=None, backend: Optional[str] = None):
+    """One fused EMA step on one sketch tensor: ``(S', est)`` such that
+    row content moves to ``β·content + scale·delta`` at ``ids`` and
+    ``est`` is the post-step estimate (batch semantics) — the kernel half
+    of ``AuxStore.update_read`` (DESIGN.md §14).  Dispatches on the
+    store kind ('sketch' for signed specs, 'countmin' otherwise) through
+    the registry."""
+    kind = "sketch" if spec.signed else "countmin"
+    fn = registry.lookup(kind, "update_read", backend)
+    return fn(spec, S, ids, delta, beta=beta, scale=scale, mask=mask)
 
 
 register_backend("ref", ops.adam_rows_ref)
@@ -89,3 +115,13 @@ register_backend("stream", ops.adam_rows_stream)
 register_backend("tiled", ops.adam_rows_tiled)
 register_backend("interpret",
                  functools.partial(ops.adam_rows_tiled, interpret=True))
+
+for _kind in ("sketch", "countmin"):
+    registry.register(_kind, "update_read", "ref", ops.ema_update_read_ref)
+    registry.register(_kind, "update_read", "xla", ops.ema_update_read_xla)
+    registry.register(_kind, "update_read", "tiled",
+                      ops.ema_update_read_tiled)
+    registry.register(_kind, "update_read", "interpret",
+                      functools.partial(ops.ema_update_read_tiled,
+                                        interpret=True))
+del _kind

@@ -1,0 +1,175 @@
+"""Tiled fused ``update_read`` for ONE sketch tensor — the dense hot path.
+
+The ``AuxStore`` protocol's fused op (DESIGN.md §14)
+
+    update_read(S, x, β, scale)  ≡  est_old = query(S, rows)
+                                    d       = ema_delta(est_old, x, β, scale)
+                                    S'      = update(S, rows, d)
+                                    est     = est_old + d
+
+runs one moment of the dense-gradient path in a single pass over the
+sketch: per grid step, gather ``depth × TILE`` sketch rows, form the
+median/min estimate, the linear-EMA increment, and the scatter-back — the
+single-store sibling of the fused sparse-rows kernel
+(``cs_adam_tiled.py``), sharing its machinery:
+
+  * the ``x`` (gradient / g²) tile and the ``est`` output tile move
+    through the double-buffered BlockSpec pipeline; the sketch stays in
+    ``pl.ANY`` (HBM) with all per-tile row DMAs issued as one overlapped
+    burst;
+  * intra-tile bucket collisions are folded through the (TILE, TILE)
+    bucket-equality matmul, so duplicate-bucket rows write back identical
+    fully-accumulated values;
+  * estimates read the sketch as of the START of the tile: batch
+    semantics within a tile, streaming across tiles (tile t+1 observes
+    tile t's writes through the sequential TPU grid) — exactly the
+    semantics of ``cs_adam_tiled``, bit-identical to the composed
+    one-shot fallback on collision-free row sets (the dense path's rows
+    are ``arange(n)``: always id-unique, so only *bucket* collisions
+    across tiles differ, by estimator noise).
+
+``beta``/``scale`` are static floats and the increment uses the shared
+``sketch.ema_delta`` forms, so the arithmetic matches the composed
+fallback operation-for-operation.  Rows at positions ≥ ``n_valid``
+(tile padding) have mask 0: they add exactly zero to every bucket.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.sketch import ema_delta, median_rows
+
+DEFAULT_TILE = 8
+
+
+def _tile_vec(ref, j, base, tile):
+    """(tile,) vector of scalar-prefetch entries ref[j, base:base+tile]."""
+    return jnp.stack([ref[j, base + r] for r in range(tile)])
+
+
+def _eq_matrix(bkt):
+    """(tile, tile) float32 bucket-equality matrix for one hash row."""
+    return (bkt[:, None] == bkt[None, :]).astype(jnp.float32)
+
+
+def _ema_kernel(depth: int, tile: int, signed: bool,
+                beta: float, scale: float,
+                b_ref, s_ref, nv_ref,     # scalar prefetch (SMEM)
+                x_blk, mask_blk,          # VMEM input tiles
+                S_any,                    # sketch, pl.ANY (HBM)
+                S_out, est_out,           # aliased out + estimate tile
+                scr, sem):                # scratch VMEM + DMA sem
+    t = pl.program_id(0)
+    base = t * tile
+
+    # ---- DMA in all depth×tile sketch rows, one overlapped burst ---------
+    copies = []
+    for j in range(depth):
+        for r in range(tile):
+            copies.append(pltpu.async_copy(
+                S_out.at[j, pl.ds(b_ref[j, base + r], 1), :],
+                scr.at[j, pl.ds(r, 1)], sem))
+    for c in copies:
+        c.wait()
+
+    x = x_blk[:, :]                                          # (tile, d)
+    row_pos = base + jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)
+    valid = (row_pos < nv_ref[0]).astype(jnp.float32)        # (tile, 1)
+    msk = mask_blk[:, :] * valid                             # (tile, 1)
+
+    # ---- estimate: median (signed) / min (count-min) over depth ----------
+    if signed:
+        sgn = [_tile_vec(s_ref, j, base, tile) for j in range(depth)]
+        est_old = median_rows([scr[j] * sgn[j][:, None]
+                               for j in range(depth)])
+    else:
+        est_old = functools.reduce(jnp.minimum,
+                                   [scr[j] for j in range(depth)])
+
+    d = ema_delta(est_old, x, beta, scale) * msk
+
+    # ---- scatter-add via the bucket-equality matmul ----------------------
+    for j in range(depth):
+        eq = _eq_matrix(_tile_vec(b_ref, j, base, tile))
+        contrib = (sgn[j][:, None] * d) if signed else d
+        scr[j] = scr[j] + jax.lax.dot(eq, contrib,
+                                      preferred_element_type=jnp.float32)
+
+    est_out[:, :] = (est_old + d).astype(est_out.dtype)
+
+    # ---- DMA back (duplicate buckets write identical accumulated rows) ---
+    copies = []
+    for j in range(depth):
+        for r in range(tile):
+            copies.append(pltpu.async_copy(
+                scr.at[j, pl.ds(r, 1)],
+                S_out.at[j, pl.ds(b_ref[j, base + r], 1), :], sem))
+    for c in copies:
+        c.wait()
+
+
+def cs_ema_tiled(S: jnp.ndarray, b: jnp.ndarray, s, x: jnp.ndarray,
+                 mask: jnp.ndarray, *, beta: float, scale: float,
+                 n_valid=None, tile: int = DEFAULT_TILE,
+                 interpret: bool = False
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused EMA update_read over ``k`` rows of one (depth, width, dim)
+    sketch.
+
+    S           (depth, width, dim) sketch tensor (float32)
+    b           (depth, k) int32 bucket addresses
+    s           (depth, k) float32 signs, or None for count-min
+    x           (k, dim) input rows (gradient or g², float32)
+    mask        (k, 1) float32 row mask (lazy/row-active × validity)
+    n_valid     rows at positions >= n_valid are padding (zero writes,
+                zero estimates).  Defaults to k.
+    tile        rows per grid step; k must be a multiple.
+
+    Returns ``(S', est)`` with ``est[k, dim]`` = est_old + Δ (batch
+    semantics within a tile, streaming across tiles).
+    """
+    depth, w, dim = S.shape
+    k = x.shape[0]
+    if k % tile != 0:
+        raise ValueError(f"k={k} must be a multiple of tile={tile}")
+    signed = s is not None
+    s_in = s.astype(jnp.float32) if signed else jnp.ones_like(b, jnp.float32)
+    nv = jnp.asarray(k if n_valid is None else n_valid,
+                     jnp.int32).reshape((1,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,      # b, s, n_valid
+        grid=(k // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, dim), lambda t, *_: (t, 0)),  # x tile
+            pl.BlockSpec((tile, 1), lambda t, *_: (t, 0)),    # mask tile
+            pl.BlockSpec(memory_space=pl.ANY),                # S (HBM)
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),                # S'
+            pl.BlockSpec((tile, dim), lambda t, *_: (t, 0)),  # est tile
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((depth, tile, dim), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_ema_kernel, depth, tile, signed,
+                          float(beta), float(scale)),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(S.shape, S.dtype),
+            jax.ShapeDtypeStruct((k, dim), jnp.float32),
+        ],
+        # alias S (operand 5 = 3 prefetch + x + mask) onto output 0
+        input_output_aliases={5: 0},
+        interpret=interpret,
+    )
+    return fn(b, s_in, nv, x, mask, S)

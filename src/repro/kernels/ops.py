@@ -19,6 +19,7 @@ from repro.kernels import dedup as dd
 from repro.kernels import ref
 from repro.kernels.cs_adam import cs_adam_fused
 from repro.kernels.cs_adam_tiled import DEFAULT_TILE, cs_adam_tiled
+from repro.kernels.cs_ema_tiled import DEFAULT_TILE as EMA_TILE, cs_ema_tiled
 from repro.kernels.cs_query import cs_query
 from repro.kernels.cs_update import cs_update
 
@@ -154,6 +155,139 @@ def adam_rows_tiled(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
         bc1=bc1, bc2=bc2, n_valid=batch.n_unique, tile=tile,
         interpret=interpret)
     return M_out, V_out, dd.scatter_back(batch, upd_u)
+
+
+# ---------------------------------------------------------------------------
+# Fused dense-path update_read (the AuxStore protocol's one-pass EMA op)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=256)
+def _cached_addressing(spec: SketchSpec, n: int):
+    """Bucket/sign tables for the dense row set arange(n), computed ONCE
+    per (spec, n) on the host and reused as jit constants.  The dense
+    path addresses the same rows every step — the composed fallback
+    re-hashes them twice per step (query + update); the fused backends
+    pay zero hash compute.  Evaluated under compile-time-eval so an
+    enclosing trace cannot stage (or leak tracers into) the cache."""
+    import numpy as np
+    with jax.ensure_compile_time_eval():
+        ids = jnp.arange(n, dtype=jnp.int32)
+        fam = spec.family
+        buckets = np.asarray(jax.device_get(fam.bucket(ids)))
+        signs = (np.asarray(jax.device_get(fam.sign(ids)))
+                 if spec.signed else None)
+    # cache NUMPY arrays: converting to jnp here under an active trace
+    # would cache a tracer; numpy constants embed cleanly in any graph
+    return buckets, signs
+
+
+def _ema_addressing(spec: SketchSpec, ids: jnp.ndarray):
+    """(buckets, signs) for ``ids`` — the host-cached constant tables when
+    ``ids`` is concretely the dense row set arange(n), hashed in-graph
+    otherwise.  The detection is pure numpy, safe under an outer trace."""
+    import numpy as np
+    n = int(ids.shape[0])
+    if n and not isinstance(ids, jax.core.Tracer):
+        idv = np.asarray(jax.device_get(ids))
+        if bool((idv == np.arange(n, dtype=idv.dtype)).all()):
+            return _cached_addressing(spec, n)
+    fam = spec.family
+    return fam.bucket(ids), (fam.sign(ids) if spec.signed else None)
+
+
+def ema_update_read_ref(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
+                        x: jnp.ndarray, *, beta: float, scale: float,
+                        mask: Optional[jnp.ndarray] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """'ref' backend: the composed primitives, one-shot — query, the
+    shared ``ema_delta`` form, update.  The oracle the fused paths are
+    parity-tested against (bit-identical to the composed fallback)."""
+    est_old = cs.query(spec, S, ids)
+    d = cs.ema_delta(est_old, x, beta, scale)
+    if mask is not None:
+        d = d * mask
+    S = cs.update(spec, S, ids, d)
+    return S, est_old + d
+
+
+def ema_update_read_xla(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
+                        x: jnp.ndarray, *, beta: float, scale: float,
+                        mask: Optional[jnp.ndarray] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """'xla' backend: one fused gather → ema_delta → scatter pass.
+
+    Two hand-optimizations over the reference primitives, same values:
+
+      * addressing is computed ONCE (the composed path hashes every id
+        twice per step — query, then update again) and not at all for
+        the dense arange(n) row set, whose bucket/sign tables are
+        host-cached constants;
+      * the depth axis is UNROLLED into per-hash-row gathers/scatters —
+        XLA:CPU lowers a batched (vmap) gather/scatter an order of
+        magnitude slower than ``depth`` flat ones, and the (depth, k,
+        dim) temp blob becomes ``depth`` cache-sized (k, dim) temps
+        (EXPERIMENTS.md §FusedStore).
+
+    The arithmetic is operation-for-operation the reference form
+    (gather, sign multiply, pairwise median / min, the shared
+    ``ema_delta``, sign-multiplied scatter-add), so the result is
+    bit-identical to 'ref' and the composed fallback."""
+    b, s = _ema_addressing(spec, ids)
+    depth = spec.depth
+    rows = []
+    for j in range(depth):
+        r = S[j][b[j]]                                    # (k, dim)
+        if spec.signed:
+            r = r * s[j][:, None].astype(S.dtype)
+        rows.append(r)
+    if spec.signed:
+        est_old = cs.median_rows(rows)
+    else:
+        est_old = functools.reduce(jnp.minimum, rows)
+    d = cs.ema_delta(est_old, x, beta, scale)
+    if mask is not None:
+        d = d * mask
+    out = []
+    for j in range(depth):
+        u = (s[j][:, None].astype(S.dtype) * d.astype(S.dtype)
+             if spec.signed else d.astype(S.dtype))
+        out.append(S[j].at[b[j]].add(u))
+    return jnp.stack(out), est_old + d
+
+
+def ema_update_read_tiled(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
+                          x: jnp.ndarray, *, beta: float, scale: float,
+                          mask: Optional[jnp.ndarray] = None,
+                          tile: int = EMA_TILE,
+                          interpret: Optional[bool] = None
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """'tiled' backend: the ``cs_ema_tiled`` Pallas kernel — TILE rows per
+    sequential grid step, sketch rows DMA'd from HBM in one overlapped
+    burst per tile.  Batch semantics within a tile, streaming across
+    tiles (exact vs 'ref' when no two rows share a bucket; estimator-
+    noise tolerance otherwise — DESIGN.md §14).  Falls back to the 'xla'
+    path for non-f32 sketches (the VMEM scratch is f32)."""
+    if jnp.dtype(spec.dtype) != jnp.float32:
+        return ema_update_read_xla(spec, S, ids, x, beta=beta, scale=scale,
+                                   mask=mask)
+    k = int(ids.shape[0])
+    if k == 0:
+        return S, jnp.zeros(x.shape, jnp.float32)
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s = _ema_addressing(spec, ids)
+    m = jnp.ones((k, 1), jnp.float32) if mask is None \
+        else jnp.broadcast_to(mask.astype(jnp.float32), (k, 1))
+    pad = (-k) % tile
+    if pad:
+        b = jnp.pad(b, ((0, 0), (0, pad)))
+        s = None if s is None else jnp.pad(s, ((0, 0), (0, pad)),
+                                           constant_values=1.0)
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        m = jnp.pad(m, ((0, pad), (0, 0)))
+    S, est = cs_ema_tiled(S, b, s, x, m, beta=beta, scale=scale,
+                          n_valid=k, tile=tile, interpret=interpret)
+    return S, est[:k]
 
 
 def adam_rows_fused(spec_m: Optional[SketchSpec], spec_v: SketchSpec,

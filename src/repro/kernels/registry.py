@@ -1,0 +1,78 @@
+"""Shared kernel-backend registry: (store kind, op) → {backend: fn}.
+
+PR 1 introduced interchangeable implementations ("backends") for the
+sparse-rows CS-Adam step, keyed by name in ``kernels/__init__.py``.  The
+fused-store refactor (DESIGN.md §14) adds a second kernelized op — the
+dense-path ``update_read`` of the ``AuxStore`` protocol — so the flat
+name → fn table becomes a two-level registry dispatching on
+
+    kind    which store owns the op: 'sketch' (signed Count-Sketch),
+            'countmin' (unsigned Count-Min), or 'pair' (ops spanning an
+            (m, v) store pair, e.g. the fused sparse-rows Adam step);
+    op      the protocol operation ('adam_rows' | 'update_read');
+    backend the implementation name ('ref' | 'xla' | 'stream' | 'tiled'
+            | 'interpret' | ...), with None/'auto' resolved per platform
+            (Pallas 'tiled' on TPU, vectorized 'xla' elsewhere).
+
+Not every (kind, op) offers every backend — 'stream' (one item per grid
+step) exists only for the sparse-rows pair op, where exact per-item
+ordering matters; the dense ``update_read`` is defined batch-wise and
+registers ref | xla | tiled | interpret.  ``backends(kind, op)``
+enumerates what is actually available; new implementations (e.g. a GPU
+port) attach via ``register``.
+
+``kernels/__init__.py`` keeps the PR-1 flat API (``register_backend`` /
+``backends()`` / ``resolve_backend`` / ``adam_rows``) as thin wrappers
+over the ('pair', 'adam_rows') row of this registry.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+# (kind, op) -> {backend name: fn}, insertion-ordered per row.
+_REGISTRY: Dict[Tuple[str, str], Dict[str, Callable]] = {}
+
+# Per-platform default picked by resolve(..., None/'auto'): the Pallas
+# tiled pipeline on TPU, the vectorized jnp path everywhere else.
+_AUTO = {"tpu": "tiled"}
+_AUTO_FALLBACK = "xla"
+
+
+def register(kind: str, op: str, backend: str, fn: Callable) -> None:
+    """Register (or override) one implementation of ``op`` for ``kind``."""
+    _REGISTRY.setdefault((kind, op), {})[backend] = fn
+
+
+def ops() -> Tuple[Tuple[str, str], ...]:
+    """Every registered (kind, op) row."""
+    return tuple(_REGISTRY)
+
+
+def backends(kind: str, op: str) -> Tuple[str, ...]:
+    """Backend names registered for (kind, op), registration order."""
+    row = _REGISTRY.get((kind, op))
+    if row is None:
+        raise KeyError(f"no kernels registered for kind={kind!r} op={op!r}; "
+                       f"rows: {ops()}")
+    return tuple(row)
+
+
+def resolve(kind: str, op: str, backend: Optional[str] = None) -> str:
+    """Map None/'auto' to this host's best backend for (kind, op);
+    validate explicit names against the registered row."""
+    names = backends(kind, op)
+    if backend is None or backend == "auto":
+        best = _AUTO.get(jax.default_backend(), _AUTO_FALLBACK)
+        return best if best in names else names[0]
+    if backend not in names:
+        raise KeyError(f"unknown backend {backend!r} for kind={kind!r} "
+                       f"op={op!r}; registered: {names}")
+    return backend
+
+
+def lookup(kind: str, op: str, backend: Optional[str] = None) -> Callable:
+    """The implementation executing (kind, op) on ``backend`` (None/'auto'
+    = per-host best)."""
+    return _REGISTRY[(kind, op)][resolve(kind, op, backend)]

@@ -79,20 +79,28 @@ def opt_sharding_summary(opt_shape, oshard) -> dict:
 
 
 def lower_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
-               optimizer: str = TRAIN_OPTIMIZER, plan=None):
+               optimizer: str = TRAIN_OPTIMIZER, plan=None,
+               store_backend: str = ""):
     """Returns (lowered, n_params_shape_tree, tokens, kind, info).
     ``plan``: an optional ``repro.plan.Plan`` replacing the regex policy
     for train cells (serve cells carry no optimizer state); its
     ``StoreTree`` rides into ``TrainStep.shardings`` so the optimizer-
-    state sharding classification is exact.  ``info``: extra artifact
-    fields (train cells record the opt-state sharding coverage)."""
+    state sharding classification is exact.  ``store_backend``: kernel
+    backend for the sketch hot paths (fused update_read + sparse rows;
+    DESIGN.md §14) — train cells lower the fused program so its HLO/
+    memory/roofline are what production would run.  ``info``: extra
+    artifact fields (train cells record the opt-state sharding
+    coverage)."""
     n_dev = mesh.devices.size
     if shape.kind == "train":
         from repro.train.steps import make_train_step
         sampled = optimizer.endswith("+sampled")
         opt_name = optimizer.replace("+sampled", "")
+        if store_backend and plan is not None:
+            plan = plan.with_backend(store_backend)
         ts = make_train_step(cfg, optimizer=opt_name,
-                             sampled_softmax=sampled, plan=plan)
+                             sampled_softmax=sampled, plan=plan,
+                             kernel_backend=store_backend or None)
         ps = ts.params_shape()
         os_ = ts.opt_shape(ps)
         batch = configs.train_batch_specs(cfg, shape,
@@ -160,7 +168,7 @@ def plan_cell(cfg: ArchConfig, budget: str, *, optimizer: str):
 def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
              force: bool = False, optimizer: str = TRAIN_OPTIMIZER,
              out_root: pathlib.Path = OUT_ROOT, tag: str = "",
-             aux_budget: str = "") -> dict:
+             aux_budget: str = "", store_backend: str = "") -> dict:
     out_dir = out_root / mesh_kind
     out_dir.mkdir(parents=True, exist_ok=True)
     shape = SHAPES[shape_name]
@@ -171,6 +179,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         # serve cells carry no optimizer state, so theirs is unchanged
         token = re.sub(r"[^A-Za-z0-9.]+", "-", aux_budget)
         suffix += f"__plan-{token}"
+    if store_backend and shape.kind == "train":
+        # fused-backend records likewise get their own cache key — the
+        # lowered program (and its roofline) differs from the composed one
+        suffix += f"__be-{re.sub(r'[^A-Za-z0-9.]+', '-', store_backend)}"
     out_path = out_dir / f"{arch}__{shape_name}{suffix}.json"
     if out_path.exists() and not force:
         return json.loads(out_path.read_text())
@@ -195,7 +207,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
             plan = plan_cell(cfg, aux_budget, optimizer=optimizer)
         lowered, ps, tokens, kind, info = lower_cell(cfg, shape, mesh,
                                                optimizer=optimizer,
-                                               plan=plan)
+                                               plan=plan,
+                                               store_backend=store_backend)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
@@ -208,6 +221,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
             "arch": arch, "shape": shape_name, "mesh": mesh_kind,
             "status": "ok", "kind": kind, "devices": n_dev,
             "optimizer": optimizer if kind == "train" else None,
+            "store_backend": (store_backend or None) if kind == "train"
+                             else None,
             "tokens_global": tokens,
             "n_params": analysis.count_params(ps),
             "n_params_active": analysis.active_params(cfg, ps),
@@ -245,6 +260,11 @@ def main() -> int:
                          "'8.6GB' | '0.85x' of dense | 'floor' | 'config' "
                          "(the arch's aux_budget_bytes); prints the plan "
                          "table before lowering")
+    ap.add_argument("--store-backend", default="",
+                    help="kernel backend for the sketch hot paths of train "
+                         "cells ('ref' | 'xla' | 'tiled' | 'interpret' | "
+                         "'auto'); lowers the fused update_read program "
+                         "(DESIGN.md §14) and tags the artifact")
     args = ap.parse_args()
 
     archs = [args.arch] if args.arch else list(configs.ARCH_IDS)
@@ -258,7 +278,8 @@ def main() -> int:
             for shape_name in shapes:
                 rec = run_cell(arch, shape_name, mesh_kind, force=args.force,
                                optimizer=args.optimizer, tag=args.tag,
-                               aux_budget=args.aux_budget)
+                               aux_budget=args.aux_budget,
+                               store_backend=args.store_backend)
                 st = rec["status"]
                 if st == "ok":
                     r = rec["roofline"]

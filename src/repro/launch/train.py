@@ -47,7 +47,8 @@ def run_sparse_embedding(args, mesh) -> int:
     from repro.core.optimizers import SketchHParams
 
     n_rows, dim = args.sparse_rows, args.sparse_dim
-    hp = SketchHParams(compression=args.sparse_compression)
+    hp = SketchHParams(compression=args.sparse_compression,
+                       backend=args.store_backend or None)
     dp_axis = "data" if args.dp else None
     init_fn, step_fn, opt = make_sparse_embedding_step(
         n_rows, dim, lr=args.lr, hparams=hp, dp_axis=dp_axis, mesh=mesh,
@@ -134,6 +135,15 @@ def main() -> int:
                          "'0.85x' of dense | 'floor' | 'config'; the solved "
                          "plan replaces the regex sketch policy and is "
                          "recorded in every checkpoint manifest")
+    ap.add_argument("--store-backend", default="",
+                    help="kernel backend for the sketch hot paths: the "
+                         "fused dense-path update_read AND the sparse-rows "
+                         "step ('ref' | 'xla' | 'tiled' | 'interpret' | "
+                         "'auto'; DESIGN.md §14).  Empty = composed "
+                         "fallback on the dense path.  An execution knob "
+                         "only — overrides whatever backend a recorded "
+                         "plan/manifest carries without touching state "
+                         "layout, so restores stay valid")
     args = ap.parse_args()
 
     if os.environ.get("JAX_COORDINATOR"):
@@ -184,16 +194,24 @@ def main() -> int:
                 f"--aux-budget {args.aux_budget} would load mismatched "
                 f"optimizer state — resume without the flag, or start a "
                 f"fresh --ckpt-dir")
-        if ckpt_plan is not None and plan != ckpt_plan:
+        if ckpt_plan is not None and \
+                plan.with_backend(None) != ckpt_plan.with_backend(None):
             # The checkpointed sketch arrays were written under the
             # recorded plan's (width, seed) specs; querying them through
             # a differently-solved plan would misread state silently.
+            # (The kernel backend is normalized out: it is an execution
+            # knob, not state layout — DESIGN.md §14.)
             raise ValueError(
                 f"--aux-budget {args.aux_budget} solves a plan that "
                 f"differs from the one recorded in {args.ckpt_dir}'s "
                 f"manifest ({ckpt_plan.budget_bytes:,} B budget) — resume "
                 f"without --aux-budget to reuse the recorded plan, or "
                 f"point --ckpt-dir at a fresh run")
+        if ckpt_plan is not None and plan.backend is None:
+            # keep the recorded execution backend when re-solving the
+            # same budget (resuming WITH the flag must not silently
+            # drop fused execution the run was launched with)
+            plan = plan.with_backend(ckpt_plan.backend)
         print(plan.table(), flush=True)
     elif ckpt_plan is not None:
         # Resuming a planned run without --aux-budget: the optimizer MUST
@@ -202,8 +220,23 @@ def main() -> int:
         plan = ckpt_plan
         print("[plan] recovered from checkpoint manifest "
               f"({plan.budget_bytes:,} B budget)", flush=True)
+    if args.store_backend and plan is not None:
+        # applied AFTER the consistency checks: same state layout, only
+        # the fused-vs-composed execution of update_read changes
+        plan = plan.with_backend(args.store_backend)
+        print(f"[plan] store backend -> {args.store_backend}", flush=True)
+    elif plan is not None and plan.backend == "tiled" \
+            and jax.default_backend() != "tpu":
+        # a recorded 'tiled' backend is a TPU execution knob; restoring
+        # it on a CPU/GPU host would silently run every step through
+        # the Pallas interpreter — fall back to this host's fused path
+        # (state layout unchanged; pass --store-backend to override)
+        print("[plan] recorded store backend 'tiled' needs a TPU; this "
+              f"host is {jax.default_backend()} -> 'xla'", flush=True)
+        plan = plan.with_backend("xla")
     ts = make_train_step(cfg, optimizer=args.optimizer, lr=args.lr,
-                         plan=plan, dp_axis="data" if args.dp else None)
+                         plan=plan, dp_axis="data" if args.dp else None,
+                         kernel_backend=args.store_backend or None)
 
     with shd.active_mesh(mesh):
         import jax.numpy as jnp

@@ -83,6 +83,12 @@ class Plan:
     seed: int = 0
     track_first_moment: bool = True
     sketch_first_moment: bool = True
+    # kernel backend executing every sketched leaf's fused ``update_read``
+    # (and the sparse-rows step, when this plan's stores feed one):
+    # 'ref' | 'xla' | 'tiled' | 'interpret' | 'auto'; None = the composed
+    # fallback.  An execution knob, NOT state layout — plans differing
+    # only here hold interchangeable states (DESIGN.md §14).
+    backend: Optional[str] = None
 
     # -- accounting ---------------------------------------------------------
     @property
@@ -124,16 +130,25 @@ class Plan:
             if l.mode == MODE_SKETCH:
                 if track and self.sketch_first_moment:
                     m = CountSketchStore(spec=self._leaf_spec(l, signed=True),
-                                         shape=l.shape)
+                                         shape=l.shape, backend=self.backend)
                 else:
                     m = default_m
                 v = CountMinStore(spec=self._leaf_spec(l, signed=False),
-                                  shape=l.shape, cleaning=cleaning)
+                                  shape=l.shape, cleaning=cleaning,
+                                  backend=self.backend)
                 rules.append((l.path, m, v))
             elif l.mode == MODE_RANK1:
                 rules.append((l.path, default_m, Rank1Store()))
         return StoreTree(rules=tuple(rules), default_m=default_m,
                          default_v=DenseStore())
+
+    def with_backend(self, backend: Optional[str]) -> "Plan":
+        """The same plan pinned to kernel ``backend`` (None = composed
+        fallback).  State layout (specs, seeds, widths, bytes) is
+        untouched, so checkpointed states restore across this change —
+        how ``launch/train.py --store-backend`` overrides a recorded
+        plan's execution."""
+        return dataclasses.replace(self, backend=backend)
 
     def make_optimizer(self, lr=1e-3, *, b1: float = 0.9, b2: float = 0.999,
                        eps: float = 1e-8, cleaning=None,
@@ -141,14 +156,14 @@ class Plan:
                        backend: Optional[str] = None) -> Transform:
         """``adam_from_stores(lr, self.store_tree())`` in the legacy state
         layout.  ``base_hparams`` keeps the orthogonal execution knobs
-        (dense_chunk, lazy, strict_paper); ``backend`` is accepted for
-        call-site compatibility — the dense-tree path is an XLA chunked
-        scan with no kernel-backend axis (DESIGN.md §10), sparse-rows
-        callers take the plan's stores through ``sparse_rows_adam``."""
-        del backend  # no kernel axis on the dense-tree path
+        (dense_chunk, lazy, strict_paper); ``backend`` overrides the
+        plan's own ``backend`` for this optimizer — every sketched leaf
+        then runs its fused ``update_read`` through that kernel backend
+        (DESIGN.md §14) instead of the composed chunked scan."""
+        plan = self if backend is None else self.with_backend(backend)
         hp = base_hparams if base_hparams is not None else SketchHParams()
         return adam_from_stores(
-            lr, self.store_tree(cleaning=cleaning),
+            lr, plan.store_tree(cleaning=cleaning),
             b1=(0.0 if not self.track_first_moment else b1), b2=b2, eps=eps,
             dense_chunk=hp.dense_chunk, lazy=hp.lazy,
             strict_paper=hp.strict_paper)
@@ -199,6 +214,7 @@ class Plan:
             "seed": int(self.seed),
             "track_first_moment": self.track_first_moment,
             "sketch_first_moment": self.sketch_first_moment,
+            "backend": self.backend,
             "leaves": [{
                 "path": l.path, "shape": list(l.shape), "dtype": l.dtype,
                 "mode": l.mode, "depth": int(l.depth), "width": int(l.width),
@@ -222,7 +238,8 @@ class Plan:
                    width_multiple=int(d["width_multiple"]),
                    sketch_dtype=d["sketch_dtype"], seed=int(d["seed"]),
                    track_first_moment=bool(d["track_first_moment"]),
-                   sketch_first_moment=bool(d["sketch_first_moment"]))
+                   sketch_first_moment=bool(d["sketch_first_moment"]),
+                   backend=d.get("backend"))
 
     # -- display ------------------------------------------------------------
     def table(self) -> str:

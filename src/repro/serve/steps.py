@@ -169,6 +169,7 @@ def make_online_adapt_step(n_rows: int, dim: int, *, lr=1e-4,
                            hparams: Optional[SketchHParams] = None,
                            path: str = "serve_adapt",
                            v_store=None,
+                           store_backend: Optional[str] = None,
                            dp_axis: Optional[str] = None,
                            mesh: Optional[Mesh] = None,
                            error_feedback: bool = False,
@@ -187,7 +188,10 @@ def make_online_adapt_step(n_rows: int, dim: int, *, lr=1e-4,
     configuration.  ``v_store``: an optional bound ``CountMinStore``
     (e.g. resolved from a planner ``StoreTree``) superseding the
     ``hparams`` sizing — serve-time adaptation speaks the same store
-    vocabulary as training (DESIGN.md §12).
+    vocabulary as training (DESIGN.md §12).  ``store_backend`` pins the
+    kernel backend (DESIGN.md §14), overriding both ``hparams.backend``
+    and whatever backend the ``v_store`` carries — serving fleets can
+    force e.g. 'xla' on CPU hosts while training runs 'tiled'.
 
     ``dp_axis``: replicated serving fleets adapt the SAME table from
     per-replica feedback shards — ``adapt_fn`` becomes a ``shard_map``
@@ -202,6 +206,10 @@ def make_online_adapt_step(n_rows: int, dim: int, *, lr=1e-4,
         table', opt_state' = adapt_fn(table, opt_state, ids, grad_rows)
     """
     hp = hparams if hparams is not None else SketchHParams()
+    if store_backend is not None:
+        hp = dataclasses.replace(hp, backend=store_backend)
+        if v_store is not None:
+            v_store = dataclasses.replace(v_store, backend=store_backend)
     if dp_axis is None:
         opt = opt_lib.sparse_rows_adam(
             lr, b2=b2, eps=eps, shape=(n_rows, dim), path=path, hparams=hp,

@@ -50,15 +50,17 @@ def build_optimizer(cfg: ArchConfig, mode: str, lr=1e-3,
                     cleaning: Optional[CleaningSchedule] = None,
                     kernel_backend: Optional[str] = None,
                     plan=None) -> Transform:
-    """``kernel_backend`` selects the ``repro.kernels`` registry backend
-    for the SPARSE-ROWS (ids, rows) paths — ``make_sparse_embedding_step``
-    and any ``adam_sparse_rows`` caller sharing these hparams.  The dense
-    whole-gradient leaf path of the ``countsketch_*`` transforms is an
-    XLA chunked scan and is backend-independent (DESIGN.md §10).
+    """``kernel_backend`` selects the ``repro.kernels.registry`` backend
+    for BOTH sketch hot paths: the sparse-rows (ids, rows) step and the
+    dense whole-gradient fused ``update_read`` of every sketch-backed
+    store (DESIGN.md §14) — None keeps the sparse path on 'auto' and the
+    dense path on the composed chunked-scan fallback (bit-identical
+    legacy numerics).
 
     ``plan``: a solved ``repro.plan.Plan`` — when given it supersedes the
     regex policy + global compression entirely (the plan's ``StoreTree``
-    executes instead, via ``adam_from_stores``; DESIGN.md §12).  Plans
+    executes instead, via ``adam_from_stores``; DESIGN.md §12), with
+    ``kernel_backend`` overriding the backend the plan carries.  Plans
     encode an Adam-family moment layout, so only the modes in
     ``repro.plan.MOMENT_MODES`` may be combined with one."""
     if plan is not None:

@@ -67,6 +67,21 @@ def test_registry_contents():
         K.resolve_backend("nope")
 
 
+def test_flat_api_is_registry_backed():
+    """The PR-1 flat API is now a view of the shared (kind, op) registry
+    (kernels/registry.py): the sparse-rows row is ('pair', 'adam_rows'),
+    and registering through the flat API lands there."""
+    from repro.kernels import registry
+    assert K.backends() == registry.backends("pair", "adam_rows")
+    sentinel = object()
+    K.register_backend("_test_probe", sentinel)
+    try:
+        assert registry.lookup("pair", "adam_rows", "_test_probe") \
+            is sentinel
+    finally:
+        registry._REGISTRY[("pair", "adam_rows")].pop("_test_probe")
+
+
 @pytest.mark.parametrize("depth", [1, 3])
 @pytest.mark.parametrize("track_m", [True, False])
 def test_stream_matches_ref_exactly(depth, track_m):

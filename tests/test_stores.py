@@ -49,6 +49,20 @@ class TestDenseStore:
         assert st.init().dtype == jnp.bfloat16
         assert st.bytes() == 4 * 4 * 2
 
+    def test_update_read_is_composed_ema(self):
+        """The fused op's closed-form default: decay → accumulate → read
+        (DESIGN.md §14)."""
+        st = DenseStore().bind("w", (8, 4), jnp.float32)
+        state = _arr((8, 4))
+        g = _arr((8, 4), seed=1)
+        out, est = st.update_read(state, g, 0.9)          # scale = 1-β
+        want = st.accumulate(st.decay(state, 0.9), g, scale=0.1)
+        np.testing.assert_array_equal(out, want)
+        np.testing.assert_array_equal(est, want)
+        # β=1/scale=1 (Adagrad form): pure accumulate
+        out, est = st.update_read(state, g, 1.0, scale=1.0)
+        np.testing.assert_array_equal(out, state + g)
+
 
 class TestSketchStores:
     def _bound(self, cls, n=256, d=8):
@@ -103,6 +117,35 @@ class TestSketchStores:
         # no schedule -> identity
         np.testing.assert_array_equal(
             self._bound(CountMinStore).clean(state, jnp.asarray(2)), state)
+
+    def test_update_read_linear_estimate_form(self, cls=CountSketchStore):
+        """Sketch-store ``update_read``: est_old = query, Δ = ema_delta,
+        update, est = est_old + Δ (batch semantics) — composed from the
+        primitives, one query instead of the historical two."""
+        st = self._bound(cls)
+        state = jax.random.normal(jax.random.PRNGKey(5), st.spec.shape)
+        g = _arr((256, 8), seed=2)
+        out, est = st.update_read(state, g, 0.9)
+        est_old = cs.query(st.spec, state,
+                           jnp.arange(256, dtype=jnp.int32))
+        d = cs.ema_delta(est_old, g, 0.9, 1.0 - 0.9)  # the adam form
+        np.testing.assert_array_equal(
+            out, cs.update(st.spec, state,
+                           jnp.arange(256, dtype=jnp.int32), d))
+        np.testing.assert_array_equal(est, est_old + d)
+
+    def test_update_read_strict_requeries(self):
+        st = self._bound(CountMinStore)
+        state = st.init()
+        g = jnp.abs(_arr((256, 8)))
+        out, est = st.update_read(state, g, 1.0, scale=1.0, strict=True)
+        np.testing.assert_array_equal(est, st.read(out))
+
+    def test_backend_field_rides_bind(self):
+        st = CountSketchStore(compression=4.0, width_multiple=16,
+                              backend="xla").bind("t", (256, 8),
+                                                  jnp.float32)
+        assert st.backend == "xla"
 
     def test_rejects_non_rank2(self):
         assert not CountSketchStore().accepts((64,))
