@@ -2,18 +2,29 @@
 
 Protocol at CPU scale: 200k classes hashed into R=2 meta-classifiers of
 2k meta-classes (MACH; ``repro.core.hashing.mach_class_hash``).  Each
-meta-classifier: sparse zipf features → embedding-sum → hidden → meta
-logits.  Compare:
+meta-classifier: sparse zipf features → embedding-sum → meta logits.
+Compare:
 
   adam_small_batch   — dense Adam, batch B (the memory-limited baseline)
   cs_big_batch       — β₁=0 CS-RMSProp (Theorem 5.1 optimizer, 2nd moment
                        CMS at 1% size) with batch 3.5·B — the memory the
                        sketch frees goes to batch size, as in the paper.
 
-Reports recall@10 over a down-sampled candidate set and aux-state bytes.
+Both arms run the PR-3 ``chain``/``AuxStore`` transforms — the exact
+code path training executes (``--store-backend`` routes the sketched
+arm's fused ``update_read`` through the kernel registry).  Inference
+aggregates per-replica meta-class LOG-SOFTMAX (``mach_log_scores``), not
+raw logits: replicas with different logit scales would be miscalibrated
+under raw summation.  Reports recall@10 over a down-sampled candidate
+set, per-replica losses, and aux-state bytes.
+
+The production-scale version of this protocol (multi-million-row meta
+table, sampled softmax, batch-size sweep to the memory wall) lives in
+``benchmarks/extreme_scale.py``.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -22,9 +33,12 @@ import numpy as np
 
 from benchmarks.common import save_result
 from repro.core import optimizers as O
+from repro.core import transforms as T
 from repro.core.hashing import mach_class_hash
 from repro.core.partition import SketchPolicy
+from repro.core.stores import CountMinStore, StoreTree
 from repro.data import classification_batch
+from repro.train.extreme import mach_log_scores
 
 N_CLASSES = 200_000
 N_FEATURES = 20_000
@@ -32,6 +46,22 @@ N_META = 2_048
 R = 2
 D_EMB = 64
 POL = SketchPolicy(min_rows=1024)
+
+
+def _cs_rmsprop(lr, backend=None):
+    """The β₁=0 Theorem 5.1 optimizer on the composable API: CMS 2nd
+    moment at 1% size on every policy-matched table, m dropped —
+    ``chain(scale_by_rmsprop(stores=...), scale_by_lr(lr))``."""
+    stores = StoreTree.select(
+        m=None,
+        v=CountMinStore(compression=100.0, width_multiple=16,
+                        backend=backend),
+        where=POL, default_m=None)
+    return T.chain(T.scale_by_rmsprop(stores=stores), T.scale_by_lr(lr))
+
+
+def _dense_adam(lr):
+    return T.chain(T.scale_by_adam(), T.scale_by_lr(lr))
 
 
 def _init(seed):
@@ -75,8 +105,9 @@ def _train_one(opt, class_map, steps, batch):
 
 
 def _recall_at(params_list, class_maps, k=10, n_eval=200, candidates=2000):
-    """MACH inference: aggregate meta scores over a down-sampled candidate
-    set containing the true classes (paper's evaluation shortcut)."""
+    """MACH inference: aggregate per-replica meta-class log-probabilities
+    over a down-sampled candidate set containing the true classes (the
+    paper's evaluation shortcut; calibration via ``mach_log_scores``)."""
     rng = np.random.RandomState(123)
     hits = 0
     for j in range(4):
@@ -84,10 +115,10 @@ def _recall_at(params_list, class_maps, k=10, n_eval=200, candidates=2000):
                                  n_classes=N_CLASSES, batch=n_eval // 4)
         cand = np.unique(np.concatenate(
             [b["labels"], rng.randint(0, N_CLASSES, size=candidates)]))
-        agg = np.zeros((b["labels"].shape[0], cand.size))
-        for params, cmap in zip(params_list, class_maps):
-            logits = np.asarray(_forward(params, jnp.asarray(b["features"])))
-            agg += logits[:, cmap[cand]]
+        logits_list = [
+            np.asarray(_forward(params, jnp.asarray(b["features"])))
+            for params in params_list]
+        agg = mach_log_scores(logits_list, class_maps, cand)
         topk = np.argsort(-agg, axis=1)[:, :k]
         for i, y in enumerate(b["labels"]):
             pos = np.where(cand == y)[0][0]
@@ -95,19 +126,17 @@ def _recall_at(params_list, class_maps, k=10, n_eval=200, candidates=2000):
     return hits / n_eval
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, backend: str = None):
     steps = 60 if quick else 450
     base_batch = 128
     out = {}
     for name, make_opt, batch, step_scale in [
-        ("adam_small_batch", lambda: O.adam(2e-2), base_batch, 1.0),
-        ("cs_big_batch",
-         lambda: O.countsketch_rmsprop(
-             2e-2, policy=POL,
-             hparams=O.SketchHParams(compression=100.0, width_multiple=16)),
+        ("adam_small_batch", lambda: _dense_adam(2e-2), base_batch, 1.0),
+        ("cs_big_batch", lambda: _cs_rmsprop(2e-2, backend=backend),
          int(base_batch * 3.5), 3.5),
     ]:
         params_list, maps, bytes_, t = [], [], 0, 0.0
+        replica_losses = []
         n_steps = max(10, int(steps / step_scale))  # same #examples seen
         for r in range(R):
             cmap = mach_class_hash(seed=r, num_classes=N_CLASSES,
@@ -118,13 +147,14 @@ def run(quick: bool = False):
             maps.append(cmap)
             bytes_ += O.state_bytes(st)
             t += dt
+            replica_losses.append(loss)
         out[name] = {
             "recall_at_10": _recall_at(params_list, maps),
             "aux_bytes": bytes_,
             "train_time_s": round(t, 2),
             "batch": batch,
             "steps": n_steps,
-            "final_loss": loss,
+            "replica_losses": replica_losses,
         }
     out["batch_ratio"] = out["cs_big_batch"]["batch"] / base_batch
     out["bytes_ratio"] = (out["cs_big_batch"]["aux_bytes"]
@@ -136,4 +166,11 @@ def run(quick: bool = False):
 
 
 if __name__ == "__main__":
-    print(run())
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--store-backend", default=None,
+                    help="kernel backend for the sketched arm's fused "
+                         "update_read ('ref' | 'xla' | 'tiled' | "
+                         "'interpret' | 'auto'); None = composed fallback")
+    a = ap.parse_args()
+    print(run(quick=a.quick, backend=a.store_backend))

@@ -20,6 +20,7 @@ BENCHES = [
     ("cleaning", "Fig 5: CMS cleaning ablation"),
     ("memory_time", "Tab 5/6: aux bytes + step time"),
     ("extreme", "Tab 8: MACH extreme classification"),
+    ("extreme_scale", "Tab 8 at scale: batch sweep to the memory wall"),
     ("ablations", "(ours) compression sweep / strict semantics / fold"),
     ("kernels", "(ours) sketch kernel micro + traffic model"),
     ("fused_store", "(ours) fused vs composed update_read steps/sec"),

@@ -1,2 +1,4 @@
 """Deterministic synthetic data pipelines (zipf LM + extreme classification)."""
-from repro.data.pipeline import ZipfLM, ZipfLMConfig, classification_batch  # noqa: F401
+from repro.data.pipeline import (  # noqa: F401
+    ExtremeConfig, ExtremeStream, ZipfLM, ZipfLMConfig,
+    class_of_features, classification_batch)

@@ -98,9 +98,80 @@ def classification_batch(step: int, *, n_features: int, n_classes: int,
     cdf = np.cumsum(ranks / ranks.sum())
     u = rng.random_sample((batch, nnz))
     feats = np.minimum(np.searchsorted(cdf, u), n_features - 1)
-    # deterministic learnable mapping: the class is a hash of the FIRST
-    # (dominant) feature — learnable by an embedding-sum model, zipf over
-    # classes because features are zipf (the paper's query->product shape)
-    cls = (feats[:, 0].astype(np.int64) * 2_654_435_761) % n_classes
+    # deterministic learnable mapping: the class is a hash of the
+    # minimum-rank (most frequent) feature in the example — learnable by
+    # an embedding-sum model, and head-heavy over classes because the min
+    # of nnz zipf draws concentrates on the first ranks (the paper's
+    # query->product shape; the class-frequency shape is pinned in
+    # tests/test_extreme.py)
+    cls = class_of_features(feats, n_classes)
     return {"features": feats.astype(np.int32),
             "labels": cls.astype(np.int32)}
+
+
+def class_of_features(feats: np.ndarray, n_classes: int) -> np.ndarray:
+    """The stream's label rule: hash of the per-example minimum-rank
+    (= most frequent, ids are rank-ordered) feature."""
+    return ((np.min(feats, axis=-1).astype(np.int64) * 2_654_435_761)
+            % n_classes).astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExtremeConfig:
+    """The extreme-classification stream (paper §7.3 at table scale):
+    ``nnz`` zipf features per example, labels via ``class_of_features``,
+    plus ``n_negatives`` shared sampled-softmax candidate classes drawn
+    from the same head-heavy label marginal — so candidate ids collide
+    heavily with the batch labels and each other, exercising the dedup
+    pre-pass exactly as production traffic would."""
+
+    n_features: int
+    n_classes: int
+    batch: int
+    nnz: int = 16
+    n_negatives: int = 1024
+    alpha: float = 1.05
+    seed: int = 0
+
+
+class ExtremeStream:
+    """Stateless stream: ``batch(step)`` is deterministic in (cfg, step).
+
+    Returns ``features`` (B, nnz) int32 zipf feature ids, ``labels`` (B,)
+    int32 class ids, ``negatives`` (n_negatives,) int32 class ids.  Class
+    ids live in [0, n_classes); MACH consumers map them through a
+    meta-class hash on the host (``core.hashing.mach_class_hash``)."""
+
+    def __init__(self, cfg: ExtremeConfig):
+        self.cfg = cfg
+        ranks = np.arange(1, cfg.n_features + 1, dtype=np.float64)
+        p = ranks ** (-cfg.alpha)
+        self._cdf = np.cumsum(p / p.sum())
+
+    def _zipf_feats(self, rng: np.random.RandomState, shape) -> np.ndarray:
+        u = rng.random_sample(shape)
+        return np.minimum(np.searchsorted(self._cdf, u),
+                          self.cfg.n_features - 1)
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.cfg
+        rng = np.random.RandomState(
+            (cfg.seed * 99_991 + step * 7) % (2**31 - 1))
+        feats = self._zipf_feats(rng, (cfg.batch, cfg.nnz))
+        labels = class_of_features(feats, cfg.n_classes)
+        # negatives ride a decorrelated stream but the SAME marginal as
+        # the labels (hash of a min-of-nnz zipf draw), so the candidate
+        # set is head-heavy and duplicate-rich
+        nrng = np.random.RandomState(
+            (cfg.seed * 77_783 + step * 13 + 7) % (2**31 - 1))
+        nfeats = self._zipf_feats(nrng, (cfg.n_negatives, cfg.nnz))
+        negs = class_of_features(nfeats, cfg.n_classes)
+        return {"features": feats.astype(np.int32),
+                "labels": labels.astype(np.int32),
+                "negatives": negs.astype(np.int32)}
+
+    def batches(self, start_step: int = 0):
+        step = start_step
+        while True:
+            yield self.batch(step)
+            step += 1

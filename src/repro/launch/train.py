@@ -103,6 +103,84 @@ def run_sparse_embedding(args, mesh) -> int:
     return 0 if last < first else 1
 
 
+class _MetaStream:
+    """Host-side MACH mapping for one replica: the extreme stream's
+    true-label ids → this replica's meta-class ids (``cmap``), applied to
+    labels AND sampled-softmax negatives before the batch reaches jit."""
+
+    def __init__(self, stream, cmap):
+        self.stream = stream
+        self.cmap = cmap
+
+    def batch(self, step):
+        b = self.stream.batch(step)
+        return {"features": b["features"],
+                "labels": self.cmap[b["labels"]].astype(np.int32),
+                "negatives": self.cmap[b["negatives"]].astype(np.int32)}
+
+
+def run_extreme(args, mesh) -> int:
+    """The MACH + sampled-softmax workload (paper §7.3 at table scale):
+    ``--replicas`` independent meta-classifiers over an ``--meta-rows``
+    output table, gradients as (ids, rows) through the dedup pre-pass,
+    sketch sizing solved by the planner from ``--aux-budget`` and the DP
+    sparse step moving (depth, width, dim) sketches under ``--dp``."""
+    from repro.core.optimizers import SketchHParams
+    from repro.data import ExtremeStream
+    from repro.train.extreme import (MachConfig, make_extreme_step,
+                                     plan_extreme)
+
+    cfg = MachConfig(n_classes=args.classes, n_meta=args.meta_rows,
+                     n_features=args.features, dim=args.extreme_dim,
+                     n_replicas=args.replicas, nnz=args.nnz,
+                     n_negatives=args.negatives, seed=args.seed)
+    plan = None
+    if args.aux_budget:
+        plan = plan_extreme(cfg, args.aux_budget, optimizer=args.optimizer,
+                            backend=args.store_backend or None)
+        print(plan.table(), flush=True)
+    hp = SketchHParams(compression=args.sparse_compression,
+                       backend=args.store_backend or None)
+    dp_axis = "data" if args.dp else None
+    init_fn, step_fn, opts = make_extreme_step(
+        cfg, optimizer=args.optimizer, lr=args.lr, hparams=hp, plan=plan,
+        backend=args.store_backend or None, dp_axis=dp_axis, mesh=mesh,
+        error_feedback=args.error_feedback)
+
+    cmaps = cfg.class_maps()
+    finals = []
+    with shd.active_mesh(mesh):
+        jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+        for r in range(cfg.n_replicas):
+            data = _MetaStream(ExtremeStream(cfg.data_config(args.batch)),
+                               cmaps[r])
+            params = init_fn(jax.random.PRNGKey(args.seed + r))
+            opt_state = {p: o.init() for p, o in opts.items()}
+            ckpt = (os.path.join(args.ckpt_dir, f"replica{r}")
+                    if args.ckpt_dir else None)
+            tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=ckpt,
+                                 ckpt_every=args.ckpt_every)
+            trainer = Trainer(jit_step, data, tcfg, plan=plan)
+            state = trainer.restore_or_init(
+                TrainState(step=0, params=params, opt_state=opt_state))
+            state = trainer.fit(state)
+            hist = trainer.history
+            # disjoint head/tail windows even on short smoke runs
+            w = max(1, min(10, len(hist) // 3))
+            first = np.mean([h["loss"] for h in hist[:w]])
+            last = np.mean([h["loss"] for h in hist[-w:]])
+            finals.append((first, last))
+            print(f"[train] workload=extreme replica={r} "
+                  f"steps={state.step} loss {first:.4f} -> {last:.4f}",
+                  flush=True)
+    print(f"[train] workload=extreme classes={cfg.n_classes:,} "
+          f"meta_rows={cfg.n_meta:,} replicas={cfg.n_replicas} "
+          f"optimizer={args.optimizer} dp={bool(args.dp)} "
+          f"batch={args.batch} per-replica losses "
+          f"{[round(float(l), 4) for _, l in finals]}")
+    return 0 if all(l < f for f, l in finals) else 1
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2_0_5b")
@@ -120,13 +198,31 @@ def main() -> int:
                     help="explicit shard_map data parallelism over a "
                          "'data' axis spanning every local device")
     ap.add_argument("--workload", default="lm",
-                    choices=["lm", "sparse_embedding"],
+                    choices=["lm", "sparse_embedding", "extreme"],
                     help="lm: full model train step; sparse_embedding: "
                          "the (ids, grad-rows) table regime (sketched "
-                         "all-reduce under --dp)")
+                         "all-reduce under --dp); extreme: MACH + sampled "
+                         "softmax over a --meta-rows output table "
+                         "(paper §7.3 — the big-batch regime)")
     ap.add_argument("--sparse-rows", type=int, default=65536)
     ap.add_argument("--sparse-dim", type=int, default=64)
     ap.add_argument("--sparse-compression", type=float, default=5.0)
+    ap.add_argument("--classes", type=int, default=1_000_000,
+                    help="extreme: true-label space (MACH hashes it down "
+                         "to --meta-rows per replica)")
+    ap.add_argument("--meta-rows", type=int, default=131_072,
+                    help="extreme: rows of each replica's meta output "
+                         "table — the table the optimizer state covers")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="extreme: MACH meta-classifier count R")
+    ap.add_argument("--features", type=int, default=65_536,
+                    help="extreme: sparse feature vocabulary")
+    ap.add_argument("--extreme-dim", type=int, default=64,
+                    help="extreme: embedding width of both tables")
+    ap.add_argument("--nnz", type=int, default=16,
+                    help="extreme: active features per example")
+    ap.add_argument("--negatives", type=int, default=1024,
+                    help="extreme: shared sampled-softmax negatives")
     ap.add_argument("--error-feedback", action="store_true",
                     help="accumulate the 2nd-moment cross-replica term "
                          "in a residual sketch (MicroAdam-style)")
@@ -158,6 +254,12 @@ def main() -> int:
 
     if args.workload == "sparse_embedding":
         return run_sparse_embedding(args, mesh)
+    if args.workload == "extreme":
+        # the extreme optimizer default is the paper's Theorem 5.1 choice,
+        # not the LM default — only override when the user didn't pick one
+        if args.optimizer == ap.get_default("optimizer"):
+            args.optimizer = "cs_rmsprop"
+        return run_extreme(args, mesh)
 
     cfg = configs.get(args.arch)
     if args.reduced:

@@ -19,7 +19,8 @@ from repro.plan.accounting import (  # noqa: F401
 from repro.plan.allocator import (  # noqa: F401
     leaf_candidates, min_budget_bytes, plan_for_params, water_fill)
 from repro.plan.cli import (  # noqa: F401
-    MOMENT_MODES, parse_budget, params_shapes_for_config, plan_for_config)
+    MOMENT_MODES, parse_budget, params_shapes_for_config, plan_for_config,
+    plan_for_tables)
 from repro.plan.error_model import TableStats, measure_freqs  # noqa: F401
 from repro.plan.plan import (  # noqa: F401
     InfeasibleBudgetError, LeafPlan, Plan, MODE_DENSE, MODE_RANK1,

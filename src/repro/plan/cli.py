@@ -102,6 +102,44 @@ def plan_for_config(cfg: ArchConfig, budget, *, optimizer: str = "cs_adam",
         track_first_moment=track, sketch_first_moment=sketch_first)
 
 
+def plan_for_tables(shapes, budget, *, optimizer: str = "cs_rmsprop",
+                    stats=None, default_alpha: float = 1.1, depth: int = 3,
+                    width_multiple: int = 256,
+                    sketch_dtype: str = "float32", seed: int = 0) -> Plan:
+    """Solve a plan for bare embedding/softmax tables — ``shapes`` maps
+    leaf paths to (rows, dim) — with no ``ArchConfig`` in sight.  The
+    extreme-classification workload sizes its MACH meta table and feature
+    embedding this way (``repro.train.extreme``): the solved widths come
+    from the same water-fill as the full-model planner, so ``--aux-budget``
+    means the same thing on every launch path.
+
+    ``budget`` may be an int (bytes) or any ``parse_budget`` string
+    ('floor' | '0.25x' | '512MiB' | raw bytes; 'config' needs an arch and
+    is rejected here).  Tables without a ``stats`` entry fall back to
+    Zipf(``default_alpha``) traffic."""
+    if optimizer not in MOMENT_MODES:
+        raise ValueError(
+            f"the planner executes Adam-family moment layouts only "
+            f"({sorted(MOMENT_MODES)}); optimizer {optimizer!r} has no "
+            f"plan mapping — run it without an aux budget")
+    track, sketch_first = MOMENT_MODES[optimizer]
+    import jax.numpy as jnp
+    ps = {path: jax.ShapeDtypeStruct(tuple(int(s) for s in shape),
+                                     jnp.float32)
+          for path, shape in dict(shapes).items()}
+    if not isinstance(budget, int):
+        dense = accounting.dense_budget_bytes(ps, track_first_moment=track)
+        floor = allocator.min_budget_bytes(
+            ps, stats=stats, default_alpha=default_alpha, depth=depth,
+            width_multiple=width_multiple, sketch_dtype=sketch_dtype,
+            track_first_moment=track, sketch_first_moment=sketch_first)
+        budget = parse_budget(budget, dense_bytes=dense, floor_bytes=floor)
+    return allocator.plan_for_params(
+        ps, budget, stats=stats, default_alpha=default_alpha, depth=depth,
+        width_multiple=width_multiple, sketch_dtype=sketch_dtype, seed=seed,
+        track_first_moment=track, sketch_first_moment=sketch_first)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen2_0_5b")

@@ -208,6 +208,32 @@ def make_train_step(cfg: ArchConfig, *, optimizer: str = "cs_adam",
                      dp_axis=dp_axis)
 
 
+def resolve_sparse_stores(stores, path: str, shape: Tuple[int, int]):
+    """Resolve a ``StoreTree`` (e.g. a planner ``Plan.store_tree()``) at
+    ``path`` for one (n, d) table driven through the sparse-rows (ids,
+    grad-rows) kernels.  Returns ``(m_store, v_store, track_first_moment)``
+    with the kernel constraints enforced: the 2nd moment must be
+    sketch-backed and the 1st moment a signed count-sketch or absent
+    (β₁=0) — the tree's moment layout is authoritative.
+
+    Shared by ``make_sparse_embedding_step`` and the extreme-
+    classification workload (``repro.train.extreme``)."""
+    m_store, v_store = stores.resolve(path, shape, jnp.float32)
+    if v_store is None or v_store.kind not in ("countmin", "sketch"):
+        raise ValueError(
+            f"the sparse-rows pipeline needs a sketch-backed v store "
+            f"at {path!r}; the StoreTree resolved "
+            f"{None if v_store is None else v_store.kind!r} — plan a "
+            f"sketch for this table or drop `stores`")
+    if m_store is not None and m_store.kind != "sketch":
+        raise ValueError(
+            f"the sparse-rows kernels keep the 1st moment in a signed "
+            f"count-sketch or drop it (β₁=0); the StoreTree resolved a "
+            f"{m_store.kind!r} m store at {path!r} — use "
+            f"track_first_moment=False or a sketch-m plan")
+    return m_store, v_store, m_store is not None
+
+
 def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
                                b1: float = 0.9, b2: float = 0.999,
                                eps: float = 1e-8,
@@ -258,22 +284,10 @@ def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
     hp = hparams if hparams is not None else SketchHParams()
     m_store = v_store = None
     if stores is not None:
-        m_store, v_store = stores.resolve(path, (n_rows, dim), jnp.float32)
-        if v_store is None or v_store.kind not in ("countmin", "sketch"):
-            raise ValueError(
-                f"the sparse-rows pipeline needs a sketch-backed v store "
-                f"at {path!r}; the StoreTree resolved "
-                f"{None if v_store is None else v_store.kind!r} — plan a "
-                f"sketch for this table or drop `stores`")
-        if m_store is not None and m_store.kind != "sketch":
-            raise ValueError(
-                f"the sparse-rows kernels keep the 1st moment in a signed "
-                f"count-sketch or drop it (β₁=0); the StoreTree resolved a "
-                f"{m_store.kind!r} m store at {path!r} — use "
-                f"track_first_moment=False or a sketch-m plan")
         # the tree's moment layout is authoritative: a β₁=0 plan
         # (m=None) must not be overridden by this function's default
-        track_first_moment = m_store is not None
+        m_store, v_store, track_first_moment = resolve_sparse_stores(
+            stores, path, (n_rows, dim))
     if dp_axis is None:
         opt = opt_lib.sparse_rows_adam(
             lr, b1=b1, b2=b2, eps=eps, shape=(n_rows, dim), path=path,

@@ -166,3 +166,55 @@ def test_prop_dedup_invariants_fallback():
         ids = rng.randint(0, pool, size=k)
         rows = rng.randn(k, 4).astype(np.float32)
         _check_batch(ids, rows)
+
+
+class TestMillionRowIdSpace:
+    """The extreme-classification regime: heavy-duplicate zipf batches
+    over a ≥1M-row id space (ISSUE 6) — dedup + scatter_back must stay
+    exact when ids span the full multi-million-row table."""
+
+    N_ROWS = 1 << 21          # 2M-row id space
+    D = 8
+
+    def _zipf_ids(self, k, seed=0, alpha=1.05):
+        rng = np.random.RandomState(seed)
+        ranks = np.arange(1, self.N_ROWS + 1, dtype=np.float64) ** (-alpha)
+        cdf = np.cumsum(ranks / ranks.sum())
+        return np.minimum(np.searchsorted(cdf, rng.random_sample(k)),
+                          self.N_ROWS - 1).astype(np.int64)
+
+    def test_zipf_batch_heavy_duplicates(self):
+        ids_np = self._zipf_ids(4096)
+        # the marginal must actually be duplicate-rich AND reach deep rows
+        # (alpha=1.05 over 2M ranks: ~half the draws are repeats)
+        assert len(set(ids_np.tolist())) < (3 * len(ids_np)) // 4
+        assert ids_np.max() > 1_000_000
+        rows_np = np.random.RandomState(1).randn(4096, self.D)
+        rows_np = rows_np.astype(np.float32)
+        b = dd.dedup_rows(jnp.asarray(ids_np, jnp.int32),
+                          jnp.asarray(rows_np))
+        nu = int(b.n_unique)
+        uniq = np.unique(ids_np)
+        assert nu == uniq.size
+        np.testing.assert_array_equal(np.asarray(b.unique_ids[:nu]), uniq)
+        # per-id sums match the dense-gradient oracle (sparse oracle: the
+        # dense (2M, d) buffer itself is the thing production can't afford)
+        order = np.argsort(ids_np, kind="stable")
+        splits = np.searchsorted(ids_np[order], uniq)
+        oracle = np.add.reduceat(rows_np[order], splits, axis=0)
+        np.testing.assert_allclose(np.asarray(b.rows[:nu]), oracle,
+                                   atol=1e-4)
+
+    def test_scatter_back_exactly_once_at_scale(self):
+        ids_np = self._zipf_ids(2048, seed=7)
+        rows = jnp.asarray(np.ones((2048, self.D), np.float32))
+        b = dd.dedup_rows(jnp.asarray(ids_np, jnp.int32), rows)
+        out = np.asarray(dd.scatter_back(b, b.rows))
+        # each unique id's summed row lands exactly once: total mass and
+        # per-first-occurrence placement both survive the round trip
+        np.testing.assert_allclose(out.sum(), rows.sum(), rtol=1e-6)
+        uniq, first_pos, counts = np.unique(ids_np, return_index=True,
+                                            return_counts=True)
+        nonzero_rows = np.where(np.abs(out).sum(axis=1) > 0)[0]
+        np.testing.assert_array_equal(np.sort(first_pos), nonzero_rows)
+        np.testing.assert_allclose(out[first_pos][:, 0], counts, atol=1e-5)

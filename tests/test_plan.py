@@ -290,3 +290,56 @@ class TestConfigPlanning:
         assert plan.predicted_aux_bytes <= cfg.aux_budget_bytes
         assert plan.n_by_mode()[MODE_SKETCH] >= 1
         assert cfg.reduced().aux_budget_bytes is None
+
+
+class TestPlanForTables:
+    """plan_for_tables: the ArchConfig-free entry the extreme workload
+    sizes its tables through (ISSUE 6) — a 1M-row output table solved
+    under an --aux-budget-style string."""
+
+    SHAPES = {"class_head/table": (1 << 20, 16),
+              "tok_embed/table": (1 << 14, 16)}
+
+    def test_million_row_table_under_budget(self):
+        from repro.plan import plan_for_tables
+        stats = {p: TableStats(alpha=1.05) for p in self.SHAPES}
+        plan = plan_for_tables(self.SHAPES, "0.05x", optimizer="cs_rmsprop",
+                               stats=stats)
+        # β₁=0 layout: no first moment anywhere
+        assert not plan.track_first_moment
+        big = plan.leaf("class_head/table")
+        assert big.mode == MODE_SKETCH
+        assert plan.predicted_aux_bytes <= plan.budget_bytes
+        # the budget string means what it means everywhere: 5% of the
+        # dense v-only cost (v = rows × dim × 4 bytes per table)
+        dense = sum(n * d * 4 for n, d in self.SHAPES.values())
+        assert plan.budget_bytes == int(0.05 * dense)
+        # measured ground truth, not the allocator's own arithmetic
+        ps = {p: jax.ShapeDtypeStruct(s, jnp.float32)
+              for p, s in self.SHAPES.items()}
+        measured = accounting.measure_aux_bytes(
+            jax.eval_shape(plan.make_optimizer(1e-3).init, ps))
+        assert measured == plan.predicted_aux_bytes
+
+    def test_resolves_sparse_rows_stores(self):
+        """The solved plan's StoreTree satisfies the sparse-rows kernel
+        contract at both tables (what make_extreme_step enforces)."""
+        from repro.plan import plan_for_tables
+        from repro.train.steps import resolve_sparse_stores
+        plan = plan_for_tables(self.SHAPES, "0.05x", optimizer="cs_rmsprop")
+        tree = plan.store_tree()
+        for path, shape in self.SHAPES.items():
+            m, v, track = resolve_sparse_stores(tree, path, shape)
+            assert m is None and not track
+            assert v.kind == "countmin"
+            assert v.spec.width <= shape[0]
+
+    def test_infeasible_budget_raises(self):
+        from repro.plan import plan_for_tables
+        with pytest.raises(InfeasibleBudgetError):
+            plan_for_tables(self.SHAPES, 1024, optimizer="cs_rmsprop")
+
+    def test_rejects_unplannable_optimizer(self):
+        from repro.plan import plan_for_tables
+        with pytest.raises(ValueError, match="moment layouts"):
+            plan_for_tables(self.SHAPES, "0.5x", optimizer="dense_adam")
