@@ -48,6 +48,13 @@ def train_small_lm(opt: O.Transform, *, cfg: Optional[ArchConfig] = None,
                    collect_aux: Optional[Callable] = None) -> Dict[str, Any]:
     """Train a small LM on the zipf stream; returns losses / eval ppl /
     state bytes / wall time (one jit'd step, timed after warmup)."""
+    if steps < 2:
+        # step 0 is compile warmup; the timer starts at step 1.  With
+        # fewer than 2 steps there are ZERO measured iterations and the
+        # old code silently reported wall≈0 / steps_per_s=0 — a benchmark
+        # that "ran" but measured nothing.  Fail loudly instead.
+        raise ValueError(f"train_small_lm needs steps >= 2 (got {steps}): "
+                         f"step 0 is warmup, timing starts at step 1")
     cfg = cfg or small_lm_cfg()
     params = tf.init(jax.random.PRNGKey(seed), cfg)
     data = ZipfLM(ZipfLMConfig(vocab_size=cfg.vocab_size, seq_len=seq,
@@ -93,8 +100,11 @@ def train_small_lm(opt: O.Transform, *, cfg: Optional[ArchConfig] = None,
                                           jnp.asarray(eb["labels"]))))
             evals.append({"step": i + 1, "loss": float(np.mean(ls)),
                           "ppl": float(np.exp(np.mean(ls)))})
-    jax.block_until_ready(losses and l)
-    wall = time.perf_counter() - (t0 or time.perf_counter())
+    # `l` is always bound and t0 always set (steps >= 2 enforced above);
+    # the old `losses and l` guard skipped the device sync entirely when
+    # the loop hadn't run, and `t0 or ...` turned that into wall ≈ 0
+    jax.block_until_ready(l)
+    wall = time.perf_counter() - t0
     return {
         "final_loss": float(np.mean(losses[-20:])),
         "final_ppl": float(np.exp(np.mean(losses[-20:]))),

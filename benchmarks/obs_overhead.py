@@ -1,0 +1,175 @@
+"""(ours) Observability overhead — metrics-on vs metrics-off steps/s A/B
+(DESIGN.md §15).
+
+Protocol: the sparse_embedding launcher workload (zipf ids over a
+sketched (n, d) table, CS-Adam sparse-rows step) at a production-
+representative shape — a 64k-row table, d=64, 2048 ids/step — run twice
+with the SAME jit'd step shape:
+
+  off   bare loop — no writer, no probe, no phase spans
+  on    full telemetry at the default ``log_every=10``: shadow probe
+        state (K=16 rows) inside the jit'd step, RunObserver windowing
+        every step's host record, table-stats + probe-error host fetch
+        and a JSONL write at every log boundary, phase spans around the
+        loop
+
+The telemetry contract is that everything between log boundaries stays
+on device, so the A/B should be within noise; the acceptance target for
+the committed run is < 2% median overhead.  Wall-clock on this shared
+CPU container drifts by >10% over seconds, so arm-level A/B (run all of
+off, then all of on) measures the container, not the telemetry.  The
+protocol instead interleaves at segment granularity: both arms' jitted
+steps stay live, and the loop alternates one 2·log_every-step segment
+of each (every ON segment contains exactly two log boundaries, so the
+boundary cost is fully represented).  Adjacent segments see the same
+machine state; the committed JSON reports the median over all segment
+pairs.  Results: experiments/bench/obs_overhead.json.
+
+    PYTHONPATH=src python -m benchmarks.obs_overhead --quick
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.common import save_result
+except ImportError:  # run as a script: python benchmarks/obs_overhead.py
+    import pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.common import save_result
+
+from repro.data import ZipfLM, ZipfLMConfig
+from repro.obs import (MetricsWriter, PhaseTimer, RunObserver, TableMonitor,
+                       TableProbe, predicted_table_errors)
+from repro.train.steps import (make_sparse_embedding_step,
+                               sparse_embedding_stores)
+
+N_ROWS, DIM, BATCH, SEQ = 65536, 64, 32, 64
+LOG_EVERY, PROBE_ROWS = 10, 16
+
+
+def _build(with_probe: bool):
+    init_fn, step_fn, opt = make_sparse_embedding_step(N_ROWS, DIM, lr=1e-3)
+    table = init_fn(jax.random.PRNGKey(0))
+    target = init_fn(jax.random.PRNGKey(1))
+    probe = (TableProbe.for_table("sparse_embedding", N_ROWS, k=PROBE_ROWS)
+             if with_probe else None)
+    opt_state = opt.init()
+    if probe is not None:
+        opt_state = dict(opt_state, probe=probe.init(DIM))
+
+    def train_step(table, opt_state, ids):
+        rows = table[ids] - target[ids]
+        loss = jnp.mean(jnp.square(rows))
+        inner = {k: v for k, v in opt_state.items() if k != "probe"}
+        table, inner = step_fn(table, inner, ids, rows)
+        if probe is not None:
+            inner = dict(inner, probe=probe.update(opt_state["probe"],
+                                                   ids, rows))
+        return table, inner, {"loss": loss}
+
+    return jax.jit(train_step, donate_argnums=(0, 1)), table, opt_state, probe
+
+
+SEG = 2 * LOG_EVERY  # segment = exactly two log boundaries
+
+
+def _segment_pairs(n_pairs: int, *, seed: int = 0) -> list:
+    """Run both arms segment-interleaved; returns per-pair overheads.
+
+    Iteration timing for the ON arm includes the host-side observer work
+    (windowing + boundary fetch + JSONL write), so the full telemetry
+    cost lands in every ON segment.  Both arms consume the SAME ids per
+    in-segment position, so the compared work is identical."""
+    off_step, off_table, off_state, _ = _build(with_probe=False)
+    on_step, on_table, on_state, probe = _build(with_probe=True)
+    data = ZipfLM(ZipfLMConfig(vocab_size=N_ROWS, seq_len=SEQ,
+                               global_batch=BATCH, seed=seed))
+    tmp = tempfile.TemporaryDirectory()
+    m_store, v_store = sparse_embedding_stores(N_ROWS, DIM)
+    mon = TableMonitor(
+        path="sparse_embedding", m_store=m_store, v_store=v_store,
+        probe=probe,
+        predicted=predicted_table_errors(m_store, v_store, N_ROWS))
+    observer = RunObserver(MetricsWriter(tmp.name, run_meta={"bench": 1}),
+                           monitors=[mon], log_every=LOG_EVERY,
+                           phase_timer=PhaseTimer())
+
+    def one_ids(i):
+        b = data.batch(i)
+        return jnp.asarray(b["tokens"]).reshape(-1).astype(jnp.int32)
+
+    # warmup covers both train-step compiles AND the monitor's one-time
+    # collect-fn compile at the first log boundary — steady-state
+    # telemetry cost is the claim, not jit compilation
+    on_i = 0
+    for w in range(LOG_EVERY + 1):
+        ids = one_ids(w)
+        off_table, off_state, m = off_step(off_table, off_state, ids)
+        float(m["loss"])  # both arms record loss history — every real
+        on_i += 1         # training loop does; the A/B isolates telemetry
+        t = time.perf_counter()
+        on_table, on_state, m = on_step(on_table, on_state, ids)
+        jax.block_until_ready(m["loss"])
+        observer.on_step(on_i, {"step": on_i,
+                                "time_s": time.perf_counter() - t,
+                                "loss": float(m["loss"])}, on_state)
+
+    pairs = []
+    for p in range(n_pairs):
+        ids_seg = [one_ids(LOG_EVERY + 1 + p * SEG + j) for j in range(SEG)]
+        t0 = time.perf_counter()
+        for ids in ids_seg:
+            off_table, off_state, m = off_step(off_table, off_state, ids)
+            float(m["loss"])  # see warmup note: loss history in both arms
+        t_off = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for ids in ids_seg:
+            on_i += 1
+            t = time.perf_counter()
+            on_table, on_state, m = on_step(on_table, on_state, ids)
+            jax.block_until_ready(m["loss"])
+            observer.on_step(on_i, {"step": on_i,
+                                    "time_s": time.perf_counter() - t,
+                                    "loss": float(m["loss"])}, on_state)
+        t_on = time.perf_counter() - t0
+        pairs.append({"step_ms_off": t_off / SEG * 1e3,
+                      "step_ms_on": t_on / SEG * 1e3,
+                      "overhead": (t_on - t_off) / t_off})
+    observer.close(on_i, on_state)
+    tmp.cleanup()
+    return pairs
+
+
+def run(quick: bool = False, repeats: int = 3) -> str:
+    n_pairs = 8 if quick else 16 * max(1, repeats)
+    pairs = _segment_pairs(n_pairs)
+    med = float(np.median([p["overhead"] for p in pairs]))
+    payload = {
+        "protocol": {"n_rows": N_ROWS, "dim": DIM, "batch": BATCH,
+                     "seq": SEQ, "log_every": LOG_EVERY,
+                     "probe_rows": PROBE_ROWS, "segment_steps": SEG,
+                     "n_pairs": n_pairs,
+                     "scoring": "median over interleaved segment pairs"},
+        "pairs": pairs,
+        "median_overhead": med,
+        "target": "< 0.02 at the default log_every",
+    }
+    save_result("obs_overhead", payload)
+    return (f"median telemetry overhead {med * 100:.2f}% "
+            f"({n_pairs} interleaved {SEG}-step segment pairs)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+    print(run(quick=args.quick, repeats=args.repeats))

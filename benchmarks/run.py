@@ -24,6 +24,7 @@ BENCHES = [
     ("ablations", "(ours) compression sweep / strict semantics / fold"),
     ("kernels", "(ours) sketch kernel micro + traffic model"),
     ("fused_store", "(ours) fused vs composed update_read steps/sec"),
+    ("obs_overhead", "(ours) telemetry on/off steps/s A-B"),
     ("roofline", "(ours) dry-run roofline tables"),
 ]
 

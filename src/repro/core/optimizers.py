@@ -524,6 +524,23 @@ def _sparse_rows_stores(shape: Tuple[int, int], path: str,
     return (m_store if track_first_moment else None), v_store
 
 
+def sparse_rows_stores(shape: Tuple[int, int], path: str = "sparse_rows",
+                       hparams: SketchHParams = SketchHParams(), *,
+                       track_first_moment: bool = True,
+                       cleaning: Optional[CleaningSchedule] = None,
+                       m_store: Optional[AuxStore] = None,
+                       v_store: Optional[AuxStore] = None
+                       ) -> Tuple[Optional[AuxStore], AuxStore]:
+    """The EXACT (m_store, v_store) pair a ``sparse_rows_adam``(-dp) built
+    with the same arguments binds — public so out-of-band consumers (the
+    ``repro.obs`` table monitors, benchmarks) can read/``stats`` the same
+    codecs the optimizer updates, instead of re-deriving specs by hand."""
+    return _sparse_rows_stores(shape, path, hparams,
+                               track_first_moment=track_first_moment,
+                               cleaning=cleaning, m_store=m_store,
+                               v_store=v_store)
+
+
 def apply_sparse_updates(table: jnp.ndarray, updates) -> jnp.ndarray:
     """Apply ``sparse_rows_adam`` updates: scatter-ADD row updates at their
     ids (correct under every backend; see ``kernels.adam_rows``)."""

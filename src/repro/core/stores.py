@@ -143,6 +143,13 @@ class AuxStore:
         """Cleaning hook (paper §4) — identity except on ``CountMinStore``."""
         return state
 
+    def stats(self, state) -> Dict[str, Any]:
+        """Cheap on-device health gauges for the observability layer
+        (DESIGN.md §15): a dict of scalar ``jnp`` values computed WITHOUT
+        a host sync — callers (``obs.probes.TableMonitor``) fetch them
+        only at ``log_every`` boundaries.  Base: empty."""
+        return {}
+
 
 @dataclasses.dataclass(frozen=True)
 class DenseStore(AuxStore):
@@ -180,6 +187,15 @@ class DenseStore(AuxStore):
         if state is not None:
             return _size(state.shape) * jnp.dtype(state.dtype).itemsize
         return _size(self.shape) * jnp.dtype(self.dtype).itemsize
+
+    def stats(self, state) -> Dict[str, Any]:
+        # same bounded-cost sampling as the sketch stores: a dense
+        # (n_rows, dim) table can dwarf the sketches it is compared to
+        flat = state.reshape(-1).astype(jnp.float32)
+        stride = max(int(flat.size) // _SketchStoreBase.STATS_SAMPLE_CELLS, 1)
+        f = flat[::stride]
+        return {"occupancy": jnp.mean((f != 0.0).astype(jnp.float32)),
+                "mass": jnp.sum(jnp.abs(f)) * stride}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -292,6 +308,49 @@ class _SketchStoreBase(AuxStore):
     def bytes(self, state=None) -> int:
         return self.spec.nbytes()
 
+    # Stats reductions scan at most this many sketch cells.  A full-array
+    # pass over depth×width×dim cells costs more than the O(touched-rows)
+    # train step it is observing; above the cap the gauges switch to a
+    # deterministic strided sample, which keeps each log-boundary collect
+    # cheap no matter how large the sketch is planned.  8k samples put
+    # ~1% standard error on the fraction gauges — far below the report's
+    # warning thresholds (0.85 occupancy, 3x error ratio).
+    STATS_SAMPLE_CELLS = 8192
+
+    def stats(self, state) -> Dict[str, Any]:
+        """Sketch-health gauges (all on-device scalars):
+
+          * ``occupancy`` — fraction of nonzero cells.  A sketch whose
+            buckets are all live has no headroom left for new heavy
+            hitters (the saturation signal the re-planner needs);
+          * ``mass`` — total absolute cell mass Σ|S|;
+          * ``max_cell`` — the heaviest single cell (heavy-hitter
+            concentration);
+          * ``sign_cancel`` — the fraction of absolute mass lost to sign
+            cancellation in the net sum, ``1 − |ΣS| / Σ|S|``.  For a
+            signed count-sketch this tracks how much colliding mass the
+            random signs are cancelling (≈1 when collisions dominate and
+            cancel as designed, ≈0 when a few same-sign rows dominate);
+            for a count-min it tracks negative-delta cancellation from
+            the EMA's ``(1−β)(g²−v̂)`` increments.
+
+        Sketches above ``STATS_SAMPLE_CELLS`` cells are sampled with a
+        deterministic stride: occupancy / sign_cancel become sampled
+        fractions, ``mass`` is scaled back up by the stride, and
+        ``max_cell`` is the sampled max (a lower bound on the true max).
+        Hash buckets are uniform by construction, so a strided slice is
+        an unbiased cell sample."""
+        flat = state.reshape(-1).astype(jnp.float32)
+        stride = max(int(flat.size) // self.STATS_SAMPLE_CELLS, 1)
+        f = flat[::stride]
+        absmass = jnp.sum(jnp.abs(f))
+        return {
+            "occupancy": jnp.mean((f != 0.0).astype(jnp.float32)),
+            "mass": absmass * stride,
+            "max_cell": jnp.max(jnp.abs(f)),
+            "sign_cancel": 1.0 - jnp.abs(jnp.sum(f)) / (absmass + 1e-30),
+        }
+
 
 @dataclasses.dataclass(frozen=True)
 class CountSketchStore(_SketchStoreBase):
@@ -312,7 +371,27 @@ class CountMinStore(_SketchStoreBase):
     _signed = False
 
     def clean(self, state, step):
-        return maybe_clean(self.cleaning, state, step)
+        import jax
+        with jax.named_scope("obs.clean"):
+            return maybe_clean(self.cleaning, state, step)
+
+    def stats(self, state) -> Dict[str, Any]:
+        out = super().stats(state)
+        if self.cleaning is not None:
+            # mass the NEXT clean will remove: cleaning multiplies the
+            # sketch by alpha, so (1−alpha)·Σ|S| leaves when it fires —
+            # the per-clean "mass removed" gauge of the telemetry
+            out["clean_next_removes"] = ((1.0 - self.cleaning.alpha)
+                                         * out["mass"])
+        return out
+
+    def cleans_between(self, start_step: int, end_step: int) -> int:
+        """How many cleanings fired on steps in ``(start, end]`` — host-
+        side schedule arithmetic for the log-interval telemetry."""
+        if self.cleaning is None or end_step <= start_step:
+            return 0
+        every = self.cleaning.every
+        return max(end_step // every - max(start_step, 0) // every, 0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -364,6 +443,12 @@ class Rank1Store(AuxStore):
                     + _size(state.c.shape) * jnp.dtype(state.c.dtype).itemsize)
         n, d = self.shape
         return (n + d) * 4
+
+    def stats(self, state) -> Dict[str, Any]:
+        return {"occupancy": jnp.mean((state.r != 0.0).astype(jnp.float32)),
+                "mass": jnp.sum(jnp.abs(state.r)) + jnp.sum(jnp.abs(state.c)),
+                "r_norm": jnp.linalg.norm(state.r),
+                "c_norm": jnp.linalg.norm(state.c)}
 
 
 # ---------------------------------------------------------------------------

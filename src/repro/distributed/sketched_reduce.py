@@ -50,7 +50,8 @@ def reduce_gradient_sketch(spec: cs.SketchSpec, ids: jnp.ndarray,
                            rows: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     """psum of per-replica sketches == sketch of the psum'd gradient.
     Call inside shard_map/pmap over ``axis_name``."""
-    return jax.lax.psum(local_sketch(spec, ids, rows), axis_name)
+    with jax.named_scope("obs.collective"):
+        return jax.lax.psum(local_sketch(spec, ids, rows), axis_name)
 
 
 # ---------------------------------------------------------------------------
@@ -139,16 +140,18 @@ def reduce_moments(spec_m: cs.SketchSpec, spec_v: cs.SketchSpec,
     replicas).  With ``residual=None`` the bias is accepted and ``None``
     is returned in its slot."""
     g_m = reduce_gradient_sketch(spec_m, ids, rows, axis_name)
-    g_v = jax.lax.psum(
-        cs.update(spec_v, cs.init(spec_v), ids, jnp.square(rows)),
-        axis_name)
+    with jax.named_scope("obs.collective"):
+        g_v = jax.lax.psum(
+            cs.update(spec_v, cs.init(spec_v), ids, jnp.square(rows)),
+            axis_name)
     if residual is None:
         return g_m, g_v, None
     g_sum = cs.query(spec_m, g_m, ids)            # ≈ Σ_r g_r at local ids
     cross = jnp.maximum(rows * (g_sum - rows),    # this replica's share,
                         -jnp.square(rows))        # net-non-negative per row
-    g_c = jax.lax.psum(
-        cs.update(spec_v, cs.init(spec_v), ids, cross), axis_name)
+    with jax.named_scope("obs.collective"):
+        g_c = jax.lax.psum(
+            cs.update(spec_v, cs.init(spec_v), ids, cross), axis_name)
     g_v, residual = _inject_feedback(g_v, residual, g_c)
     return g_m, g_v, residual
 

@@ -110,21 +110,23 @@ def adam_rows_xla(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
     if ids.shape[0] == 0:
         return M, V, jnp.zeros(g.shape, jnp.float32)
     eta, bc1, bc2 = _adam_hypers(step, lr, b1, b2)
-    batch = dd.dedup_rows(ids, g)
+    with jax.named_scope("obs.dedup"):
+        batch = dd.dedup_rows(ids, g)
     mask = batch.mask[:, None]
     uids, rows = batch.unique_ids, batch.rows
-    if spec_m is not None:
-        m_old = cs.query(spec_m, M, uids)
-        dm = (1.0 - b1) * (rows - m_old) * mask
-        M = cs.update(spec_m, M, uids, dm)
-        mhat = (m_old + dm) / bc1
-    else:
-        mhat = rows
-    v_old = cs.query(spec_v, V, uids)
-    dv = (1.0 - b2) * (rows * rows - v_old) * mask
-    V = cs.update(spec_v, V, uids, dv)
-    vhat = jnp.maximum(v_old + dv, 0.0) / bc2
-    upd = mask * (-eta) * mhat / (jnp.sqrt(vhat) + eps)
+    with jax.named_scope("obs.kernel"):
+        if spec_m is not None:
+            m_old = cs.query(spec_m, M, uids)
+            dm = (1.0 - b1) * (rows - m_old) * mask
+            M = cs.update(spec_m, M, uids, dm)
+            mhat = (m_old + dm) / bc1
+        else:
+            mhat = rows
+        v_old = cs.query(spec_v, V, uids)
+        dv = (1.0 - b2) * (rows * rows - v_old) * mask
+        V = cs.update(spec_v, V, uids, dv)
+        vhat = jnp.maximum(v_old + dv, 0.0) / bc2
+        upd = mask * (-eta) * mhat / (jnp.sqrt(vhat) + eps)
     return M, V, dd.scatter_back(batch, upd)
 
 
@@ -146,14 +148,16 @@ def adam_rows_tiled(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
     if ids.shape[0] == 0:
         return M, V, jnp.zeros(g.shape, jnp.float32)
     eta, bc1, bc2 = _adam_hypers(step, lr, b1, b2)
-    batch = dd.pad_to_multiple(dd.dedup_rows(ids, g), tile)
-    bm, sm, bv = _adam_addressing(spec_m, spec_v, batch.unique_ids)
+    with jax.named_scope("obs.dedup"):
+        batch = dd.pad_to_multiple(dd.dedup_rows(ids, g), tile)
+        bm, sm, bv = _adam_addressing(spec_m, spec_v, batch.unique_ids)
     if interpret is None:
         interpret = not _on_tpu()
-    M_out, V_out, upd_u = cs_adam_tiled(
-        M, V, bm, sm, bv, batch.rows, lr=eta, b1=b1, b2=b2, eps=eps,
-        bc1=bc1, bc2=bc2, n_valid=batch.n_unique, tile=tile,
-        interpret=interpret)
+    with jax.named_scope("obs.kernel"):
+        M_out, V_out, upd_u = cs_adam_tiled(
+            M, V, bm, sm, bv, batch.rows, lr=eta, b1=b1, b2=b2, eps=eps,
+            bc1=bc1, bc2=bc2, n_valid=batch.n_unique, tile=tile,
+            interpret=interpret)
     return M_out, V_out, dd.scatter_back(batch, upd_u)
 
 

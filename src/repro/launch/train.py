@@ -33,8 +33,22 @@ from repro.checkpoint import store
 from repro.data import ZipfLM, ZipfLMConfig
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_host_mesh
-from repro.train.steps import make_sparse_embedding_step, make_train_step
+from repro.obs import (MetricsWriter, PhaseTimer, RunObserver, maybe_trace)
+from repro.train.steps import (make_sparse_embedding_step, make_train_step,
+                               sparse_embedding_stores)
 from repro.train.trainer import Trainer, TrainerConfig, TrainState
+
+
+def make_observer(args, run_meta, monitors=(), subdir: str = ""):
+    """A ``RunObserver`` over ``--metrics-dir`` (None when the flag is
+    off — every call site treats the whole obs layer as optional)."""
+    if not args.metrics_dir:
+        return None
+    out = os.path.join(args.metrics_dir, subdir) if subdir \
+        else args.metrics_dir
+    writer = MetricsWriter(out, run_meta=run_meta)
+    return RunObserver(writer, monitors=monitors, log_every=args.log_every,
+                       phase_timer=PhaseTimer())
 
 
 def run_sparse_embedding(args, mesh) -> int:
@@ -54,20 +68,46 @@ def run_sparse_embedding(args, mesh) -> int:
         n_rows, dim, lr=args.lr, hparams=hp, dp_axis=dp_axis, mesh=mesh,
         error_feedback=args.error_feedback)
 
-    data = ZipfLM(ZipfLMConfig(
+    data_cfg = ZipfLMConfig(
         vocab_size=n_rows, seq_len=args.seq, global_batch=args.batch,
         seed=args.seed, n_hosts=jax.process_count(),
-        host_id=jax.process_index()))
+        host_id=jax.process_index())
+    data = ZipfLM(data_cfg)
+
+    # observability (DESIGN.md §15): the monitor reads the SAME codec
+    # pair the optimizer binds; the shadow probe rides inside opt_state
+    # under "probe" (a non-moment tag — opt_specs_for_state replicates
+    # it, while m/v keep the width-over-'data' sketch layout).
+    probe = None
+    monitors = []
+    if args.metrics_dir:
+        from repro.obs import TableMonitor, TableProbe, predicted_table_errors
+        m_store, v_store = sparse_embedding_stores(n_rows, dim, hparams=hp)
+        if args.probe_rows > 0:
+            probe = TableProbe.for_table("sparse_embedding", n_rows,
+                                         k=args.probe_rows)
+        monitors = [TableMonitor(
+            path="sparse_embedding", m_store=m_store, v_store=v_store,
+            probe=probe,
+            predicted=predicted_table_errors(m_store, v_store, n_rows,
+                                             alpha=data_cfg.alpha))]
+    observer = make_observer(args, {
+        "workload": "sparse_embedding", "rows": n_rows, "dim": dim,
+        "compression": args.sparse_compression, "steps": args.steps,
+        "batch": args.batch, "dp": bool(args.dp),
+        "probe_rows": args.probe_rows}, monitors)
 
     with shd.active_mesh(mesh):
         table = init_fn(jax.random.PRNGKey(args.seed))
         opt_state = opt.init()
+        if probe is not None:
+            opt_state = dict(opt_state, probe=probe.init(dim))
         target = init_fn(jax.random.PRNGKey(args.seed + 1))
 
         # shardings: table replicated, sketch state width-over-'data'
         from jax.sharding import NamedSharding, PartitionSpec as P
         table_spec = NamedSharding(mesh, P())
-        opt_shape = jax.eval_shape(opt.init)
+        opt_shape = jax.eval_shape(lambda: opt_state)
         opt_spec = shd.named(mesh, shd.opt_specs_for_state(
             opt_shape, table, mesh))
         bspec = shd.named(mesh, {
@@ -79,20 +119,29 @@ def run_sparse_embedding(args, mesh) -> int:
             ids = batch["tokens"].reshape(-1).astype(jnp.int32)
             rows = table[ids] - target[ids]
             loss = jnp.mean(jnp.square(rows))
-            table, opt_state = step_fn(table, opt_state, ids, rows)
+            inner = {k: v for k, v in opt_state.items() if k != "probe"}
+            table, inner = step_fn(table, inner, ids, rows)
+            if probe is not None:
+                # shadow update sees the same GLOBAL (ids, rows) batch
+                # the kernels consume (jit level — outside the shard_map)
+                inner = dict(inner,
+                             probe=probe.update(opt_state["probe"],
+                                                ids, rows))
             gn = jnp.sqrt(jnp.sum(jnp.square(rows)))
-            return table, opt_state, {"loss": loss, "grad_norm": gn}
+            return table, inner, {"loss": loss, "grad_norm": gn}
 
         jit_step = jax.jit(train_step,
                            in_shardings=(table_spec, opt_spec, bspec),
                            out_shardings=(table_spec, opt_spec, mspec),
                            donate_argnums=(0, 1))
         tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                             ckpt_every=args.ckpt_every)
-        trainer = Trainer(jit_step, data, tcfg)
+                             ckpt_every=args.ckpt_every,
+                             log_every=args.log_every)
+        trainer = Trainer(jit_step, data, tcfg, observer=observer)
         state = trainer.restore_or_init(
             TrainState(step=0, params=table, opt_state=opt_state))
-        state = trainer.fit(state)
+        with maybe_trace(args.profile_dir):
+            state = trainer.fit(state)
 
     hist = trainer.history
     first = np.mean([h["loss"] for h in hist[:10]])
@@ -147,6 +196,35 @@ def run_extreme(args, mesh) -> int:
         backend=args.store_backend or None, dp_axis=dp_axis, mesh=mesh,
         error_feedback=args.error_feedback)
 
+    def replica_monitors():
+        """Per-table health monitors over the step's own bound stores —
+        store stats + planner predicted error (``LeafPlan.predicted_error``
+        when a plan solved the sizing, the raw error model otherwise).
+        No shadow probe here: the extreme step owns its gradients inside
+        jit; measured error telemetry lives on the sparse_embedding
+        workload, which exposes (ids, rows) at the jit level."""
+        if not args.metrics_dir:
+            return []
+        from repro.obs import TableMonitor, predicted_table_errors
+        from repro.train.steps import sparse_embedding_stores as _stores
+        mons = []
+        for path, shape in cfg.table_shapes().items():
+            if args.optimizer == "dense_adam":
+                continue                  # dense baseline: nothing sketched
+            m_store, v_store = _stores(
+                shape[0], shape[1], hparams=hp,
+                track_first_moment=(args.optimizer == "cs_adam"),
+                path=path, stores=plan.store_tree() if plan else None)
+            if plan is not None and plan.leaf(path) is not None:
+                pred = {"v_pred_error": float(plan.leaf(path).predicted_error)}
+            else:
+                pred = predicted_table_errors(m_store, v_store, shape[0],
+                                              alpha=cfg.alpha)
+            mons.append(TableMonitor(
+                path=path, m_store=m_store, v_store=v_store, predicted=pred,
+                getter=lambda s, p=path: s[p]))
+        return mons
+
     cmaps = cfg.class_maps()
     finals = []
     with shd.active_mesh(mesh):
@@ -159,11 +237,20 @@ def run_extreme(args, mesh) -> int:
             ckpt = (os.path.join(args.ckpt_dir, f"replica{r}")
                     if args.ckpt_dir else None)
             tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=ckpt,
-                                 ckpt_every=args.ckpt_every)
-            trainer = Trainer(jit_step, data, tcfg, plan=plan)
+                                 ckpt_every=args.ckpt_every,
+                                 log_every=args.log_every)
+            observer = make_observer(args, {
+                "workload": "extreme", "replica": r,
+                "classes": cfg.n_classes, "meta_rows": cfg.n_meta,
+                "optimizer": args.optimizer, "batch": args.batch,
+                "dp": bool(args.dp)}, replica_monitors(),
+                subdir=f"replica{r}")
+            trainer = Trainer(jit_step, data, tcfg, plan=plan,
+                              observer=observer)
             state = trainer.restore_or_init(
                 TrainState(step=0, params=params, opt_state=opt_state))
-            state = trainer.fit(state)
+            with maybe_trace(args.profile_dir if r == 0 else None):
+                state = trainer.fit(state)
             hist = trainer.history
             # disjoint head/tail windows even on short smoke runs
             w = max(1, min(10, len(hist) // 3))
@@ -231,6 +318,22 @@ def main() -> int:
                          "'0.85x' of dense | 'floor' | 'config'; the solved "
                          "plan replaces the regex sketch policy and is "
                          "recorded in every checkpoint manifest")
+    ap.add_argument("--metrics-dir", default="",
+                    help="emit schema-versioned JSONL sketch-health "
+                         "telemetry (repro.obs) into this directory: "
+                         "step/table/phase records every --log-every "
+                         "steps; render with `python -m repro.obs.report`")
+    ap.add_argument("--probe-rows", type=int, default=0,
+                    help="sparse_embedding: shadow-probe K rows (half hot, "
+                         "half cold) with exact dense moments and report "
+                         "the measured sketch estimation error against "
+                         "the planner's prediction (needs --metrics-dir)")
+    ap.add_argument("--profile-dir", default="",
+                    help="dump a jax.profiler trace of the run (device "
+                         "timeline + the obs.* phase annotations)")
+    ap.add_argument("--log-every", type=int, default=10,
+                    help="steps between metric windows / telemetry "
+                         "fetches (the only host-sync cadence obs adds)")
     ap.add_argument("--store-backend", default="",
                     help="kernel backend for the sketch hot paths: the "
                          "fused dense-path update_read AND the sparse-rows "
@@ -241,6 +344,9 @@ def main() -> int:
                          "plan/manifest carries without touching state "
                          "layout, so restores stay valid")
     args = ap.parse_args()
+    if args.probe_rows and not args.metrics_dir:
+        ap.error("--probe-rows needs --metrics-dir (probe errors are "
+                 "emitted as 'table' metrics records)")
 
     if os.environ.get("JAX_COORDINATOR"):
         jax.distributed.initialize()
@@ -370,7 +476,8 @@ def main() -> int:
                           out_shardings=(pshard, oshard, mshard),
                           donate_argnums=(0, 1))
         tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                             ckpt_every=args.ckpt_every)
+                             ckpt_every=args.ckpt_every,
+                             log_every=args.log_every)
 
         def wrapped_step(params, opt_state, batch):
             if cfg.family == "encdec":
@@ -381,11 +488,17 @@ def main() -> int:
                     (args.batch, cfg.n_patches, cfg.d_model), cfg.dtype))
             return step_fn(params, opt_state, batch)
 
-        trainer = Trainer(wrapped_step, data, tcfg, plan=plan)
+        observer = make_observer(args, {
+            "workload": "lm", "arch": cfg.name, "optimizer": args.optimizer,
+            "steps": args.steps, "batch": args.batch, "dp": bool(args.dp),
+            "aux_budget": args.aux_budget or None})
+        trainer = Trainer(wrapped_step, data, tcfg, plan=plan,
+                          observer=observer)
         state = trainer.restore_or_init(
             TrainState(step=0, params=params, opt_state=opt_state),
             shardings={"params": pshard, "opt_state": oshard})
-        state = trainer.fit(state)
+        with maybe_trace(args.profile_dir):
+            state = trainer.fit(state)
 
     hist = trainer.history
     first = np.mean([h["loss"] for h in hist[:10]])

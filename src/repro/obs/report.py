@@ -1,0 +1,166 @@
+"""``python -m repro.obs.report <metrics.jsonl | run-dir>`` — render a
+run's metrics stream into a terminal health summary.
+
+Sections: run meta, training trajectory (steps/s, loss first→last), one
+block per table (occupancy, sign-cancellation, probe measured error vs
+planner predicted error, cleaning cadence), phase timing, and serve
+latency.  After the summary, WARNINGS:
+
+  * ``saturation`` — sketch occupancy above ``--occupancy-warn`` (0.85):
+    nearly every cell is live, collision error grows past the model —
+    re-plan at a larger width.
+  * ``plan-model`` — measured probe error above ``--ratio-warn`` (3.0) ×
+    the planner's prediction: realized traffic is heavier-tailed than
+    the zipf assumption; the plan's error budget is not being met.
+  * ``probe-error`` — measured error above ``--error-warn`` (0.5):
+    estimates at the probe rows are mostly collision noise.
+
+``--strict`` exits 1 when any warning fires (the CI obs-smoke job runs
+non-strict: it asserts the schema, not the health of a toy run).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Any, Dict, List
+
+from repro.obs.metrics import default_metrics_path, validate_file
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _table_rows(records: List[Dict[str, Any]]) -> Dict[str, Dict[str, Any]]:
+    """Latest ``table`` record per table path."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for rec in records:
+        if rec.get("kind") == "table":
+            out[rec["table"]] = rec
+    return out
+
+
+def analyze(records: List[Dict[str, Any]], *, occupancy_warn: float = 0.85,
+            ratio_warn: float = 3.0, error_warn: float = 0.5,
+            ) -> Dict[str, Any]:
+    """Digest a validated record stream into summary + warnings (pure —
+    unit-testable without touching the filesystem)."""
+    steps = [r for r in records if r.get("kind") == "step"]
+    serves = [r for r in records if r.get("kind") == "serve"]
+    phases = [r for r in records if r.get("kind") == "phase"]
+    meta = next((r for r in records if r.get("kind") == "meta"), None)
+    tables = _table_rows(records)
+
+    warnings: List[str] = []
+    for path, rec in sorted(tables.items()):
+        for slot in ("m", "v"):
+            occ = rec.get(f"{slot}_occupancy")
+            if occ is not None and occ > occupancy_warn \
+                    and rec.get(f"{slot}_pred_error", 1.0) != 0.0:
+                warnings.append(
+                    f"saturation: {path}.{slot} occupancy {occ:.2f} > "
+                    f"{occupancy_warn:.2f} — collisions past the model; "
+                    f"re-plan at a larger width")
+            ratio = rec.get(f"{slot}_error_ratio")
+            if ratio is not None and ratio > ratio_warn:
+                warnings.append(
+                    f"plan-model: {path}.{slot} measured error "
+                    f"{rec.get(f'{slot}_meas_error', 0.0):.3g} is "
+                    f"{ratio:.1f}x the planner's prediction "
+                    f"{rec.get(f'{slot}_pred_error', 0.0):.3g} — traffic "
+                    f"heavier-tailed than the plan's zipf model")
+            meas = rec.get(f"{slot}_meas_error")
+            if meas is not None and meas > error_warn:
+                warnings.append(
+                    f"probe-error: {path}.{slot} measured estimation error "
+                    f"{meas:.3g} > {error_warn:.2g} — estimates at probe "
+                    f"rows are mostly collision noise")
+
+    return {"meta": meta, "steps": steps, "tables": tables,
+            "phases": phases, "serves": serves, "warnings": warnings}
+
+
+def render(digest: Dict[str, Any], out=sys.stdout) -> None:
+    p = lambda *a: print(*a, file=out)  # noqa: E731
+    meta = digest["meta"]
+    p("== run ==")
+    if meta:
+        for k, v in sorted((meta.get("run") or {}).items()):
+            p(f"  {k}: {_fmt(v)}")
+
+    steps = digest["steps"]
+    if steps:
+        first, last = steps[0], steps[-1]
+        sps = [r["steps_per_s"] for r in steps if r.get("steps_per_s", 0) > 0]
+        p("== training ==")
+        p(f"  steps: {first['step']} .. {last['step']} "
+          f"({len(steps)} windows)")
+        if sps:
+            p(f"  steps/s: mean {sum(sps) / len(sps):.2f}  last {sps[-1]:.2f}")
+        if "loss" in first and "loss" in last:
+            p(f"  loss: {first['loss']:.4g} -> {last['loss']:.4g}")
+        if "dedup_ratio" in last:
+            p(f"  dedup unique-id ratio (last): {last['dedup_ratio']:.3f}")
+
+    for path, rec in sorted(digest["tables"].items()):
+        p(f"== table {path} (step {rec['step']}) ==")
+        for slot in ("m", "v"):
+            fields = [(k, rec[k]) for k in sorted(rec)
+                      if k.startswith(f"{slot}_")]
+            if fields:
+                p(f"  [{slot}] " + "  ".join(
+                    f"{k[len(slot) + 1:]}={_fmt(v)}" for k, v in fields))
+        extras = [(k, rec[k]) for k in ("residual_l1", "probe_rows",
+                                        "probe_rows_seen",
+                                        "cleans_in_window") if k in rec]
+        if extras:
+            p("  " + "  ".join(f"{k}={_fmt(v)}" for k, v in extras))
+
+    if digest["phases"]:
+        last = digest["phases"][-1]
+        p(f"== phases (step {last['step']}) ==")
+        for name, h in sorted(last["phases"].items()):
+            p(f"  {name}: {h['count']}x  mean {h['mean_ms']:.3f} ms")
+
+    if digest["serves"]:
+        last = digest["serves"][-1]
+        h = last["adapt_ms"]
+        p("== serve ==")
+        p(f"  adapt latency: p50 {h['p50_ms']:.3f} ms  "
+          f"p99 {h['p99_ms']:.3f} ms  ({h['count']} adapts)")
+        if "reads_per_s" in last:
+            p(f"  adapts/s: {last['reads_per_s']:.1f}")
+
+    if digest["warnings"]:
+        p("== WARNINGS ==")
+        for w in digest["warnings"]:
+            p(f"  ! {w}")
+    else:
+        p("== healthy: no warnings ==")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("path", help="metrics.jsonl or the run dir holding it")
+    ap.add_argument("--occupancy-warn", type=float, default=0.85)
+    ap.add_argument("--ratio-warn", type=float, default=3.0)
+    ap.add_argument("--error-warn", type=float, default=0.5)
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any warning fires")
+    args = ap.parse_args(argv)
+
+    path = default_metrics_path(args.path)
+    records = validate_file(path)
+    digest = analyze(records, occupancy_warn=args.occupancy_warn,
+                     ratio_warn=args.ratio_warn, error_warn=args.error_warn)
+    print(f"{path}: {len(records)} records, schema OK")
+    render(digest)
+    return 1 if (args.strict and digest["warnings"]) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -233,3 +233,36 @@ def make_online_adapt_step(n_rows: int, dim: int, *, lr=1e-4,
         return init_state_fn, local_adapt
     return init_state_fn, shd.dp_sparse_wrap(local_adapt, mesh=mesh,
                                              dp_axis=dp_axis)
+
+
+def timed_adapt(adapt_fn, tracker=None, *, capacity: int = 4096):
+    """Wrap an ``adapt_fn`` with serve-latency telemetry (DESIGN.md §15).
+
+    Returns ``(wrapped_adapt_fn, tracker)``: each call runs under a
+    ``jax.profiler.TraceAnnotation`` span, blocks on the returned table
+    (a latency number for a dispatched-but-unfinished update would be
+    fiction), and records wall time into an ``obs.LatencyTracker``.
+
+        adapt, lat = timed_adapt(adapt_fn)
+        ...
+        writer.write("serve", adapt_ms=lat.summary(),
+                     reads_per_s=lat.per_second())
+
+    ``tracker`` lets a fleet share one histogram across tables; by
+    default each wrapper gets its own ``capacity``-sample window."""
+    import time
+
+    import jax
+
+    from repro.obs.profiling import LatencyTracker, _trace_annotation
+    lat = tracker if tracker is not None else LatencyTracker(capacity)
+
+    def wrapped(table, opt_state, ids, grad_rows):
+        t0 = time.perf_counter()
+        with _trace_annotation("obs.adapt"):
+            table, opt_state = adapt_fn(table, opt_state, ids, grad_rows)
+            jax.block_until_ready(table)
+        lat.record(time.perf_counter() - t0)
+        return table, opt_state
+
+    return wrapped, lat

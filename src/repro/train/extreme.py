@@ -38,6 +38,7 @@ from repro.core.optimizers import SketchHParams, Transform, _with_lr
 from repro.data import ExtremeConfig
 from repro.distributed import sharding as shd
 from repro.kernels import dedup
+from repro.obs.profiling import scope
 from repro.train.steps import resolve_sparse_stores
 
 # optimizer modes the sparse-rows kernels can execute: β₁=0 CMS (the
@@ -169,6 +170,16 @@ def mach_log_scores(logits_list, class_maps, candidates) -> np.ndarray:
     return agg
 
 
+def unique_id_ratio(ids: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of distinct ids in a gradient batch — the dedup/segment-
+    sum pre-pass merges the rest, so this ratio IS the work reduction the
+    dedup stage buys (telemetry: ``dedup_ratio`` in step metrics).  Sort-
+    based, O(k log k), jit-safe at static k."""
+    s = jnp.sort(ids.reshape(-1))
+    n_unique = 1 + jnp.sum((s[1:] != s[:-1]).astype(jnp.int32))
+    return n_unique.astype(jnp.float32) / s.shape[0]
+
+
 def _sampled_softmax_loss(emb_rows, pos_w, neg_w):
     """(B, nnz, d) gathered embedding rows + (B, d)/(neg, d) gathered head
     rows → mean sampled-softmax NLL with the positive in slot 0.  Shared
@@ -286,10 +297,14 @@ def make_extreme_step(cfg: MachConfig, *, optimizer: str = "cs_rmsprop",
         }
         gn = jnp.sqrt(sum(jnp.sum(jnp.square(g["rows"]))
                           for g in grads.values()))
+        with scope("obs.dedup"):
+            dr = sum(unique_id_ratio(g["ids"])
+                     for g in grads.values()) / len(grads)
         if dp_axis is not None:
             # per-replica row count differs only by sharding; the norm is
             # over the GLOBAL gradient, like the dense step's metric
             gn = jnp.sqrt(jax.lax.psum(jnp.square(gn), dp_axis))
+            dr = jax.lax.pmean(dr, dp_axis)
         new_params = {"tok_embed": {}, "class_head": {}}
         new_state = {}
         for path, opt in opts.items():
@@ -299,7 +314,8 @@ def make_extreme_step(cfg: MachConfig, *, optimizer: str = "cs_rmsprop",
             new_params[top][leaf] = opt_lib.apply_sparse_updates(
                 params[top][leaf], updates)
         return new_params, new_state, {"loss": loss.astype(jnp.float32),
-                                       "grad_norm": gn}
+                                       "grad_norm": gn,
+                                       "dedup_ratio": dr}
 
     if dp_axis is None:
         step_fn = local_step

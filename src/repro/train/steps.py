@@ -35,6 +35,7 @@ from repro.core.optimizers import SketchHParams, Transform
 from repro.core.partition import SketchPolicy, nothing_policy
 from repro.distributed import sharding as shd
 from repro.models.config import ArchConfig
+from repro.obs.profiling import scope
 
 
 def family_module(cfg: ArchConfig):
@@ -164,13 +165,16 @@ def make_train_step(cfg: ArchConfig, *, optimizer: str = "cs_adam",
                               sampled_softmax=sampled_softmax)
 
     def step_body(params, opt_state, batch):
-        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        with scope("obs.grad"):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         if dp_axis is not None:
-            loss = jax.lax.pmean(loss, dp_axis)
-            grads = jax.tree_util.tree_map(
-                lambda g: jax.lax.pmean(g, dp_axis), grads)
+            with scope("obs.collective"):
+                loss = jax.lax.pmean(loss, dp_axis)
+                grads = jax.tree_util.tree_map(
+                    lambda g: jax.lax.pmean(g, dp_axis), grads)
         grads = clip(grads)
-        updates, opt_state = opt.update(grads, opt_state, params)
+        with scope("obs.kernel"):
+            updates, opt_state = opt.update(grads, opt_state, params)
         params = opt_lib.apply_updates(params, updates)
         gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                           for g in jax.tree_util.tree_leaves(grads)))
@@ -232,6 +236,28 @@ def resolve_sparse_stores(stores, path: str, shape: Tuple[int, int]):
             f"{m_store.kind!r} m store at {path!r} — use "
             f"track_first_moment=False or a sketch-m plan")
     return m_store, v_store, m_store is not None
+
+
+def sparse_embedding_stores(n_rows: int, dim: int, *,
+                            hparams: Optional[SketchHParams] = None,
+                            track_first_moment: bool = True,
+                            cleaning: Optional[CleaningSchedule] = None,
+                            path: str = "sparse_embedding", stores=None):
+    """The (m_store, v_store) codec pair a ``make_sparse_embedding_step``
+    called with the same table arguments binds — same StoreTree-vs-
+    hparams precedence, same cleaning guards.  Out-of-band consumers
+    (the ``repro.obs`` table monitors) read and ``stats`` these against
+    the live opt_state; keeping the derivation shared means they can
+    never drift from the codecs the optimizer actually updates."""
+    hp = hparams if hparams is not None else SketchHParams()
+    m_store = v_store = None
+    if stores is not None:
+        m_store, v_store, track_first_moment = resolve_sparse_stores(
+            stores, path, (n_rows, dim))
+    return opt_lib.sparse_rows_stores(
+        (int(n_rows), int(dim)), path, hp,
+        track_first_moment=track_first_moment, cleaning=cleaning,
+        m_store=m_store, v_store=v_store)
 
 
 def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
@@ -306,8 +332,9 @@ def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
         return jax.random.normal(rng, (n_rows, dim), jnp.float32) * scale
 
     def local_step(table, opt_state, ids, grad_rows):
-        updates, opt_state = opt.update(
-            {"ids": ids, "rows": grad_rows}, opt_state)
+        with scope("obs.kernel"):
+            updates, opt_state = opt.update(
+                {"ids": ids, "rows": grad_rows}, opt_state)
         return opt_lib.apply_sparse_updates(table, updates), opt_state
 
     if dp_axis is None:

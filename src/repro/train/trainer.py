@@ -58,7 +58,7 @@ class Trainer:
     def __init__(self, step_fn: Callable, data, tcfg: TrainerConfig,
                  monitor: Optional[StragglerMonitor] = None,
                  fail_at: Optional[int] = None, plan=None,
-                 store_tree=None):
+                 store_tree=None, observer=None):
         self.step_fn = step_fn
         self.data = data
         self.tcfg = tcfg
@@ -66,6 +66,12 @@ class Trainer:
         self.history: List[Dict[str, float]] = []
         self.plan = plan
         self.store_tree = store_tree
+        # optional repro.obs.RunObserver: gets every step's host-side
+        # record + the live opt_state at log boundaries (sketch-health
+        # telemetry, DESIGN.md §15); ``fit`` flushes + closes it on
+        # successful completion (a crash-restart re-enters fit with the
+        # observer still open, so no partial window is lost)
+        self.observer = observer
         if plan is not None and store_tree is not None \
                 and plan.store_tree() != store_tree:
             raise ValueError("Trainer got both a plan and a store_tree "
@@ -109,18 +115,26 @@ class Trainer:
         return TrainState(step=step, params=tree["params"],
                           opt_state=tree["opt_state"])
 
+    def _obs_phase(self, name: str):
+        if self.observer is None:
+            import contextlib
+            return contextlib.nullcontext()
+        return self.observer.phase(name)
+
     def fit(self, state: TrainState) -> TrainState:
         t = self.tcfg
         while state.step < t.total_steps:
             if self._fail_at is not None and state.step == self._fail_at:
                 self._fail_at = None          # fail once
                 raise RuntimeError(f"injected failure at step {state.step}")
-            batch = self.data.batch(state.step)
-            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            with self._obs_phase("data"):
+                batch = self.data.batch(state.step)
+                batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
             t0 = time.perf_counter()
-            params, opt_state, metrics = self.step_fn(
-                state.params, state.opt_state, batch)
-            jax.block_until_ready(metrics["loss"])
+            with self._obs_phase("step"):
+                params, opt_state, metrics = self.step_fn(
+                    state.params, state.opt_state, batch)
+                jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             self.monitor.record(t.host_id, dt)
             state = TrainState(step=state.step + 1, params=params,
@@ -128,8 +142,14 @@ class Trainer:
             rec = {"step": state.step, "time_s": dt,
                    **{k: float(np.asarray(v)) for k, v in metrics.items()}}
             self.history.append(rec)
-            self._maybe_checkpoint(state)
-        self._maybe_checkpoint(state, force=True)
-        if self._pending_ckpt is not None:
-            self._pending_ckpt.join()
+            if self.observer is not None:
+                self.observer.on_step(state.step, rec, state.opt_state)
+            with self._obs_phase("checkpoint"):
+                self._maybe_checkpoint(state)
+        with self._obs_phase("checkpoint"):
+            self._maybe_checkpoint(state, force=True)
+            if self._pending_ckpt is not None:
+                self._pending_ckpt.join()
+        if self.observer is not None:
+            self.observer.close(state.step, state.opt_state)
         return state

@@ -1,0 +1,28 @@
+"""The benchmark harness's timing contract (benchmarks/common.py):
+``train_small_lm`` times steps 1..N−1 (step 0 is compile warmup), so a
+run with fewer than 2 steps has ZERO measured iterations.  The old code
+silently reported wall≈0 — a benchmark that "ran" but measured nothing;
+it must now fail loudly.
+"""
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import small_lm_cfg, train_small_lm  # noqa: E402
+from repro.core import optimizers as O  # noqa: E402
+
+
+class TestTimingGuard:
+    @pytest.mark.parametrize("steps", [0, 1])
+    def test_rejects_zero_measured_iterations(self, steps):
+        with pytest.raises(ValueError, match="steps >= 2"):
+            train_small_lm(O.adam(1e-3), steps=steps)
+
+    def test_two_steps_measures_nonzero_wall(self):
+        cfg = small_lm_cfg(vocab=256, d_model=32, n_layers=1)
+        out = train_small_lm(O.adam(1e-3), cfg=cfg, steps=2, batch=2, seq=16)
+        assert out["steps_per_s"] > 0.0
+        assert len(out["losses"]) == 2

@@ -1,0 +1,297 @@
+"""Observability stack (DESIGN.md §15): schema, writer, shadow probes,
+monitors, observer, and the report digest.
+
+The load-bearing claim is the probe pin: driving a DenseStore and the
+probe shadow with the SAME dedup-summed EMA stream must measure exactly
+zero estimation error (the probe replicates the kernels' semantics, so
+any gap on a lossless codec would be a probe bug), while an
+over-compressed count-min sketch must measure a strictly positive error
+(the collision noise the paper's compression argument is about).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cleaning import CleaningSchedule
+from repro.core.stores import CountMinStore, CountSketchStore, DenseStore
+from repro.obs.metrics import (REQUIRED_FIELDS, SCHEMA_VERSION, MetricsWriter,
+                               SchemaError, StepAccumulator, latest,
+                               validate_file, validate_record)
+from repro.obs.probes import (RunObserver, TableMonitor, TableProbe,
+                              predicted_table_errors, probe_row_ids,
+                              rows_ema_update)
+from repro.obs.profiling import LatencyTracker, PhaseTimer
+from repro.obs.report import analyze
+from repro.plan.error_model import TableStats, countmin_error
+
+
+def _stream(n_rows, dim, steps, batch, seed=0):
+    """A deterministic (ids, rows) gradient stream with duplicate ids."""
+    k = jax.random.PRNGKey(seed)
+    for i in range(steps):
+        k, k1, k2 = jax.random.split(k, 3)
+        # zipf-ish: half the batch from the head, so probe rows get hit
+        head = jax.random.randint(k1, (batch // 2,), 0, 8)
+        tail = jax.random.randint(k2, (batch - batch // 2,), 0, n_rows)
+        ids = jnp.concatenate([head, tail]).astype(jnp.int32)
+        rows = jax.random.normal(jax.random.fold_in(k, i), (batch, dim))
+        yield ids, rows
+
+
+class TestProbeRowIds:
+    def test_hot_and_cold_split(self):
+        ids = probe_row_ids(10_000, k=16)
+        assert len(ids) == 16 and len(set(ids)) == 16
+        assert list(ids[:8]) == list(range(8))          # zipf head
+        assert all(i >= 8 for i in ids[8:])             # spread in tail
+        assert max(ids) < 10_000
+
+    def test_tiny_table_clamps(self):
+        ids = probe_row_ids(4, k=16)
+        assert len(ids) == len(set(ids)) <= 4
+
+
+class TestProbePin:
+    """The acceptance pin: probe error == 0 dense, > 0 over-compressed."""
+
+    N, D, BATCH, STEPS = 1000, 4, 32, 25
+
+    def _drive(self, store):
+        """Run the same stream through ``store`` (via the kernels' dedup
+        EMA semantics) and the probe shadow; return the measured errors."""
+        probe = TableProbe.for_table("t", self.N, k=8,
+                                     track_first_moment=False)
+        pstate = probe.init(self.D)
+        state = store.init()
+        for ids, rows in _stream(self.N, self.D, self.STEPS, self.BATCH):
+            state = rows_ema_update(store, state, ids, rows, probe.b2,
+                                    square=True)
+            pstate = probe.update(pstate, ids, rows)
+        return probe.errors(pstate, v_store=store, v_state=state)
+
+    def test_dense_store_measures_zero(self):
+        store = DenseStore().bind("t", (self.N, self.D), jnp.float32)
+        errs = self._drive(store)
+        assert errs["probe_rows_seen"] >= 4
+        np.testing.assert_allclose(errs["v_meas_error"], 0.0, atol=1e-5)
+
+    def test_overcompressed_sketch_measures_error(self):
+        # width 8 for 1000 rows: ~125 rows per bucket — collisions certain
+        store = CountMinStore(depth=1, width=8).bind(
+            "t", (self.N, self.D), jnp.float32)
+        errs = self._drive(store)
+        assert errs["v_meas_error"] > 0.1
+        # tail rows collide with the (heavy) head → cold error dominates
+        assert errs["v_meas_error_cold"] > 0.0
+
+    def test_probe_state_rides_in_jit(self):
+        """update() under jit with donation — the launcher integration."""
+        probe = TableProbe.for_table("t", self.N, k=8)
+        pstate = probe.init(self.D)
+        upd = jax.jit(probe.update, donate_argnums=(0,))
+        for ids, rows in _stream(self.N, self.D, 3, self.BATCH):
+            pstate = upd(pstate, ids, rows)
+        assert int(jnp.sum(pstate["hits"])) > 0
+
+
+class TestSchema:
+    def test_validate_good_records(self):
+        validate_record({"schema": SCHEMA_VERSION, "kind": "step",
+                         "step": 10, "steps_per_s": 42.0, "loss": 1.25})
+        validate_record({"schema": SCHEMA_VERSION, "kind": "table",
+                         "step": 10, "table": "emb", "v_occupancy": 0.4})
+
+    @pytest.mark.parametrize("rec, msg", [
+        ({"kind": "step", "step": 1, "steps_per_s": 1.0}, "schema version"),
+        ({"schema": SCHEMA_VERSION, "kind": "nope"}, "unknown record kind"),
+        ({"schema": SCHEMA_VERSION, "kind": "step", "step": 1},
+         "missing required field"),
+        ({"schema": SCHEMA_VERSION, "kind": "step", "step": -1,
+          "steps_per_s": 1.0}, "non-negative"),
+        ({"schema": SCHEMA_VERSION, "kind": "step", "step": 1,
+          "steps_per_s": float("nan")}, "non-finite"),
+        ({"schema": SCHEMA_VERSION, "kind": "step", "step": 1,
+          "steps_per_s": float("inf")}, "non-finite"),
+    ])
+    def test_validate_rejects(self, rec, msg):
+        with pytest.raises(SchemaError, match=msg):
+            validate_record(rec)
+
+    def test_every_kind_has_required_fields(self):
+        for kind, fields in REQUIRED_FIELDS.items():
+            assert isinstance(fields, tuple) and fields
+
+
+class TestMetricsWriter:
+    def test_round_trip(self, tmp_path):
+        with MetricsWriter(tmp_path, run_meta={"workload": "x"},
+                           flush_every=2) as w:
+            w.write("step", step=10, steps_per_s=12.5, loss=0.5)
+            w.write("table", step=10, table="emb", v_occupancy=0.25)
+        recs = validate_file(tmp_path / "metrics.jsonl")
+        assert [r["kind"] for r in recs] == ["meta", "step", "table"]
+        assert recs[0]["run"] == {"workload": "x"}
+        assert latest(recs, "table", table="emb")["v_occupancy"] == 0.25
+
+    def test_write_rejects_bad_record_before_buffering(self, tmp_path):
+        w = MetricsWriter(tmp_path)
+        with pytest.raises(SchemaError):
+            w.write("step", step=1, steps_per_s=float("nan"))
+        w.close()
+        assert len(validate_file(w.path)) == 1      # just the meta record
+
+    def test_validate_file_flags_corrupt_line(self, tmp_path):
+        p = tmp_path / "metrics.jsonl"
+        p.write_text(json.dumps({"schema": SCHEMA_VERSION, "kind": "meta",
+                                 "run": {}}) + "\nnot json\n")
+        with pytest.raises(SchemaError, match=":2"):
+            validate_file(p)
+
+
+class TestStepAccumulator:
+    def test_on_device_means(self):
+        acc = StepAccumulator()
+        for v in (1.0, 2.0, 3.0):
+            acc.add({"loss": jnp.asarray(v)})
+        assert acc.count == 3
+        out = acc.drain()
+        np.testing.assert_allclose(out["loss"], 2.0)
+        assert acc.count == 0 and acc.drain() == {}
+
+
+class TestObserverEndToEnd:
+    """Monitor + observer over a real sketched table, then the report."""
+
+    N, D = 512, 4
+
+    def _run(self, tmp_path, steps=20, log_every=10):
+        m_store = CountSketchStore(depth=1, width=8).bind(
+            "t", (self.N, self.D), jnp.float32)
+        v_store = CountMinStore(depth=1, width=8,
+                                cleaning=CleaningSchedule(0.5, 7)).bind(
+            "t", (self.N, self.D), jnp.float32)
+        probe = TableProbe.for_table("t", self.N, k=8)
+        mon = TableMonitor(
+            path="t", m_store=m_store, v_store=v_store, probe=probe,
+            predicted=predicted_table_errors(m_store, v_store, self.N))
+        obs = RunObserver(MetricsWriter(tmp_path, run_meta={"n": self.N}),
+                          monitors=[mon], log_every=log_every,
+                          phase_timer=PhaseTimer())
+        st = {"m": m_store.init(), "v": v_store.init(),
+              "probe": probe.init(self.D)}
+        for i, (ids, rows) in enumerate(
+                _stream(self.N, self.D, steps, 32), start=1):
+            with obs.phase("step"):
+                st["m"] = rows_ema_update(m_store, st["m"], ids, rows,
+                                          probe.b1)
+                st["v"] = rows_ema_update(v_store, st["v"], ids, rows,
+                                          probe.b2, square=True)
+                st["probe"] = probe.update(st["probe"], ids, rows)
+            obs.on_step(i, {"step": i, "time_s": 1e-3, "loss": 1.0}, st)
+        obs.close(steps, st)
+        return validate_file(tmp_path / "metrics.jsonl")
+
+    def test_emits_all_kinds_at_boundaries(self, tmp_path):
+        recs = self._run(tmp_path)
+        kinds = [r["kind"] for r in recs]
+        assert kinds.count("step") == 2 and kinds.count("phase") == 2
+        # double-buffered collect: boundary N's stats surface one
+        # boundary later, the last one at close() — both step labels land
+        tables = [r for r in recs if r["kind"] == "table"]
+        assert [t["step"] for t in tables] == [10, 20]
+        last = tables[-1]
+        for field in ("v_occupancy", "v_mass", "v_meas_error",
+                      "v_pred_error", "v_error_ratio", "m_sign_cancel",
+                      "probe_rows_seen", "cleans_in_window",
+                      "v_clean_next_removes"):
+            assert field in last, field
+        # cadence-7 cleaning fires once in the (10, 20] window (step 14)
+        assert last["cleans_in_window"] == 1
+        assert last["v_meas_error"] > 0.0           # over-compressed
+
+    def test_report_analyze_warns_on_overcompressed(self, tmp_path):
+        digest = analyze(self._run(tmp_path))
+        cats = {w.split(":")[0] for w in digest["warnings"]}
+        assert "probe-error" in cats
+        assert digest["meta"]["run"] == {"n": self.N}
+        assert "t" in digest["tables"]
+
+    def test_report_healthy_on_dense(self, tmp_path):
+        w = MetricsWriter(tmp_path, run_meta={})
+        w.write("step", step=10, steps_per_s=10.0)
+        # a dense table: occupancy may be high but pred_error == 0.0
+        # marks it lossless — no saturation warning applies
+        w.write("table", step=10, table="t", v_occupancy=0.99,
+                v_pred_error=0.0, v_meas_error=0.0)
+        w.close()
+        digest = analyze(validate_file(w.path))
+        assert digest["warnings"] == []
+
+
+class TestPredictedErrors:
+    def test_matches_error_model_at_store_geometry(self):
+        v = CountMinStore(depth=2, width=64).bind("t", (1000, 4),
+                                                  jnp.float32)
+        pred = predicted_table_errors(None, v, 1000, alpha=1.1)
+        want = countmin_error(TableStats(alpha=1.1), 1000, 64, 2)
+        np.testing.assert_allclose(pred["v_pred_error"], want)
+        assert "m_pred_error" not in pred
+
+    def test_dense_predicts_zero(self):
+        d = DenseStore().bind("t", (100, 4), jnp.float32)
+        assert predicted_table_errors(d, d, 100) == {
+            "m_pred_error": 0.0, "v_pred_error": 0.0}
+
+
+class TestStoreStats:
+    def test_gauges_and_sampling_consistency(self):
+        st = CountMinStore(depth=2, width=32).bind("t", (256, 8),
+                                                   jnp.float32)
+        state = jnp.abs(jax.random.normal(jax.random.PRNGKey(0),
+                                          st.init().shape))
+        out = {k: float(v) for k, v in st.stats(state).items()}
+        # small sketch → stride 1 → gauges are exact
+        np.testing.assert_allclose(out["mass"],
+                                   float(jnp.sum(jnp.abs(state))), rtol=1e-6)
+        np.testing.assert_allclose(out["occupancy"], 1.0)
+        assert out["sign_cancel"] < 1e-6            # all-positive cells
+
+    def test_sampled_mass_scales_up(self):
+        st = CountSketchStore(depth=1, width=8).bind("t", (64, 4),
+                                                     jnp.float32)
+        big = jnp.ones((4 * st.STATS_SAMPLE_CELLS,), jnp.float32)
+        out = st.stats(big)
+        np.testing.assert_allclose(float(out["mass"]), big.size, rtol=0.01)
+        np.testing.assert_allclose(float(out["occupancy"]), 1.0)
+
+
+class TestLatencyTracker:
+    def test_percentiles(self):
+        lt = LatencyTracker(capacity=128)
+        for ms in range(1, 101):
+            lt.record(ms / 1e3)
+        s = lt.summary()
+        assert s["count"] == 100
+        assert 45 <= s["p50_ms"] <= 55 and 95 <= s["p99_ms"] <= 100
+
+
+class TestServeTelemetry:
+    def test_timed_adapt_emits_schema_valid_serve_record(self, tmp_path):
+        from repro.serve.steps import timed_adapt
+
+        adapt, lat = timed_adapt(
+            lambda table, st, ids, rows: (table + 1.0, st))
+        table, st = jnp.zeros((4, 2)), {}
+        for _ in range(5):
+            table, st = adapt(table, st, jnp.zeros((2,), jnp.int32),
+                              jnp.zeros((2, 2)))
+        assert lat.count == 5 and float(table[0, 0]) == 5.0
+        with MetricsWriter(tmp_path, run_meta={}) as w:
+            w.write("serve", adapt_ms=lat.summary(),
+                    reads_per_s=lat.per_second())
+        recs = validate_file(tmp_path / "metrics.jsonl")
+        assert recs[-1]["adapt_ms"]["count"] == 5
