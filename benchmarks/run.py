@@ -25,6 +25,7 @@ BENCHES = [
     ("kernels", "(ours) sketch kernel micro + traffic model"),
     ("fused_store", "(ours) fused vs composed update_read steps/sec"),
     ("obs_overhead", "(ours) telemetry on/off steps/s A-B"),
+    ("serving", "(ours) SLO traffic replay: dense vs count-min adaptation"),
     ("roofline", "(ours) dry-run roofline tables"),
 ]
 

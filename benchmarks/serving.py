@@ -1,0 +1,127 @@
+"""Serving replay: SLO curves for online adaptation, dense vs count-min.
+
+The paper's pitch at serve time: a few MB of count-min state instead of a
+second (n, d) moment table buys per-user online adaptation at serving
+scale.  This benchmark replays the SAME fixed-seed zipf traffic trace
+(``repro.serve.traffic``) through the full serving subsystem — bounded
+admission, size-or-deadline batching with cross-request dedup,
+double-buffered state — against two arms:
+
+  * ``dense``    — full (n, d) 2nd-moment buffer (β₁=0 dense Adam);
+  * ``countmin`` — the paper's count-min sketch at ``compression``×.
+
+For each arm × offered load (requests/s on the virtual clock) it records
+the real measured adapt-latency histogram (p50/p99), adapt throughput,
+virtual request latency (queueing included) and shed rate, then applies
+an SLO gate at the NOMINAL (lowest) load: p99 adapt latency under
+``slo_p99_ms`` and shed rate under ``shed_slo``.  Higher loads exist to
+trace the saturation/shed curve, not to pass.
+
+Results → experiments/bench/serving.json (EXPERIMENTS.md §Serving).
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Any, Dict
+
+try:
+    from benchmarks.common import save_result
+except ImportError:  # pragma: no cover - script mode
+    from common import save_result
+
+
+def _run_arm(arm: str, trace_cfg, loads, *, compression: float,
+             server_kw: Dict[str, Any]) -> Dict[str, Any]:
+    import jax
+
+    from repro.core import optimizers as O
+    from repro.core.optimizers import SketchHParams
+    from repro.serve import (AdaptServer, ServerConfig, make_dense_adapt_step,
+                             make_online_adapt_step, make_trace, replay,
+                             trace_stats)
+
+    n, d = trace_cfg.n_rows, trace_cfg.dim
+    if arm == "dense":
+        init_fn, adapt_fn = make_dense_adapt_step(n, d, lr=1e-3)
+    else:
+        init_fn, adapt_fn = make_online_adapt_step(
+            n, d, lr=1e-3, hparams=SketchHParams(compression=compression))
+
+    out: Dict[str, Any] = {"loads": []}
+    for load in loads:
+        import dataclasses
+        tcfg = dataclasses.replace(trace_cfg, offered_load=float(load))
+        trace = make_trace(tcfg)
+        table = jax.random.normal(jax.random.PRNGKey(trace_cfg.seed),
+                                  (n, d)) * 0.1
+        opt_state = init_fn()
+        if "state_bytes" not in out:
+            out["state_bytes"] = int(O.state_bytes(opt_state))
+        server = AdaptServer(table, opt_state, adapt_fn,
+                             ServerConfig(**server_kw))
+        replay(server, trace)
+        rec = server.metrics_record(offered_load=float(load))
+        rec["trace"] = trace_stats(trace)
+        out["loads"].append(rec)
+    return out
+
+
+def run(quick: bool = False) -> str:
+    from repro.serve import TraceConfig
+
+    if quick:
+        trace_cfg = TraceConfig(n_requests=160, n_users=64, n_rows=2048,
+                                dim=16, ids_per_request=8, alpha=1.1, seed=0)
+        loads = [100.0, 1000.0]
+    else:
+        trace_cfg = TraceConfig(n_requests=600, n_users=256, n_rows=16384,
+                                dim=32, ids_per_request=8, alpha=1.1, seed=0)
+        loads = [100.0, 500.0, 5000.0]
+    compression = 5.0
+    server_kw = dict(batch_ids=64, max_delay_s=2e-3, queue_cap=32,
+                     slo_p99_ms=250.0)
+    shed_slo = 0.01
+
+    arms: Dict[str, Any] = {}
+    slo: Dict[str, Any] = {}
+    for arm in ("dense", "countmin"):
+        arms[arm] = _run_arm(arm, trace_cfg, loads, compression=compression,
+                             server_kw=server_kw)
+        nominal = arms[arm]["loads"][0]      # lowest offered load
+        p99 = nominal["adapt_ms"]["p99_ms"]
+        shed = nominal["shed_rate"]
+        ok = p99 <= server_kw["slo_p99_ms"] and shed <= shed_slo
+        slo[arm] = {"offered_load": nominal["offered_load"], "p99_ms": p99,
+                    "shed_rate": shed, "pass": bool(ok)}
+        print(f"[serving] {arm}: state {arms[arm]['state_bytes']:,} B  "
+              f"nominal p99 {p99:.2f} ms  shed {shed:.3f}  "
+              f"SLO {'PASS' if ok else 'FAIL'}", flush=True)
+        for rec in arms[arm]["loads"][1:]:
+            print(f"[serving]   load {rec['offered_load']:.0f}/s: "
+                  f"p99 {rec['adapt_ms']['p99_ms']:.2f} ms  "
+                  f"adapts/s {rec['reads_per_s']:.1f}  "
+                  f"shed {rec['shed_rate']:.3f}", flush=True)
+
+    payload = {
+        "config": {"n_rows": trace_cfg.n_rows, "dim": trace_cfg.dim,
+                   "n_requests": trace_cfg.n_requests,
+                   "ids_per_request": trace_cfg.ids_per_request,
+                   "alpha": trace_cfg.alpha, "seed": trace_cfg.seed,
+                   "compression": compression, "loads": loads,
+                   **server_kw, "shed_slo": shed_slo, "quick": bool(quick)},
+        "arms": arms,
+        "slo": slo,
+    }
+    path = save_result("serving", payload)
+    ratio = arms["dense"]["state_bytes"] / max(arms["countmin"]["state_bytes"],
+                                               1)
+    ok_all = all(s["pass"] for s in slo.values())
+    return (f"{path} — aux state dense/countmin = {ratio:.1f}x, "
+            f"SLO {'PASS' if ok_all else 'FAIL'}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print(run(quick=args.quick))

@@ -152,6 +152,61 @@ def run_sparse_embedding(args, mesh) -> int:
     return 0 if last < first else 1
 
 
+def run_serve_replay(args, mesh) -> int:
+    """The online-adaptation serving workload (DESIGN.md §16): replay a
+    fixed-seed zipf traffic trace through the full serving subsystem —
+    bounded admission, size-or-deadline batching with cross-request
+    dedup, double-buffered (table, sketch) state — and emit a
+    schema-valid ``serve`` record.  ``--optimizer dense_adam`` runs the
+    dense-baseline arm; anything else runs the count-min arm sized by
+    ``--sparse-compression`` (backend via ``--store-backend``)."""
+    del mesh  # single-host workload; the server owns its own device state
+    from repro.core.optimizers import SketchHParams
+    from repro.serve import (AdaptServer, ServerConfig, TraceConfig,
+                             make_dense_adapt_step, make_online_adapt_step,
+                             make_trace, replay, trace_stats)
+
+    n_rows, dim = args.sparse_rows, args.sparse_dim
+    tcfg = TraceConfig(n_requests=args.serve_requests, n_rows=n_rows,
+                       dim=dim, ids_per_request=args.serve_ids_per_request,
+                       offered_load=args.offered_load, seed=args.seed)
+    trace = make_trace(tcfg)
+
+    arm = "dense" if args.optimizer == "dense_adam" else "countmin"
+    if arm == "dense":
+        init_fn, adapt_fn = make_dense_adapt_step(n_rows, dim, lr=args.lr)
+    else:
+        init_fn, adapt_fn = make_online_adapt_step(
+            n_rows, dim, lr=args.lr,
+            hparams=SketchHParams(compression=args.sparse_compression),
+            store_backend=args.store_backend or None)
+
+    table = jax.random.normal(jax.random.PRNGKey(args.seed),
+                              (n_rows, dim)) * 0.1
+    server = AdaptServer(table, init_fn(), adapt_fn, ServerConfig(
+        batch_ids=args.serve_batch_ids,
+        max_delay_s=args.serve_deadline_ms / 1e3,
+        queue_cap=args.queue_cap, slo_p99_ms=args.serve_slo_ms))
+    replay(server, trace)
+
+    rec = server.metrics_record(offered_load=args.offered_load)
+    if args.metrics_dir:
+        with MetricsWriter(args.metrics_dir, run_meta={
+                "workload": "serve-replay", "arm": arm, "rows": n_rows,
+                "dim": dim, "compression": args.sparse_compression,
+                "requests": args.serve_requests,
+                "offered_load": args.offered_load}) as w:
+            w.write("serve", **rec, **{f"trace_{k}": v
+                                       for k, v in trace_stats(trace).items()})
+    h = rec["adapt_ms"]
+    print(f"[serve] arm={arm} rows={n_rows} dim={dim} "
+          f"load={args.offered_load:.0f}/s requests={server.n_submitted} "
+          f"batches={server.n_batches} shed={server.shed_rate:.3f} "
+          f"adapt p50 {h['p50_ms']:.2f} ms p99 {h['p99_ms']:.2f} ms "
+          f"adapts/s {rec['reads_per_s']:.1f}")
+    return 0 if server.n_done > 0 else 1
+
+
 class _MetaStream:
     """Host-side MACH mapping for one replica: the extreme stream's
     true-label ids → this replica's meta-class ids (``cmap``), applied to
@@ -285,15 +340,35 @@ def main() -> int:
                     help="explicit shard_map data parallelism over a "
                          "'data' axis spanning every local device")
     ap.add_argument("--workload", default="lm",
-                    choices=["lm", "sparse_embedding", "extreme"],
+                    choices=["lm", "sparse_embedding", "extreme",
+                             "serve-replay"],
                     help="lm: full model train step; sparse_embedding: "
                          "the (ids, grad-rows) table regime (sketched "
                          "all-reduce under --dp); extreme: MACH + sampled "
                          "softmax over a --meta-rows output table "
-                         "(paper §7.3 — the big-batch regime)")
+                         "(paper §7.3 — the big-batch regime); "
+                         "serve-replay: replay a zipf traffic trace through "
+                         "the online-adaptation server (DESIGN.md §16)")
     ap.add_argument("--sparse-rows", type=int, default=65536)
     ap.add_argument("--sparse-dim", type=int, default=64)
     ap.add_argument("--sparse-compression", type=float, default=5.0)
+    ap.add_argument("--serve-requests", type=int, default=256,
+                    help="serve-replay: trace length (fixed --seed zipf)")
+    ap.add_argument("--serve-ids-per-request", type=int, default=8)
+    ap.add_argument("--serve-batch-ids", type=int, default=64,
+                    help="serve-replay: id capacity of a coalesced batch")
+    ap.add_argument("--serve-deadline-ms", type=float, default=2.0,
+                    help="serve-replay: max time the batcher holds its "
+                         "oldest request before dispatching a partial batch")
+    ap.add_argument("--offered-load", type=float, default=500.0,
+                    help="serve-replay: trace arrival rate, requests/s")
+    ap.add_argument("--queue-cap", type=int, default=32,
+                    help="serve-replay: admission-queue bound; arrivals "
+                         "past it are shed, not delayed")
+    ap.add_argument("--serve-slo-ms", type=float, default=250.0,
+                    help="serve-replay: adapt-latency p99 SLO stamped into "
+                         "the emitted serve record (obs.report warns on "
+                         "violation)")
     ap.add_argument("--classes", type=int, default=1_000_000,
                     help="extreme: true-label space (MACH hashes it down "
                          "to --meta-rows per replica)")
@@ -358,6 +433,11 @@ def main() -> int:
             f"--dp needs the global batch ({args.batch}) divisible by the "
             f"device count ({jax.device_count()})")
 
+    if args.workload == "serve-replay":
+        # serve-time default is the paper's Theorem 5.1 RMSProp variant
+        if args.optimizer == ap.get_default("optimizer"):
+            args.optimizer = "cs_rmsprop"
+        return run_serve_replay(args, mesh)
     if args.workload == "sparse_embedding":
         return run_sparse_embedding(args, mesh)
     if args.workload == "extreme":

@@ -14,9 +14,16 @@ latency.  After the summary, WARNINGS:
     the zipf assumption; the plan's error budget is not being met.
   * ``probe-error`` — measured error above ``--error-warn`` (0.5):
     estimates at the probe rows are mostly collision noise.
+  * ``serve-slo`` — serve-side adapt p99 above the SLO target the record
+    carries (``slo_p99_ms``, from the server's config) or, failing that,
+    ``--serve-p99-warn``: the adaptation path is violating its latency
+    budget.
+  * ``serve-shed`` — nonzero shed rate: the admission queue overflowed
+    at the offered load; requests were rejected, not just delayed.
 
-``--strict`` exits 1 when any warning fires (the CI obs-smoke job runs
-non-strict: it asserts the schema, not the health of a toy run).
+``--strict`` exits 1 when any warning fires (the CI obs-smoke and
+serving-smoke jobs run non-strict: they assert the schema, not the
+health of a toy run).
 """
 from __future__ import annotations
 
@@ -44,6 +51,7 @@ def _table_rows(records: List[Dict[str, Any]]) -> Dict[str, Dict[str, Any]]:
 
 def analyze(records: List[Dict[str, Any]], *, occupancy_warn: float = 0.85,
             ratio_warn: float = 3.0, error_warn: float = 0.5,
+            serve_p99_warn: float = 0.0,
             ) -> Dict[str, Any]:
     """Digest a validated record stream into summary + warnings (pure —
     unit-testable without touching the filesystem)."""
@@ -77,6 +85,22 @@ def analyze(records: List[Dict[str, Any]], *, occupancy_warn: float = 0.85,
                     f"probe-error: {path}.{slot} measured estimation error "
                     f"{meas:.3g} > {error_warn:.2g} — estimates at probe "
                     f"rows are mostly collision noise")
+
+    if serves:
+        last = serves[-1]
+        p99 = (last.get("adapt_ms") or {}).get("p99_ms")
+        slo = last.get("slo_p99_ms", serve_p99_warn or None)
+        if p99 is not None and slo and p99 > slo:
+            warnings.append(
+                f"serve-slo: adapt p99 {p99:.2f} ms > SLO {slo:.2f} ms — "
+                f"the adaptation path is violating its latency budget")
+        shed = last.get("shed_rate", 0.0)
+        if shed and shed > 0:
+            warnings.append(
+                f"serve-shed: {shed:.1%} of requests shed "
+                f"({last.get('n_shed', '?')}/{last.get('n_requests', '?')}) "
+                f"— admission queue overflowed at the offered load; scale "
+                f"out, raise queue_cap, or shed earlier upstream")
 
     return {"meta": meta, "steps": steps, "tables": tables,
             "phases": phases, "serves": serves, "warnings": warnings}
@@ -132,6 +156,14 @@ def render(digest: Dict[str, Any], out=sys.stdout) -> None:
           f"p99 {h['p99_ms']:.3f} ms  ({h['count']} adapts)")
         if "reads_per_s" in last:
             p(f"  adapts/s: {last['reads_per_s']:.1f}")
+        rq = last.get("request_ms")
+        if rq and rq.get("count"):
+            p(f"  request latency (queueing incl.): p50 {rq['p50_ms']:.3f} "
+              f"ms  p99 {rq['p99_ms']:.3f} ms")
+        if "shed_rate" in last:
+            p(f"  shed: {last.get('n_shed', 0)}/{last.get('n_requests', 0)} "
+              f"({last['shed_rate']:.1%})  batches: "
+              f"{last.get('n_batches', 0)}")
 
     if digest["warnings"]:
         p("== WARNINGS ==")
@@ -149,6 +181,9 @@ def main(argv=None) -> int:
     ap.add_argument("--occupancy-warn", type=float, default=0.85)
     ap.add_argument("--ratio-warn", type=float, default=3.0)
     ap.add_argument("--error-warn", type=float, default=0.5)
+    ap.add_argument("--serve-p99-warn", type=float, default=0.0,
+                    help="fallback serve p99 SLO (ms) for records that "
+                         "carry no slo_p99_ms of their own; 0 disables")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 if any warning fires")
     args = ap.parse_args(argv)
@@ -156,7 +191,8 @@ def main(argv=None) -> int:
     path = default_metrics_path(args.path)
     records = validate_file(path)
     digest = analyze(records, occupancy_warn=args.occupancy_warn,
-                     ratio_warn=args.ratio_warn, error_warn=args.error_warn)
+                     ratio_warn=args.ratio_warn, error_warn=args.error_warn,
+                     serve_p99_warn=args.serve_p99_warn)
     print(f"{path}: {len(records)} records, schema OK")
     render(digest)
     return 1 if (args.strict and digest["warnings"]) else 0

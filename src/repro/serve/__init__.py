@@ -1,2 +1,12 @@
-"""Serving layer: prefill/decode step factories + cache layout."""
-from repro.serve.steps import ServeStep, cache_factory, make_serve_step  # noqa: F401
+"""Serving layer: prefill/decode step factories, cache layout, and the
+online-adaptation subsystem (batching, double-buffered state, serving
+loop, traffic replay — DESIGN.md §16)."""
+from repro.serve.batcher import (AdaptRequest, Batcher, BatcherConfig,  # noqa: F401
+                                 CoalescedBatch, coalesce, dedup_coalesce)
+from repro.serve.buffer import DoubleBufferedStore, Snapshot  # noqa: F401
+from repro.serve.server import (AdaptServer, Completion, RequestShed,  # noqa: F401
+                                ServerConfig, replay)
+from repro.serve.steps import (ServeStep, cache_factory,  # noqa: F401
+                               make_dense_adapt_step, make_online_adapt_step,
+                               make_serve_step, timed_adapt)
+from repro.serve.traffic import TraceConfig, make_trace, trace_stats  # noqa: F401

@@ -1,0 +1,200 @@
+"""Cross-request coalescing for online-adaptation serving (DESIGN.md §16).
+
+Serving-time personalization sees many small adapt requests — each user's
+feedback step touches a handful of embedding rows — while the sketch
+step's cost is per-LAUNCH, not per-row: one ``adam_rows`` dispatch
+amortizes over everything in the batch.  The ``Batcher`` accumulates
+requests into a fixed ``batch_ids``-slot buffer and flushes when the
+buffer fills or the oldest member has waited ``max_delay_s`` (classic
+size-or-deadline batching), so tail latency is bounded even at low load.
+
+Numerical contract (pinned by tests/test_serve.py):
+
+  * ``coalesce`` concatenates the member requests' (ids, rows) along the
+    id axis and pads to the fixed ``batch_ids`` capacity with the batch's
+    FIRST id and zero gradient rows.  Padding with an arbitrary id (say
+    0) would be wrong: the EMA delta ``(1-β₂)(0² - v̂[row])`` at a
+    zero-gradient row still DECAYS that row's sketch cells, corrupting a
+    row nobody touched.  Padding with an id already in the batch merges
+    through ``kernels.dedup``'s stable-sort + segment_sum as ``+0.0`` —
+    an exact no-op on that id's gradient sum.
+  * Because the downstream ``adam_rows`` kernels run the same
+    ``dedup_rows`` pre-pass (stable order: original positions within a
+    segment, padding appended last), one step over the coalesced batch is
+    bit-identical to one step over the raw concatenation of the member
+    requests (``x + 0.0 == x`` bitwise for finite ``x != -0.0``; a
+    ``-0.0`` gradient sum may flip sign-of-zero, which is why the
+    acceptance bound is stated as ≤1e-6 even though the test observes
+    exact equality).
+
+``dedup_coalesce`` additionally exposes the collision-free view (unique
+ids + segment-summed rows, fill slots remapped onto the first live id) so
+duplicate hot rows cost ONE sketch update even before the kernel's
+internal pre-pass — and so callers can measure the cross-request dedup
+ratio that the zipf head actually produces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import dedup as dedup_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptRequest:
+    """One user's online-adaptation request.
+
+    ``ids`` may contain duplicates (a session can touch the same row
+    twice); cross-REQUEST duplicates are the common case under zipf
+    traffic and are what the coalescer merges.
+    """
+
+    user: int
+    ids: np.ndarray          # (k,) int — embedding-row ids
+    grad_rows: np.ndarray    # (k, d) float — one gradient row per id
+    t_arrival: float = 0.0   # seconds on the trace clock
+
+    @property
+    def n_ids(self) -> int:
+        return int(np.asarray(self.ids).shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class BatcherConfig:
+    batch_ids: int = 256      # fixed id-slot capacity of a coalesced batch
+    max_delay_s: float = 5e-3  # oldest member waits at most this long
+
+
+class CoalescedBatch:
+    """A formed batch: fixed-shape (ids, rows) plus its member requests."""
+
+    __slots__ = ("ids", "rows", "requests", "n_live", "t_oldest")
+
+    def __init__(self, ids, rows, requests: List[AdaptRequest],
+                 n_live: int, t_oldest: float):
+        self.ids = ids            # (batch_ids,) int32
+        self.rows = rows          # (batch_ids, d) float32
+        self.requests = requests
+        self.n_live = n_live      # id slots before padding
+        self.t_oldest = t_oldest  # earliest member arrival
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+
+def coalesce(requests: Sequence[AdaptRequest],
+             batch_ids: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Concatenate member requests and pad to the fixed batch shape.
+
+    Returns ``(ids, rows)`` with ``ids.shape == (batch_ids,)``.  Padding
+    slots repeat the first id with zero rows (see module docstring for
+    why that is the only safe filler).
+    """
+    if not requests:
+        raise ValueError("coalesce of an empty request list")
+    ids = np.concatenate([np.asarray(r.ids, np.int32).reshape(-1)
+                          for r in requests])
+    rows = np.concatenate([np.asarray(r.grad_rows, np.float32)
+                           for r in requests])
+    k = ids.shape[0]
+    if k > batch_ids:
+        raise ValueError(f"coalesced batch has {k} id slots > "
+                         f"batch_ids={batch_ids}")
+    if k < batch_ids:
+        pad = batch_ids - k
+        ids = np.concatenate([ids, np.full((pad,), ids[0], np.int32)])
+        rows = np.concatenate(
+            [rows, np.zeros((pad, rows.shape[1]), rows.dtype)])
+    return jnp.asarray(ids), jnp.asarray(rows)
+
+
+def dedup_coalesce(ids, rows) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Collision-free view of a coalesced batch — jit-safe, fixed shape.
+
+    Runs the ``kernels.dedup`` pre-pass and remaps the fill slots (which
+    ``dedup_rows`` marks with ``fill_id=-1`` — an id that would index the
+    LAST table row under jax's wrapped indexing) onto the first live
+    unique id with zero rows, so the result can be fed straight into any
+    adapt step.  Returns ``(unique_ids, summed_rows, n_unique)``.
+    """
+    db = dedup_lib.dedup_rows(jnp.asarray(ids, jnp.int32),
+                              jnp.asarray(rows))
+    live = db.mask > 0
+    safe_ids = jnp.where(live, db.unique_ids, db.unique_ids[0])
+    safe_rows = jnp.where(live[:, None], db.rows, 0.0)
+    return safe_ids, safe_rows, db.n_unique
+
+
+class Batcher:
+    """Size-or-deadline request accumulator.
+
+    Single-threaded by design: the serving loop owns it (admission
+    concurrency lives in ``serve.server``'s bounded queue, not here).
+
+        b = Batcher(BatcherConfig(batch_ids=64, max_delay_s=0.002))
+        if b.fits(req):
+            b.add(req)
+        batch = b.poll(now)        # CoalescedBatch when full/expired
+        ...
+        batch = b.flush()          # drain whatever is pending
+    """
+
+    def __init__(self, config: BatcherConfig):
+        if config.batch_ids < 1:
+            raise ValueError("batch_ids must be >= 1")
+        self.config = config
+        self._pending: List[AdaptRequest] = []
+        self._pending_ids = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    @property
+    def pending_ids(self) -> int:
+        return self._pending_ids
+
+    def fits(self, req: AdaptRequest) -> bool:
+        return self._pending_ids + req.n_ids <= self.config.batch_ids
+
+    def add(self, req: AdaptRequest) -> None:
+        if req.n_ids > self.config.batch_ids:
+            raise ValueError(
+                f"request with {req.n_ids} ids can never fit a "
+                f"batch_ids={self.config.batch_ids} batch")
+        if not self.fits(req):
+            raise ValueError("request does not fit the forming batch — "
+                             "poll()/flush() first")
+        self._pending.append(req)
+        self._pending_ids += req.n_ids
+
+    def deadline(self) -> Optional[float]:
+        """Trace time at which the forming batch must flush (None when
+        empty)."""
+        if not self._pending:
+            return None
+        return self._pending[0].t_arrival + self.config.max_delay_s
+
+    def ready(self, now: float) -> bool:
+        """Full (no ``batch_ids``-slot request could still join) or the
+        oldest member's deadline has passed."""
+        if not self._pending:
+            return False
+        if self._pending_ids >= self.config.batch_ids:
+            return True
+        return now >= self.deadline()
+
+    def poll(self, now: float) -> Optional[CoalescedBatch]:
+        return self.flush() if self.ready(now) else None
+
+    def flush(self) -> Optional[CoalescedBatch]:
+        if not self._pending:
+            return None
+        reqs, n_live = self._pending, self._pending_ids
+        self._pending, self._pending_ids = [], 0
+        ids, rows = coalesce(reqs, self.config.batch_ids)
+        return CoalescedBatch(ids, rows, reqs, n_live,
+                              t_oldest=reqs[0].t_arrival)

@@ -1,0 +1,132 @@
+"""Double-buffered (table, sketch-state) store — lock-free serve reads
+against in-flight adapt steps (DESIGN.md §16).
+
+The serving problem: lookups (``table[ids]``) happen on every request,
+adapt steps mutate the table AND the count-min sketch behind it, and a
+reader must never observe a half-applied step — e.g. the new table with
+the old sketch, or a sketch whose device buffers are still being written.
+Locks on the read path would put the adapt step's multi-millisecond
+latency into every lookup's tail.
+
+The same trick as ``obs.probes.TableMonitor``'s telemetry double-buffer:
+two generations, PUBLISHED and SHADOW.
+
+  * Readers call ``read()`` — a single Python attribute load of an
+    immutable ``Snapshot`` (atomic under the GIL; equivalently a pointer
+    acquire).  No lock, no copy: jax arrays are immutable, so a reader
+    holding generation N keeps a fully consistent (table, opt_state,
+    version) triple for as long as it wants, even after N+1 publishes.
+  * The (single) writer computes the next generation FROM the published
+    snapshot (``begin_adapt``), stages the result (``stage`` — invisible
+    to readers), and ``publish()`` blocks until the staged arrays are
+    fully materialized on device BEFORE swapping the reference.  The
+    swap is one reference assignment: a reader sees either generation N
+    complete or generation N+1 complete, never a torn mix — pinned by
+    tests/test_serve.py's forced-interleaving test.
+
+Donation safety: the adapt step must NOT be jitted with
+``donate_argnums`` over the table/opt-state arguments.  Donation
+invalidates the INPUT buffers — which are exactly the published
+generation that concurrent readers still hold.  ``begin_adapt`` hands
+out the published arrays, so a donating jit would pull the floor out
+from under every in-flight ``read()``.  (Training loops donate because
+nothing else aliases the state; serving aliases it by design.)
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, NamedTuple, Tuple
+
+import jax
+
+
+class Snapshot(NamedTuple):
+    """One immutable published generation."""
+
+    table: Any       # (n, d) jax array
+    opt_state: Any   # optimizer-state pytree (count-min sketch et al.)
+    version: int     # generation counter, +1 per publish
+
+
+class DoubleBufferedStore:
+    """Published/shadow generations of a (table, opt_state) pair.
+
+        store = DoubleBufferedStore(table, opt_state)
+        snap = store.read()                    # lock-free, any thread
+        t, s = store.begin_adapt()             # writer: published inputs
+        store.stage(*adapt_fn(t, s, ids, rows))
+        store.publish()                        # materialize, then swap
+
+    One writer at a time (the serving loop is serialized); ``_write_lock``
+    only guards against writer misuse, never touches the read path.
+    """
+
+    def __init__(self, table, opt_state):
+        self._published = Snapshot(table, opt_state, 0)
+        self._shadow: Tuple[Any, Any] | None = None
+        self._write_lock = threading.Lock()
+
+    # -- read path (lock-free) --------------------------------------------
+    def read(self) -> Snapshot:
+        """Current published generation — one attribute load, never blocks
+        on an in-flight adapt."""
+        return self._published
+
+    def read_rows(self, ids) -> Tuple[Any, int]:
+        """Serve-side lookup: gather rows from the published table.
+        Returns ``(rows, version)`` so a caller can tag responses with the
+        generation that produced them."""
+        snap = self._published
+        return snap.table[ids], snap.version
+
+    @property
+    def version(self) -> int:
+        return self._published.version
+
+    # -- write path (single writer) ---------------------------------------
+    def begin_adapt(self) -> Tuple[Any, Any]:
+        """Inputs for the next adapt step: the published (table,
+        opt_state).  Raises if a staged generation is pending — the
+        serving loop must publish (or drop) before computing the next
+        step, or it would silently fork history."""
+        with self._write_lock:
+            if self._shadow is not None:
+                raise RuntimeError(
+                    "begin_adapt with a staged generation pending — "
+                    "publish() or drop_staged() first")
+            snap = self._published
+            return snap.table, snap.opt_state
+
+    def stage(self, table, opt_state) -> None:
+        """Land an adapt result in the shadow generation.  Not visible to
+        readers until ``publish``."""
+        with self._write_lock:
+            if self._shadow is not None:
+                raise RuntimeError("stage called twice without publish()")
+            self._shadow = (table, opt_state)
+
+    def publish(self, *, block: bool = True) -> Snapshot:
+        """Swap the staged generation in.  ``block=True`` (default) waits
+        for the staged arrays to fully materialize on device first, so a
+        reader can never gather from a buffer whose transfer/compute is
+        still in flight — the torn-read guarantee.  ``block=False`` is
+        for callers that already synchronized (e.g. via ``timed_adapt``,
+        which blocks as part of the latency measurement)."""
+        with self._write_lock:
+            if self._shadow is None:
+                raise RuntimeError("publish with nothing staged")
+            table, opt_state = self._shadow
+            if block:
+                jax.block_until_ready((table, opt_state))
+            snap = Snapshot(table, opt_state,
+                            self._published.version + 1)
+            # the one atomic step: readers see old-complete or
+            # new-complete, nothing in between
+            self._published = snap
+            self._shadow = None
+            return snap
+
+    def drop_staged(self) -> None:
+        """Abandon a staged generation (failed/aborted adapt)."""
+        with self._write_lock:
+            self._shadow = None

@@ -164,6 +164,12 @@ def make_serve_step(cfg: ArchConfig, *, batch: int, max_seq: int) -> ServeStep:
                      max_seq=max_seq, batch=batch)
 
 
+# sentinel: "the caller did not choose a dir_clip" — distinguishable from
+# an explicit 10.0 (or None), so the single-device path can reject dp-only
+# arguments instead of silently ignoring them
+_DIR_CLIP_DEFAULT = object()
+
+
 def make_online_adapt_step(n_rows: int, dim: int, *, lr=1e-4,
                            b2: float = 0.999, eps: float = 1e-8,
                            hparams: Optional[SketchHParams] = None,
@@ -173,7 +179,7 @@ def make_online_adapt_step(n_rows: int, dim: int, *, lr=1e-4,
                            dp_axis: Optional[str] = None,
                            mesh: Optional[Mesh] = None,
                            error_feedback: bool = False,
-                           dir_clip: Optional[float] = 10.0):
+                           dir_clip=_DIR_CLIP_DEFAULT):
     """Serve-time sparse adaptation of an embedding table.
 
     Serving workloads that personalize online (session embeddings, bandit
@@ -211,10 +217,28 @@ def make_online_adapt_step(n_rows: int, dim: int, *, lr=1e-4,
         if v_store is not None:
             v_store = dataclasses.replace(v_store, backend=store_backend)
     if dp_axis is None:
+        # error_feedback / dir_clip only exist on the DP reduction path
+        # (sketched all-reduce residual + trust clamp); silently ignoring
+        # them here would let a fleet think it runs with stability guards
+        # it doesn't have
+        if error_feedback:
+            raise ValueError(
+                "error_feedback=True needs dp_axis: the residual sketch "
+                "accumulates the CROSS-REPLICA 2nd-moment term of the "
+                "sketched all-reduce (DESIGN.md §13) — a single-device "
+                "adapt step has no such term")
+        if dir_clip is not _DIR_CLIP_DEFAULT:
+            raise ValueError(
+                "dir_clip only applies to the dp_axis path (it trust-"
+                "clamps the direction against sketched-reduce estimator "
+                "noise); the single-device step would silently ignore "
+                "it — drop the argument or set dp_axis")
         opt = opt_lib.sparse_rows_adam(
             lr, b2=b2, eps=eps, shape=(n_rows, dim), path=path, hparams=hp,
             track_first_moment=False, v_store=v_store)
     else:
+        if dir_clip is _DIR_CLIP_DEFAULT:
+            dir_clip = 10.0
         opt = opt_lib.sparse_rows_adam_dp(
             lr, b2=b2, eps=eps, shape=(n_rows, dim), path=path,
             axis_name=dp_axis, hparams=hp, track_first_moment=False,
@@ -235,13 +259,37 @@ def make_online_adapt_step(n_rows: int, dim: int, *, lr=1e-4,
                                              dp_axis=dp_axis)
 
 
+def make_dense_adapt_step(n_rows: int, dim: int, *, lr=1e-4,
+                          b2: float = 0.999, eps: float = 1e-8):
+    """Dense-baseline sibling of ``make_online_adapt_step``: the β₁=0
+    update rule with a FULL (n, d) 2nd-moment buffer instead of a
+    count-min sketch — the memory the sketch arm frees.  Same
+    ``(init_state_fn, adapt_fn)`` contract and (ids, grad_rows) calling
+    convention (``dense_rows_adam`` under the hood, so per-step work is
+    still O(touched rows)); the serving benchmark replays the same
+    traffic trace against both arms."""
+    from repro.train.extreme import dense_rows_adam
+    opt = dense_rows_adam(lr, b1=0.0, b2=b2, eps=eps, shape=(n_rows, dim))
+
+    def init_state_fn():
+        return opt.init()
+
+    def adapt_fn(table, opt_state, ids, grad_rows):
+        updates, opt_state = opt.update(
+            {"ids": ids, "rows": grad_rows}, opt_state)
+        return opt_lib.apply_sparse_updates(table, updates), opt_state
+
+    return init_state_fn, adapt_fn
+
+
 def timed_adapt(adapt_fn, tracker=None, *, capacity: int = 4096):
     """Wrap an ``adapt_fn`` with serve-latency telemetry (DESIGN.md §15).
 
     Returns ``(wrapped_adapt_fn, tracker)``: each call runs under a
-    ``jax.profiler.TraceAnnotation`` span, blocks on the returned table
-    (a latency number for a dispatched-but-unfinished update would be
-    fiction), and records wall time into an ``obs.LatencyTracker``.
+    ``jax.profiler.TraceAnnotation`` span, blocks on BOTH the returned
+    table and the optimizer state (the sketch write is the bulk of the
+    step's work — blocking on the table alone records a latency that
+    excludes it), and records wall time into an ``obs.LatencyTracker``.
 
         adapt, lat = timed_adapt(adapt_fn)
         ...
@@ -261,7 +309,7 @@ def timed_adapt(adapt_fn, tracker=None, *, capacity: int = 4096):
         t0 = time.perf_counter()
         with _trace_annotation("obs.adapt"):
             table, opt_state = adapt_fn(table, opt_state, ids, grad_rows)
-            jax.block_until_ready(table)
+            jax.block_until_ready((table, opt_state))
         lat.record(time.perf_counter() - t0)
         return table, opt_state
 

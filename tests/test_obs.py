@@ -295,3 +295,59 @@ class TestServeTelemetry:
                     reads_per_s=lat.per_second())
         recs = validate_file(tmp_path / "metrics.jsonl")
         assert recs[-1]["adapt_ms"]["count"] == 5
+
+
+class TestServeSloWarnings:
+    """report.analyze serve-section SLO gates (DESIGN.md §16): p99 above
+    the record's own slo_p99_ms (or the --serve-p99-warn fallback) and
+    nonzero shed rate both warn — and --strict turns them into exit 1."""
+
+    def _hist(self, p99):
+        return {"count": 10, "mean_ms": p99 / 2, "p50_ms": p99 / 2,
+                "p90_ms": p99 * 0.9, "p99_ms": p99, "max_ms": p99}
+
+    def _serve(self, **kw):
+        return {"schema": SCHEMA_VERSION, "kind": "serve", **kw}
+
+    def test_p99_over_record_slo_warns(self):
+        digest = analyze([self._serve(adapt_ms=self._hist(80.0),
+                                      slo_p99_ms=50.0, shed_rate=0.0)])
+        cats = {w.split(":")[0] for w in digest["warnings"]}
+        assert cats == {"serve-slo"}
+
+    def test_fallback_threshold_when_record_has_no_slo(self):
+        rec = self._serve(adapt_ms=self._hist(80.0))
+        assert analyze([rec])["warnings"] == []
+        digest = analyze([rec], serve_p99_warn=50.0)
+        assert any(w.startswith("serve-slo") for w in digest["warnings"])
+
+    def test_nonzero_shed_warns(self):
+        digest = analyze([self._serve(adapt_ms=self._hist(1.0),
+                                      slo_p99_ms=50.0, shed_rate=0.25,
+                                      n_shed=5, n_requests=20)])
+        warns = [w for w in digest["warnings"]]
+        assert len(warns) == 1 and warns[0].startswith("serve-shed")
+        assert "5/20" in warns[0]
+
+    def test_healthy_serve_no_warnings(self):
+        digest = analyze([self._serve(adapt_ms=self._hist(10.0),
+                                      slo_p99_ms=50.0, shed_rate=0.0)])
+        assert digest["warnings"] == []
+
+    def test_strict_exit_and_render(self, tmp_path):
+        import io
+
+        from repro.obs.report import main, render
+        with MetricsWriter(tmp_path, run_meta={}) as w:
+            w.write("serve", adapt_ms=self._hist(80.0), slo_p99_ms=50.0,
+                    shed_rate=0.1, n_shed=2, n_requests=20, n_batches=4,
+                    request_ms=self._hist(90.0), reads_per_s=100.0)
+        path = str(tmp_path / "metrics.jsonl")
+        assert main([path]) == 0                      # non-strict: report only
+        assert main([path, "--strict"]) == 1
+        buf = io.StringIO()
+        render(analyze(validate_file(path)), out=buf)
+        out = buf.getvalue()
+        assert "serve-slo" in out and "serve-shed" in out
+        assert "p50" in out and "p99" in out
+        assert "request latency" in out and "shed: 2/20" in out

@@ -1,0 +1,469 @@
+"""Online-adaptation serving subsystem (DESIGN.md §16).
+
+Covers the batcher's size-or-deadline + pad-with-first-id contracts, the
+bit-identity of the coalesced serving path against a single raw step
+(acceptance), the double-buffered store's never-torn read guarantee
+under a forced interleaving (acceptance), the server's shed/backpressure
+and completion-future semantics, serve-record schema validity, and the
+serve-path store-resolution satellites (v_store= + store_backend=
+precedence including the 'interpret' backend, CMS cleaning firing across
+repeated adapt calls, dp-only arguments rejected without dp_axis).
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cleaning import CleaningSchedule
+from repro.core.optimizers import SketchHParams
+from repro.core.stores import CountMinStore
+from repro.serve import (AdaptRequest, AdaptServer, Batcher, BatcherConfig,
+                         DoubleBufferedStore, RequestShed, ServerConfig,
+                         TraceConfig, coalesce, dedup_coalesce,
+                         make_dense_adapt_step, make_online_adapt_step,
+                         make_trace, replay, trace_stats)
+
+N_ROWS, DIM = 256, 8
+
+
+def _req(ids, *, user=0, t=0.0, seed=0, scale=0.1):
+    ids = np.asarray(ids, np.int32)
+    rng = np.random.RandomState(seed)
+    rows = (rng.standard_normal((ids.shape[0], DIM)) * scale
+            ).astype(np.float32)
+    return AdaptRequest(user=user, ids=ids, grad_rows=rows, t_arrival=t)
+
+
+def _make_step(**kw):
+    return make_online_adapt_step(N_ROWS, DIM, lr=1e-2, b2=0.9, **kw)
+
+
+def _leaves_equal(a, b):
+    la = [x for x in jax.tree_util.tree_leaves(a)]
+    lb = [x for x in jax.tree_util.tree_leaves(b)]
+    assert len(la) == len(lb)
+    return all(bool(jnp.array_equal(x, y)) for x, y in zip(la, lb))
+
+
+class TestBatcher:
+    def test_size_trigger_before_deadline(self):
+        b = Batcher(BatcherConfig(batch_ids=8, max_delay_s=10.0))
+        b.add(_req([1, 2, 3, 4], t=0.0))
+        assert not b.ready(now=0.0)
+        b.add(_req([5, 6, 7, 8], t=0.001))
+        assert b.ready(now=0.001)          # full — deadline far away
+        batch = b.poll(now=0.001)
+        assert batch is not None and len(batch) == 2
+        assert batch.n_live == 8
+        assert len(b) == 0
+
+    def test_deadline_trigger(self):
+        b = Batcher(BatcherConfig(batch_ids=64, max_delay_s=0.005))
+        b.add(_req([1, 2], t=1.0))
+        assert b.deadline() == pytest.approx(1.005)
+        assert not b.ready(now=1.004)
+        assert b.ready(now=1.005)
+        batch = b.flush()
+        assert batch.t_oldest == 1.0 and batch.n_live == 2
+
+    def test_capacity_guards(self):
+        b = Batcher(BatcherConfig(batch_ids=4))
+        with pytest.raises(ValueError, match="never fit"):
+            b.add(_req([1, 2, 3, 4, 5]))
+        b.add(_req([1, 2, 3]))
+        assert not b.fits(_req([4, 5]))
+        with pytest.raises(ValueError, match="does not fit"):
+            b.add(_req([4, 5]))
+
+    def test_coalesce_pads_with_first_id_and_zero_rows(self):
+        reqs = [_req([7, 3], seed=1), _req([3, 9], seed=2)]
+        ids, rows = coalesce(reqs, batch_ids=8)
+        assert ids.shape == (8,) and rows.shape == (8, DIM)
+        np.testing.assert_array_equal(np.asarray(ids[:4]), [7, 3, 3, 9])
+        # padding: first id of the batch, zero rows — the only filler that
+        # is a numerical no-op through the downstream dedup segment-sum
+        np.testing.assert_array_equal(np.asarray(ids[4:]), [7, 7, 7, 7])
+        assert float(jnp.abs(rows[4:]).sum()) == 0.0
+
+    def test_dedup_coalesce_exact_segment_sums(self):
+        reqs = [_req([5, 1, 5], seed=3), _req([1, 8], seed=4)]
+        ids, rows = coalesce(reqs, batch_ids=8)
+        uids, srows, n_unique = dedup_coalesce(ids, rows)
+        assert int(n_unique) == 3
+        ref = {}
+        for i, rid in enumerate(np.asarray(ids)):
+            ref[int(rid)] = ref.get(int(rid), 0.0) + np.asarray(rows[i])
+        live = np.asarray(uids[:3])
+        np.testing.assert_array_equal(live, sorted(ref))
+        for j, rid in enumerate(live):
+            np.testing.assert_allclose(np.asarray(srows[j]), ref[int(rid)],
+                                       rtol=0, atol=1e-6)
+        # fill slots: remapped onto the first live id with zero rows (a
+        # raw fill_id=-1 would wrap-index the LAST table row)
+        np.testing.assert_array_equal(np.asarray(uids[3:]),
+                                      np.full(5, live[0]))
+        assert float(jnp.abs(srows[3:]).sum()) == 0.0
+
+
+class TestBatchedBitIdentity:
+    """Acceptance: the batched+dedup'd serving path is bit-identical to
+    one step over the same requests' raw concatenated gradients."""
+
+    def _requests(self, n=5, k=8):
+        return [_req(np.random.RandomState(10 + i).randint(0, N_ROWS, k),
+                     seed=20 + i, t=i * 1e-4) for i in range(n)]
+
+    @pytest.mark.parametrize("arm", ["countmin", "dense"])
+    def test_coalesced_step_bit_identical_to_raw_concat(self, arm):
+        if arm == "countmin":
+            init_fn, adapt_fn = _make_step()
+        else:
+            init_fn, adapt_fn = make_dense_adapt_step(N_ROWS, DIM, lr=1e-2,
+                                                      b2=0.9)
+        table = jax.random.normal(jax.random.PRNGKey(0), (N_ROWS, DIM))
+        reqs = self._requests()
+        raw_ids = jnp.asarray(np.concatenate([r.ids for r in reqs]))
+        raw_rows = jnp.asarray(np.concatenate([r.grad_rows for r in reqs]))
+        t_ref, s_ref = adapt_fn(table, init_fn(), raw_ids, raw_rows)
+
+        ids, rows = coalesce(reqs, batch_ids=64)   # 40 live + 24 pad slots
+        t_b, s_b = adapt_fn(table, init_fn(), ids, rows)
+        assert bool(jnp.array_equal(t_ref, t_b))
+        assert _leaves_equal(s_ref, s_b)
+
+    def test_server_replay_bit_identical_one_batch(self):
+        init_fn, adapt_fn = _make_step()
+        table = jax.random.normal(jax.random.PRNGKey(1), (N_ROWS, DIM))
+        reqs = self._requests()
+        raw_ids = jnp.asarray(np.concatenate([r.ids for r in reqs]))
+        raw_rows = jnp.asarray(np.concatenate([r.grad_rows for r in reqs]))
+        t_ref, s_ref = adapt_fn(table, init_fn(), raw_ids, raw_rows)
+
+        srv = AdaptServer(table, init_fn(), adapt_fn,
+                          ServerConfig(batch_ids=64, max_delay_s=1.0,
+                                       queue_cap=64))
+        comps = replay(srv, reqs, warmup=False)
+        assert srv.n_batches == 1
+        assert all(c.result() == 1 for c in comps)
+        snap = srv.store.read()
+        assert bool(jnp.array_equal(t_ref, snap.table))
+        assert _leaves_equal(s_ref, snap.opt_state)
+
+    def test_multi_batch_matches_sequential_steps(self):
+        init_fn, adapt_fn = _make_step()
+        table = jax.random.normal(jax.random.PRNGKey(2), (N_ROWS, DIM))
+        reqs = self._requests(n=6)
+        # 8 ids per request, batch_ids=16 → three batches of two requests
+        srv = AdaptServer(table, init_fn(), adapt_fn,
+                          ServerConfig(batch_ids=16, max_delay_s=1.0,
+                                       queue_cap=64))
+        replay(srv, reqs, warmup=False)
+        assert srv.n_batches == 3
+
+        t_ref, s_ref = table, init_fn()
+        for i in range(0, 6, 2):
+            ids, rows = coalesce(reqs[i:i + 2], batch_ids=16)
+            t_ref, s_ref = adapt_fn(t_ref, s_ref, ids, rows)
+        snap = srv.store.read()
+        assert bool(jnp.array_equal(t_ref, snap.table))
+        assert _leaves_equal(s_ref, snap.opt_state)
+
+
+class TestDoubleBuffer:
+    """Acceptance: reads during an in-flight adapt never observe a torn
+    or partial (table, sketch) pair."""
+
+    def test_forced_interleaving_never_torn(self):
+        init_fn, adapt_fn = _make_step()
+        table0 = jax.random.normal(jax.random.PRNGKey(3), (N_ROWS, DIM))
+        ids = jnp.asarray(np.arange(16) % N_ROWS, jnp.int32)
+        rows = jax.random.normal(jax.random.PRNGKey(4), (16, DIM)) * 0.1
+
+        # offline reference trajectory: generation i = i sequential steps
+        refs = [(table0, init_fn())]
+        for _ in range(3):
+            refs.append(adapt_fn(*refs[-1], ids, rows))
+
+        store = DoubleBufferedStore(table0, init_fn())
+        for gen in range(3):
+            t_in, s_in = store.begin_adapt()
+            out = adapt_fn(t_in, s_in, ids, rows)
+            # adapt computed but NOT staged: readers still see gen
+            snap = store.read()
+            assert snap.version == gen
+            assert bool(jnp.array_equal(snap.table, refs[gen][0]))
+            assert _leaves_equal(snap.opt_state, refs[gen][1])
+            store.stage(*out)
+            # staged but NOT published: still the old complete generation
+            snap = store.read()
+            assert snap.version == gen
+            assert bool(jnp.array_equal(snap.table, refs[gen][0]))
+            assert _leaves_equal(snap.opt_state, refs[gen][1])
+            store.publish()
+            # published: the new complete generation, atomically
+            snap = store.read()
+            assert snap.version == gen + 1
+            assert bool(jnp.array_equal(snap.table, refs[gen + 1][0]))
+            assert _leaves_equal(snap.opt_state, refs[gen + 1][1])
+
+    def test_threaded_readers_see_consistent_pairs(self):
+        """Concurrent readers during a writer loop: every observed
+        snapshot must have table, opt_state and version all from the SAME
+        generation (generation g stamps the table with g and the state
+        step with g)."""
+        store = DoubleBufferedStore(jnp.zeros((4, 4)),
+                                    {"step": jnp.zeros((), jnp.int32)})
+        stop = threading.Event()
+        violations = []
+
+        def reader():
+            while not stop.is_set():
+                snap = store.read()
+                t = float(snap.table[0, 0])
+                s = int(snap.opt_state["step"])
+                if not (t == s == snap.version):
+                    violations.append((t, s, snap.version))
+
+        threads = [threading.Thread(target=reader) for _ in range(4)]
+        for th in threads:
+            th.start()
+        try:
+            for gen in range(1, 60):
+                store.begin_adapt()
+                store.stage(jnp.full((4, 4), float(gen)),
+                            {"step": jnp.asarray(gen, jnp.int32)})
+                store.publish()
+        finally:
+            stop.set()
+            for th in threads:
+                th.join()
+        assert violations == []
+
+    def test_writer_misuse_guards(self):
+        store = DoubleBufferedStore(jnp.zeros((2,)), {})
+        with pytest.raises(RuntimeError, match="nothing staged"):
+            store.publish()
+        store.begin_adapt()
+        store.stage(jnp.ones((2,)), {})
+        with pytest.raises(RuntimeError, match="staged twice|without"):
+            store.stage(jnp.ones((2,)), {})
+        with pytest.raises(RuntimeError, match="pending"):
+            store.begin_adapt()
+        store.drop_staged()
+        store.begin_adapt()                       # allowed again
+        assert store.version == 0
+
+    def test_read_rows_tags_generation(self):
+        store = DoubleBufferedStore(jnp.arange(8.0).reshape(4, 2), {})
+        rows, version = store.read_rows(jnp.asarray([1, 3]))
+        assert version == 0
+        np.testing.assert_array_equal(np.asarray(rows), [[2., 3.], [6., 7.]])
+
+
+class TestAdaptServer:
+    def _server(self, **kw):
+        init_fn, adapt_fn = _make_step()
+        table = jax.random.normal(jax.random.PRNGKey(5), (N_ROWS, DIM))
+        cfg = dict(batch_ids=16, max_delay_s=1e-3, queue_cap=4)
+        cfg.update(kw)
+        return AdaptServer(table, init_fn(), adapt_fn, ServerConfig(**cfg))
+
+    def test_completion_futures(self):
+        srv = self._server(batch_ids=64, queue_cap=64)
+        reqs = [_req([i, i + 1], t=i * 1e-4, seed=i) for i in range(4)]
+        comps = [srv.submit(r) for r in reqs]
+        assert all(not c.done() for c in comps)
+        srv.drain()
+        assert all(c.done() and not c.shed for c in comps)
+        assert all(c.result() == srv.store.version for c in comps)
+        assert all(c.latency_s >= 0.0 for c in comps)
+
+    def test_slow_arrivals_dispatch_on_deadline(self):
+        srv = self._server(batch_ids=64, max_delay_s=1e-3, queue_cap=64)
+        # gaps far beyond the deadline → one batch per request
+        reqs = [_req([i], t=i * 1.0, seed=i) for i in range(3)]
+        replay(srv, reqs, warmup=False)
+        assert srv.n_batches == 3
+        assert srv.n_done == 3 and srv.n_shed == 0
+
+    def test_backpressure_sheds_at_queue_cap(self):
+        srv = self._server(queue_cap=2, max_delay_s=1e-3)
+        # make service time dominate: wrap the adapt to take >= 20 ms so
+        # the virtual clock saturates instantly at a 0.1 ms arrival gap
+        import time as _time
+        inner = srv._adapt
+
+        def slow(*a):
+            _time.sleep(0.02)
+            return inner(*a)
+        srv._adapt = slow
+        reqs = [_req([i % N_ROWS], t=i * 1e-4, seed=i) for i in range(30)]
+        comps = replay(srv, reqs, warmup=False)
+        srv.drain()
+        shed = [c for c in comps if c.shed]
+        assert shed, "expected overload to shed"
+        assert srv.n_shed == len(shed)
+        assert srv.n_done + srv.n_shed == srv.n_submitted == 30
+        with pytest.raises(RequestShed):
+            shed[0].result()
+        assert srv.shed_rate > 0
+        assert all(c.done() for c in comps)
+
+    def test_metrics_record_schema_and_writer(self, tmp_path):
+        from repro.obs.metrics import MetricsWriter, validate_file
+        srv = self._server(batch_ids=64, queue_cap=64)
+        replay(srv, [_req([1, 2], seed=9)], warmup=False)
+        rec = srv.metrics_record(offered_load=100.0)
+        assert rec["adapt_ms"]["count"] == 1
+        assert rec["n_batches"] == 1 and rec["shed_rate"] == 0.0
+        assert rec["slo_p99_ms"] == ServerConfig().slo_p99_ms
+        with MetricsWriter(tmp_path, run_meta={"workload": "serve"}) as w:
+            srv.emit(w, offered_load=100.0)
+        recs = validate_file(tmp_path / "metrics.jsonl")
+        assert [r["kind"] for r in recs] == ["meta", "serve"]
+        assert recs[1]["offered_load"] == 100.0
+
+    def test_reads_lock_free_during_replay(self):
+        srv = self._server(batch_ids=16, queue_cap=64)
+        reqs = [_req([i % N_ROWS for i in range(j, j + 4)], t=j * 1e-4,
+                     seed=j) for j in range(8)]
+        v0 = srv.store.version
+        for r in reqs:
+            srv.submit(r)
+            rows, version = srv.read_rows(jnp.asarray([0, 1]))
+            assert rows.shape == (2, DIM) and version >= v0
+        srv.drain()
+        assert srv.store.version == srv.n_batches
+
+
+class TestTraffic:
+    def test_trace_deterministic_and_sorted(self):
+        cfg = TraceConfig(n_requests=50, n_rows=128, dim=4, seed=7)
+        a, b = make_trace(cfg), make_trace(cfg)
+        assert len(a) == 50
+        for ra, rb in zip(a, b):
+            assert ra.t_arrival == rb.t_arrival and ra.user == rb.user
+            np.testing.assert_array_equal(ra.ids, rb.ids)
+            np.testing.assert_array_equal(ra.grad_rows, rb.grad_rows)
+        ts = [r.t_arrival for r in a]
+        assert ts == sorted(ts)
+        stats = trace_stats(a)
+        assert stats["dup_ratio"] > 1.0     # zipf head duplicates rows
+
+    def test_zipf_head_is_hot_but_not_low_index(self):
+        cfg = TraceConfig(n_requests=400, n_rows=512, dim=4, alpha=1.4,
+                          seed=1)
+        trace = make_trace(cfg)
+        all_ids = np.concatenate([r.ids for r in trace])
+        top = np.bincount(all_ids, minlength=cfg.n_rows).argmax()
+        counts = np.bincount(all_ids, minlength=cfg.n_rows)
+        assert counts[top] > 5 * counts.mean()
+        assert trace_stats(trace)["total_ids"] == 400 * 8
+
+    def test_uniform_arrivals(self):
+        cfg = TraceConfig(n_requests=10, arrival="uniform",
+                          offered_load=100.0, seed=0)
+        gaps = np.diff([r.t_arrival for r in make_trace(cfg)])
+        np.testing.assert_allclose(gaps, 0.01, rtol=1e-6)
+        with pytest.raises(ValueError, match="arrival"):
+            make_trace(TraceConfig(arrival="bursty"))
+
+
+class TestServeStoreResolution:
+    """Satellites: v_store=/store_backend= precedence on the serve path,
+    and CMS cleaning firing across repeated adapt calls."""
+
+    def _spy_lookup(self, monkeypatch):
+        from repro.kernels import registry
+        calls = []
+        orig = registry.lookup
+
+        def spy(kind, op, backend=None):
+            calls.append((kind, op, backend))
+            return orig(kind, op, backend)
+        monkeypatch.setattr(registry, "lookup", spy)
+        return calls
+
+    def _adapt_once(self, init_fn, adapt_fn):
+        table = jnp.zeros((N_ROWS, DIM))
+        ids = jnp.asarray([1, 2, 3, 1], jnp.int32)
+        rows = jnp.ones((4, DIM)) * 0.1
+        return adapt_fn(table, init_fn(), ids, rows)
+
+    def _cms(self, backend=None, cleaning=None):
+        hp = SketchHParams()
+        return CountMinStore(spec=hp.spec("serve_adapt", (N_ROWS, DIM),
+                                          signed=False),
+                             shape=(N_ROWS, DIM), backend=backend,
+                             cleaning=cleaning)
+
+    def test_v_store_backend_wins_over_hparams(self, monkeypatch):
+        calls = self._spy_lookup(monkeypatch)
+        init_fn, adapt_fn = _make_step(
+            hparams=SketchHParams(backend="ref"),
+            v_store=self._cms(backend="xla"))
+        self._adapt_once(init_fn, adapt_fn)
+        assert ("pair", "adam_rows", "xla") in calls
+
+    def test_store_backend_overrides_planner_resolved_store(self,
+                                                            monkeypatch):
+        """``store_backend=`` must replace the backend pinned ON the
+        v_store (the planner-resolved case) — including 'interpret'."""
+        calls = self._spy_lookup(monkeypatch)
+        init_fn, adapt_fn = _make_step(v_store=self._cms(backend="xla"),
+                                       store_backend="interpret")
+        table, state = self._adapt_once(init_fn, adapt_fn)
+        assert ("pair", "adam_rows", "interpret") in calls
+        assert not any(b == "xla" for _, _, b in calls)
+        # and the interpret backend actually ran: rows moved
+        assert float(jnp.abs(table).sum()) > 0.0
+
+    def test_hparams_backend_used_when_store_carries_none(self,
+                                                          monkeypatch):
+        calls = self._spy_lookup(monkeypatch)
+        init_fn, adapt_fn = _make_step(
+            hparams=SketchHParams(backend="ref"), v_store=self._cms())
+        self._adapt_once(init_fn, adapt_fn)
+        assert ("pair", "adam_rows", "ref") in calls
+
+    def test_cms_cleaning_fires_across_adapt_calls(self, monkeypatch):
+        cleaning = CleaningSchedule(alpha=0.1, every=2)
+        clean_calls = []
+        orig = CountMinStore.clean
+
+        def spy(self, state, step):
+            clean_calls.append(step)
+            return orig(self, state, step)
+        monkeypatch.setattr(CountMinStore, "clean", spy)
+
+        def run(v_store):
+            init_fn, adapt_fn = _make_step(v_store=v_store,
+                                           store_backend="xla")
+            table, state = jnp.zeros((N_ROWS, DIM)), init_fn()
+            ids = jnp.asarray([1, 2, 3, 4], jnp.int32)
+            rows = jnp.ones((4, DIM)) * 0.1
+            for _ in range(4):
+                table, state = adapt_fn(table, state, ids, rows)
+            return state
+
+        s_clean = run(self._cms(backend=None, cleaning=cleaning))
+        n_hook_calls = len(clean_calls)
+        assert n_hook_calls == 4          # the hook runs EVERY update...
+        s_plain = run(self._cms())
+        # ...and the schedule fired on steps 2 and 4: the cleaned sketch
+        # carries strictly less mass than the uncleaned one.  The
+        # store_backend replace must have preserved the cleaning config.
+        mass = lambda s: float(jnp.abs(s["v"]).sum())  # noqa: E731
+        assert mass(s_clean) < 0.5 * mass(s_plain)
+
+    def test_dp_only_args_rejected_without_dp_axis(self):
+        with pytest.raises(ValueError, match="error_feedback"):
+            _make_step(error_feedback=True)
+        with pytest.raises(ValueError, match="dir_clip"):
+            _make_step(dir_clip=5.0)
+        with pytest.raises(ValueError, match="dir_clip"):
+            _make_step(dir_clip=None)     # explicit None is still explicit
+        init_fn, adapt_fn = _make_step()  # defaults stay valid
+        self._adapt_once(init_fn, adapt_fn)
