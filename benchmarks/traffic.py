@@ -13,6 +13,18 @@ optimized post-SPMD HLO (launch/analysis.parse_collectives) — measured,
 not just predicted; the prediction (`sketched_reduce.traffic_ratio`, the
 bytes-based accounting) is recorded alongside for regression.
 
+Each record also carries the MODEL-PARALLEL sketch rows (DESIGN.md §17):
+
+  * ``routing_bytes`` — the shard-axis routing psum, measured from a
+    shard-ONLY compile (state sharded 8-way over 'model', no dp axis):
+    the routing psum is then the step's only collective, so the HLO
+    collective bytes ARE the routing traffic.  ``routing_predicted`` is
+    ``sketched_reduce.routing_bytes`` over the four query groups the
+    step routes (g, v, g², m).
+  * ``dp_sharded_bytes`` — the composed dp×shard step (2×4 mesh): the
+    PR 4 gradient-sketch psum now moves width SLABS, so its payload is
+    1/shards of the 1D dp sketched payload, plus the routing psum.
+
     PYTHONPATH=src python benchmarks/traffic.py            # full sweep
     PYTHONPATH=src python benchmarks/traffic.py --quick
 
@@ -40,6 +52,7 @@ from repro.launch import analysis
 from repro.train.steps import make_sparse_embedding_step
 
 N_DEV = 8
+SHARDS = 4          # shard count for the composed dp(2) × shard(4) mesh
 
 
 def _collective_bytes(fn, args) -> dict:
@@ -84,12 +97,35 @@ def run(n_rows: int, dim: int, batch: int, compressions) -> dict:
         dn_cols = _collective_bytes(
             dn_step, (table, dn_opt.init(), ids_arr, rows_arr))
 
+        # sharded-sketch routing row (DESIGN.md §17): shard-only mesh —
+        # no dp axis, so the shard-axis routing psum is the step's ONLY
+        # collective and the measured HLO bytes are pure routing traffic
+        mesh_sh = shd.make_mesh_compat((N_DEV,), ("model",))
+        _, sh_step, sh_opt = make_sparse_embedding_step(
+            n_rows, dim, lr=1e-2, hparams=hp, mesh=mesh_sh,
+            sketch_shards=N_DEV)
+        rt_cols = _collective_bytes(
+            sh_step, (table, sh_opt.init(), ids_arr, rows_arr))
+        # composed dp × shard: the PR 4 psum payload shrinks to slabs
+        mesh_2d = shd.make_mesh_compat((N_DEV // SHARDS, SHARDS),
+                                       ("data", "model"))
+        _, ds_step, ds_opt = make_sparse_embedding_step(
+            n_rows, dim, lr=1e-2, hparams=hp, dp_axis="data", mesh=mesh_2d,
+            sketch_shards=SHARDS)
+        ds_cols = _collective_bytes(
+            ds_step, (table, ds_opt.init(), ids_arr, rows_arr))
+
         sk_bytes = sum(sk_cols.values())
         dn_bytes = sum(dn_cols.values())
+        rt_bytes = sum(rt_cols.values())
+        ds_bytes = sum(ds_cols.values())
         spec_m = hp.spec("sparse_embedding", (n_rows, dim), signed=True)
         spec_v = hp.spec("sparse_embedding", (n_rows, dim), signed=False)
         predicted = sr.traffic_ratio(spec_m, batch,
                                      extra_specs=(spec_v,))
+        # the sharded step routes four (depth, k, dim) query groups per
+        # step: ghat, v_old, g²hat, m_old (sketched_reduce.sharded_adam_rows)
+        rt_pred = sr.routing_bytes(batch, spec_m, spec_v, spec_v, spec_m)
         rec = {
             "compression": compression,
             "rows": n_rows, "dim": dim, "batch": batch,
@@ -97,12 +133,20 @@ def run(n_rows: int, dim: int, batch: int, compressions) -> dict:
             "sketched_bytes": sk_bytes, "sketched_collectives": sk_cols,
             "measured_ratio": dn_bytes / sk_bytes if sk_bytes else None,
             "predicted_ratio": predicted,
+            "sketch_shards": N_DEV,
+            "routing_bytes": rt_bytes, "routing_collectives": rt_cols,
+            "routing_predicted": rt_pred,
+            "dp_sharded_shards": SHARDS,
+            "dp_sharded_bytes": ds_bytes, "dp_sharded_collectives": ds_cols,
         }
         records.append(rec)
         print(f"compression={compression:6.1f}x  dense={dn_bytes:>12,} B  "
               f"sketched={sk_bytes:>12,} B  "
               f"measured {rec['measured_ratio']:.1f}x  "
               f"predicted {predicted:.1f}x", flush=True)
+        print(f"{'':>18s}  routing(x{N_DEV})={rt_bytes:>10,} B "
+              f"(pred {rt_pred:,})  dp×shard(2x{SHARDS})={ds_bytes:>12,} B",
+              flush=True)
     return {"devices": N_DEV, "records": records}
 
 

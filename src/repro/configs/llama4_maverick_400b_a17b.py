@@ -17,4 +17,11 @@ CONFIG = ArchConfig(
     d_ff=8192, vocab_size=202048,
     n_experts=128, top_k=1, shared_d_ff=8192, expert_sharding="ep",
     moe_every=2, dense_d_ff=16384, fsdp=True,
+    # per-DEVICE aux budget for the vocab tables (DESIGN.md §17): below
+    # the unsharded CS-MV floor for a (202048, 5120) embedding + softmax
+    # pair (two 3×256-wide sketch moments each ≈ 63 MB), so planning them
+    # REQUIRES model-parallel sketch shards — the motivating config for
+    # ``plan_for_tables(..., shards=N)``; the planner raises
+    # ``InfeasibleBudgetError`` without sharding.
+    aux_budget_bytes=48 * 2**20,
 )

@@ -31,12 +31,23 @@ def _derive_params(seed: int, depth: int) -> np.ndarray:
 
     Returns an int64-free uint32 array of shape (depth, 2).  ``a`` must be
     odd for multiply-shift universality.
+
+    The ownership hash of the hash-range shard layout draws its single
+    pair from a separately derived seed (``_derive_own_params``) so the
+    ``depth`` per-row pairs here are untouched by sharding.
     """
     rng = np.random.RandomState(np.uint32(seed ^ 0x5EED5EED))
     a = rng.randint(0, 2**31, size=depth, dtype=np.int64).astype(np.uint32)
     a = (a << np.uint32(1)) | np.uint32(1)  # force odd
     b = rng.randint(0, 2**31, size=depth, dtype=np.int64).astype(np.uint32)
     return np.stack([a, b], axis=1)
+
+
+def _derive_own_params(seed: int) -> np.ndarray:
+    """One (a, b) pair for the hash-range OWNERSHIP hash, derived from a
+    decorrelated seed so it is independent of the per-row bucket/sign
+    hashes of the same family."""
+    return _derive_params(int(seed) ^ 0x0517A2D5, 1)
 
 
 def _mix(x: jnp.ndarray) -> jnp.ndarray:
@@ -57,16 +68,61 @@ class HashFamily:
     ``s_j(i) = +1`` — with ``width >= n`` the sketch becomes an exact
     (uncompressed) table, which lets tests assert count-sketch optimizers
     coincide bitwise with their dense counterparts.
+
+    ``shards``/``layout`` describe how the width axis partitions over a
+    mesh axis (DESIGN.md §17).  ``layout='width'`` leaves the hash
+    untouched — shard ``s`` simply owns the contiguous width slab
+    ``[s·w/shards, (s+1)·w/shards)``, so an id's ``depth`` rows may land
+    on different shards.  ``layout='hash'`` constrains the family so ALL
+    of an id's rows land inside ONE shard's slab: a dedicated ownership
+    hash picks the shard and the per-row hashes address within the local
+    width — two-level hashing, still 2-universal per row.  With
+    ``shards == 1`` (or identity mode) both layouts coincide with the
+    classic family, and a hash-layout family produces the SAME buckets
+    whether the state is physically sharded or not — single-device runs
+    are the parity reference for sharded ones.
     """
 
     seed: int
     depth: int
     width: int
     identity: bool = False
+    shards: int = 1
+    layout: str = "width"
+
+    def __post_init__(self):
+        if self.layout not in ("width", "hash"):
+            raise ValueError(f"unknown shard layout {self.layout!r} "
+                             f"(expected 'width' or 'hash')")
+        if self.shards < 1 or self.width % self.shards != 0:
+            raise ValueError(f"width {self.width} must divide into "
+                             f"{self.shards} shards")
 
     @property
     def params(self) -> np.ndarray:  # (depth, 2) uint32, host constant
         return _derive_params(self.seed, self.depth)
+
+    @property
+    def local_width(self) -> int:
+        """Buckets per shard slab."""
+        return self.width // self.shards
+
+    def owner(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """Owning shard per id: (...,) int32 -> (...,) int32 in [0, shards).
+
+        Only well-defined per-ID under the 'hash' layout (and identity
+        mode, where every row shares one bucket); under the 'width'
+        layout ownership is per (row, id): ``bucket(ids) // local_width``.
+        """
+        if self.identity:
+            return (ids.astype(jnp.int32) % self.width) // self.local_width
+        if self.layout != "hash":
+            raise ValueError("per-id ownership needs layout='hash' (the "
+                             "'width' layout routes per (depth-row, id): "
+                             "use bucket(ids) // local_width)")
+        p = jnp.asarray(_derive_own_params(self.seed))   # (1, 2)
+        h = _mix(ids.astype(jnp.uint32) * p[0, 0] + p[0, 1])
+        return (h % jnp.uint32(self.shards)).astype(jnp.int32)
 
     def bucket(self, ids: jnp.ndarray) -> jnp.ndarray:
         """h_j(ids): (...,) int32 -> (depth, ...) int32 in [0, width)."""
@@ -78,6 +134,9 @@ class HashFamily:
         # (depth, ...) via broadcasting
         h = _mix(x[None] * p[:, :1].reshape((self.depth,) + (1,) * ids.ndim)
                  + p[:, 1:2].reshape((self.depth,) + (1,) * ids.ndim))
+        if self.layout == "hash" and self.shards > 1:
+            local = (h % jnp.uint32(self.local_width)).astype(jnp.int32)
+            return self.owner(ids)[None] * self.local_width + local
         return (h % jnp.uint32(self.width)).astype(jnp.int32)
 
     def sign(self, ids: jnp.ndarray) -> jnp.ndarray:
@@ -100,9 +159,21 @@ class HashFamily:
         w is even.  We therefore represent the folded family as the same
         hash taken mod the new width — exactness of the fold is asserted
         in tests/test_sketch.py.
+
+        Sharded families fold too (DESIGN.md §17): the 'hash' layout
+        halves each shard's LOCAL width (``h' = owner·(lw/2) + local %
+        (lw/2)``, a per-slab fold that never crosses shards), and the
+        'width' layout halves the total width (the classic fold — its
+        state op pairs columns ``s`` apart, so it crosses shards).  Both
+        require the halved width to still divide into ``shards``.
         """
         if self.width % 2 != 0:
             raise ValueError("fold requires an even sketch width")
+        if (self.width // 2) % self.shards != 0:
+            raise ValueError(
+                f"folding width {self.width} -> {self.width // 2} breaks "
+                f"the {self.shards}-shard partition (slab would be "
+                f"{self.local_width}/2 buckets)")
         return dataclasses.replace(self, width=self.width // 2)
 
 

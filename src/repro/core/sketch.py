@@ -45,7 +45,16 @@ from repro.core.hashing import HashFamily
 
 @dataclasses.dataclass(frozen=True)
 class SketchSpec:
-    """Static description of a sketch tensor (hashable; safe as a jit const)."""
+    """Static description of a sketch tensor (hashable; safe as a jit const).
+
+    ``shards``/``layout`` declare how the width axis partitions over a
+    mesh axis (DESIGN.md §17).  They change NOTHING about the logical
+    state shape — ``init`` still allocates the full ``(depth, width,
+    dim)`` tensor and checkpoints stay whole-array — only how buckets are
+    assigned ('hash' constrains all of an id's rows to one shard's slab;
+    'width' leaves hashing untouched) and which slab primitives below
+    operate shard-locally.
+    """
 
     depth: int
     width: int
@@ -54,15 +63,36 @@ class SketchSpec:
     seed: int = 0
     dtype: jnp.dtype = jnp.float32
     identity: bool = False       # test mode: exact table when width >= n
+    shards: int = 1              # width-axis partitions (1 = unsharded)
+    layout: str = "width"        # 'width' | 'hash' (see HashFamily)
+
+    def __post_init__(self):
+        if self.layout not in ("width", "hash"):
+            raise ValueError(f"unknown shard layout {self.layout!r} "
+                             f"(expected 'width' or 'hash')")
+        if self.shards < 1 or self.width % self.shards != 0:
+            raise ValueError(f"sketch width {self.width} must divide into "
+                             f"{self.shards} shards")
 
     @property
     def family(self) -> HashFamily:
         return HashFamily(seed=self.seed, depth=self.depth, width=self.width,
-                          identity=self.identity)
+                          identity=self.identity, shards=self.shards,
+                          layout=self.layout)
 
     @property
     def shape(self) -> Tuple[int, int, int]:
         return (self.depth, self.width, self.dim)
+
+    @property
+    def local_width(self) -> int:
+        """Width of one shard's slab."""
+        return self.width // self.shards
+
+    @property
+    def slab_shape(self) -> Tuple[int, int, int]:
+        """Shape of one shard's slab: (depth, width/shards, dim)."""
+        return (self.depth, self.local_width, self.dim)
 
     def nbytes(self) -> int:
         """Exact byte footprint of ``init(self)`` — dtype-aware (a bf16
@@ -70,7 +100,14 @@ class SketchSpec:
         planner's accounting (``repro.plan.accounting``) must agree with."""
         return self.depth * self.width * self.dim * jnp.dtype(self.dtype).itemsize
 
+    def shard_nbytes(self) -> int:
+        """Per-device byte footprint when sharded: one slab."""
+        return self.nbytes() // self.shards
+
     def fold(self) -> "SketchSpec":
+        # family.fold() owns the divisibility checks (even width, halved
+        # width still divides into shards)
+        self.family.fold()
         return dataclasses.replace(self, width=self.width // 2)
 
 
@@ -198,6 +235,90 @@ def decay(S: jnp.ndarray, alpha) -> jnp.ndarray:
     return S * jnp.asarray(alpha, dtype=S.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Shard-slab primitives (DESIGN.md §17) — the model-parallel decomposition
+# of UPDATE/QUERY.  A shard holds the contiguous width slab
+# ``S[:, shard·lw : (shard+1)·lw]`` (lw = width/shards); these ops use the
+# FULL-width hash family and mask to the slab, so
+#
+#     update(S)            == concat_s(update_slab(slab_s))       (exact)
+#     gather of query(S)   == Σ_s gather_slab(slab_s)             (exact)
+#
+# — each (depth-row, id) cell is owned by exactly one shard, making the
+# sum an assembly, not an approximation.  The distributed layer
+# (``repro.distributed.sketched_reduce``) runs these inside ``shard_map``
+# with a psum over the shard axis as the routing collective; they are
+# equally valid single-device (loop over shards), which is how the parity
+# tests pin exactness.  Under the 'hash' layout every row of an owned id
+# is in-slab, so the owner's update_slab IS the whole update for that id.
+# ---------------------------------------------------------------------------
+
+def init_slab(spec: SketchSpec) -> jnp.ndarray:
+    """Zero slab for one shard: (depth, width/shards, dim)."""
+    return jnp.zeros(spec.slab_shape, dtype=spec.dtype)
+
+
+def slab_of(spec: SketchSpec, S: jnp.ndarray, shard: int) -> jnp.ndarray:
+    """Shard ``shard``'s width slab of a full sketch tensor."""
+    lw = spec.local_width
+    return S[:, shard * lw:(shard + 1) * lw]
+
+
+def _slab_buckets(spec: SketchSpec, ids: jnp.ndarray, shard):
+    """(local buckets clamped to [0, lw], ownership mask) for one shard.
+
+    Out-of-slab entries get local bucket ``lw`` — one past the slab — so
+    scatter mode 'drop' discards them and gathers clamp+mask them."""
+    lw = spec.local_width
+    b = spec.family.bucket(ids)                    # (depth, k) full width
+    local = b - jnp.asarray(shard, jnp.int32) * lw
+    own = (local >= 0) & (local < lw)
+    return jnp.where(own, local, lw), own
+
+
+def update_slab(spec: SketchSpec, slab: jnp.ndarray, ids: jnp.ndarray,
+                delta: jnp.ndarray, shard) -> jnp.ndarray:
+    """Shard-local UPDATE: scatter-add the slab-owned portion of ``delta``
+    at ``ids``; rows hashing outside the slab are dropped (they belong to
+    another shard).  ``shard`` may be a traced scalar (lax.axis_index)."""
+    local, _ = _slab_buckets(spec, ids, shard)
+    if spec.signed:
+        upd = spec.family.sign(ids)[..., None].astype(slab.dtype) \
+            * delta[None].astype(slab.dtype)
+    else:
+        upd = jnp.broadcast_to(delta[None].astype(slab.dtype),
+                               (spec.depth,) + delta.shape)
+    return jax.vmap(lambda Sj, bj, uj: Sj.at[bj].add(uj, mode="drop"))(
+        slab, local, upd)
+
+
+def gather_slab(spec: SketchSpec, slab: jnp.ndarray, ids: jnp.ndarray,
+                shard) -> jnp.ndarray:
+    """Shard-local half of QUERY: this slab's additive contribution to the
+    pre-estimator gathered values — (depth, k, dim), zero for cells owned
+    elsewhere.  Sum over shards (psum over the shard axis), then finish
+    with ``finish_query``."""
+    local, own = _slab_buckets(spec, ids, shard)
+    lw = spec.local_width
+    gathered = jax.vmap(lambda Sj, bj: Sj[jnp.minimum(bj, lw - 1)])(
+        slab, local)
+    return jnp.where(own[..., None], gathered,
+                     jnp.zeros((), dtype=slab.dtype))
+
+
+def finish_query(spec: SketchSpec, assembled: jnp.ndarray,
+                 ids: jnp.ndarray) -> jnp.ndarray:
+    """QUERY's estimator half on assembled (depth, k, dim) gathered values
+    (the Σ over shards of ``gather_slab``, or a plain full-width gather):
+    signs + median for Count-Sketch, min over depth for Count-Min.  Uses
+    the same ``median_rows`` form as ``query`` — bit-identical results."""
+    if spec.signed:
+        s = spec.family.sign(ids)
+        assembled = assembled * s[..., None].astype(assembled.dtype)
+        return _median_depth(assembled)
+    return jnp.min(assembled, axis=0)
+
+
 def ema_delta(est_old: jnp.ndarray, x: jnp.ndarray, beta: float,
               scale: float) -> jnp.ndarray:
     """The sketched linear-EMA increment: the Δ that moves a row's content
@@ -226,9 +347,27 @@ def fold(spec: SketchSpec, S: jnp.ndarray) -> Tuple[SketchSpec, jnp.ndarray]:
     """Hokusai fold (paper §5): halve the width, adding the upper half into
     the lower.  Exact w.r.t. the ``h mod (w/2)`` re-bucketing because
     ``(x mod w) mod (w/2) == x mod (w/2)`` for even ``w``.  Used for elastic
-    memory scaling (shrink optimizer state mid-training without reset)."""
+    memory scaling (shrink optimizer state mid-training without reset).
+
+    Shard layouts fold differently (DESIGN.md §17): the 'hash' layout's
+    buckets are ``owner·lw + (h mod lw)``, so the exact fold halves each
+    shard's LOCAL range — upper half-slab into lower half-slab, never
+    crossing shard boundaries (a sharded deployment folds with zero
+    collective traffic).  The 'width' layout (and identity mode, whose
+    buckets ignore the layout) keeps the classic whole-width fold; under
+    sharding its column pairs sit ``shards/2`` slabs apart, which the
+    full-array restore path handles for free."""
     if spec.width % 2 != 0:
         raise ValueError("fold requires an even width")
+    if spec.layout == "hash" and spec.shards > 1 and not spec.identity:
+        lw = spec.local_width
+        if lw % 2 != 0:
+            raise ValueError(f"hash-layout fold needs an even local width, "
+                             f"got {lw}")
+        ranged = S.reshape(spec.depth, spec.shards, lw, spec.dim)
+        folded = ranged[:, :, :lw // 2] + ranged[:, :, lw // 2:]
+        return spec.fold(), folded.reshape(spec.depth, spec.width // 2,
+                                           spec.dim)
     half = spec.width // 2
     return spec.fold(), S[:, :half] + S[:, half:]
 

@@ -212,6 +212,14 @@ class _SketchStoreBase(AuxStore):
     seed: int = 0
     dtype: str = "float32"
     identity: bool = False
+    # how the (depth, width, dim) state partitions over a mesh axis
+    # (DESIGN.md §17).  shards == 1 is the classic replicated layout;
+    # 'width' slabs the width axis without touching the hash, 'hash'
+    # routes whole ids to one owning shard via a two-level hash.  The
+    # fields ride into the bound SketchSpec and serialize with the store
+    # so plans / manifests / elastic restores round-trip the layout.
+    shards: int = 1
+    shard_layout: str = "width"
     spec: Optional[SketchSpec] = None         # set by bind() (or explicit)
     shape: Optional[Tuple[int, int]] = None   # set by bind()
     # which kernel backend executes this store's fused ``update_read``
@@ -247,7 +255,26 @@ class _SketchStoreBase(AuxStore):
                                 width_multiple=self.width_multiple,
                                 dtype=jnp.dtype(self.dtype),
                                 identity=self.identity)
+        if self.shards != 1 or self.shard_layout != "width":
+            spec = dataclasses.replace(spec, shards=int(self.shards),
+                                       layout=self.shard_layout)
         return dataclasses.replace(self, spec=spec, shape=shape)
+
+    def with_sharding(self, shards: int,
+                      layout: str = "width") -> "_SketchStoreBase":
+        """The same store partitioned into ``shards`` slabs under
+        ``layout`` — rewrites both the factory fields and (if already
+        bound) the spec, so it works pre- and post-``bind``.  Width /
+        seeds are untouched: a 'width'-layout store's state is byte-
+        identical to the unsharded one (placement-only), and a 'hash'-
+        layout store re-derives buckets through the two-level hash."""
+        out = dataclasses.replace(self, shards=int(shards),
+                                  shard_layout=layout)
+        if self.spec is not None:
+            out = dataclasses.replace(
+                out, spec=dataclasses.replace(
+                    self.spec, shards=int(shards), layout=layout))
+        return out
 
     def _rows(self, rows):
         if rows is not None:
@@ -308,6 +335,11 @@ class _SketchStoreBase(AuxStore):
     def bytes(self, state=None) -> int:
         return self.spec.nbytes()
 
+    def shard_bytes(self, state=None) -> int:
+        """Per-device footprint of one width slab — what the per-shard
+        planner charges against each device's aux budget."""
+        return self.spec.shard_nbytes()
+
     # Stats reductions scan at most this many sketch cells.  A full-array
     # pass over depth×width×dim cells costs more than the O(touched-rows)
     # train step it is observing; above the cap the gauges switch to a
@@ -344,12 +376,28 @@ class _SketchStoreBase(AuxStore):
         stride = max(int(flat.size) // self.STATS_SAMPLE_CELLS, 1)
         f = flat[::stride]
         absmass = jnp.sum(jnp.abs(f))
-        return {
+        out = {
             "occupancy": jnp.mean((f != 0.0).astype(jnp.float32)),
             "mass": absmass * stride,
             "max_cell": jnp.max(jnp.abs(f)),
             "sign_cancel": 1.0 - jnp.abs(jnp.sum(f)) / (absmass + 1e-30),
         }
+        spec = self.spec
+        if spec is not None and spec.shards > 1:
+            # per-shard occupancy extremes — scalar gauges so they ride
+            # the same metrics schema as the rest; obs.report warns when
+            # max/min diverge (shard imbalance, DESIGN.md §17).  Same
+            # strided sampling, applied within each slab.
+            slabs = state.reshape(spec.depth, spec.shards,
+                                  spec.local_width, -1)
+            per = jnp.moveaxis(slabs, 1, 0).reshape(spec.shards, -1)
+            sstride = max(int(per.shape[1])
+                          // max(self.STATS_SAMPLE_CELLS // spec.shards, 1), 1)
+            occ = jnp.mean((per[:, ::sstride] != 0.0).astype(jnp.float32),
+                           axis=1)
+            out["shard_occ_min"] = jnp.min(occ)
+            out["shard_occ_max"] = jnp.max(occ)
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -576,7 +624,17 @@ class StoreTree:
         classification table ``distributed.sharding.opt_specs_for_state``
         shards optimizer state with (slot ∈ {'m', 'v'}; the DP error-
         feedback ``residual`` shares the 'v' geometry)."""
-        out: Dict[Tuple[str, str], Tuple[int, int, int]] = {}
+        return {k: tuple(spec.shape)
+                for k, spec in self.sketch_state_specs(param_shapes).items()}
+
+    def sketch_state_specs(self, param_shapes: Dict[str, Tuple[int, ...]]
+                           ) -> Dict[Tuple[str, str], SketchSpec]:
+        """{(slot, path): bound SketchSpec} — the richer form of
+        ``sketch_state_shapes``: the spec carries ``shards``/``layout``,
+        which ``opt_specs_for_state`` needs to place sharded sketch
+        leaves on the shard axis instead of the width-over-'data'
+        default (DESIGN.md §17)."""
+        out: Dict[Tuple[str, str], SketchSpec] = {}
         for path, shape in param_shapes.items():
             try:
                 m, v = self.resolve(path, shape, jnp.float32)
@@ -585,7 +643,7 @@ class StoreTree:
             for slot, s in (("m", m), ("v", v)):
                 if s is not None and s.kind in ("sketch", "countmin") \
                         and getattr(s, "spec", None) is not None:
-                    out[(slot, path)] = tuple(s.spec.shape)
+                    out[(slot, path)] = s.spec
         return out
 
     # -- serialization ------------------------------------------------------
@@ -618,17 +676,25 @@ class StoreTree:
 # ---------------------------------------------------------------------------
 
 def spec_to_json(spec: SketchSpec) -> Dict[str, Any]:
-    return {"depth": spec.depth, "width": spec.width, "dim": spec.dim,
-            "signed": bool(spec.signed), "seed": int(spec.seed),
-            "dtype": jnp.dtype(spec.dtype).name,
-            "identity": bool(spec.identity)}
+    out = {"depth": spec.depth, "width": spec.width, "dim": spec.dim,
+           "signed": bool(spec.signed), "seed": int(spec.seed),
+           "dtype": jnp.dtype(spec.dtype).name,
+           "identity": bool(spec.identity)}
+    # sharding keys only when non-default, so unsharded specs serialize
+    # byte-identically to pre-§17 manifests (and old JSON loads via .get)
+    if spec.shards != 1 or spec.layout != "width":
+        out["shards"] = int(spec.shards)
+        out["layout"] = spec.layout
+    return out
 
 
 def spec_from_json(d: Dict[str, Any]) -> SketchSpec:
     return SketchSpec(depth=int(d["depth"]), width=int(d["width"]),
                       dim=int(d["dim"]), signed=bool(d["signed"]),
                       seed=int(d["seed"]), dtype=jnp.dtype(d["dtype"]),
-                      identity=bool(d["identity"]))
+                      identity=bool(d["identity"]),
+                      shards=int(d.get("shards", 1)),
+                      layout=d.get("layout", "width"))
 
 
 def store_to_json(store: Optional[AuxStore]) -> Optional[Dict[str, Any]]:
@@ -653,6 +719,9 @@ def store_to_json(store: Optional[AuxStore]) -> Optional[Dict[str, Any]]:
             out["shape"] = list(store.shape)
         if store.backend is not None:
             out["backend"] = store.backend
+        if store.shards != 1 or store.shard_layout != "width":
+            out["shards"] = int(store.shards)
+            out["shard_layout"] = store.shard_layout
         if isinstance(store, CountMinStore) and store.cleaning is not None:
             out["cleaning"] = {"alpha": store.cleaning.alpha,
                                "every": store.cleaning.every}
@@ -673,7 +742,9 @@ def store_from_json(d: Optional[Dict[str, Any]]) -> Optional[AuxStore]:
         return DenseStore(dtype=d.get("dtype"), shape=shape)
     if kind in ("sketch", "countmin"):
         cls = CountSketchStore if kind == "sketch" else CountMinStore
-        kw: Dict[str, Any] = {"shape": shape, "backend": d.get("backend")}
+        kw: Dict[str, Any] = {"shape": shape, "backend": d.get("backend"),
+                              "shards": int(d.get("shards", 1)),
+                              "shard_layout": d.get("shard_layout", "width")}
         if "spec" in d:
             kw["spec"] = spec_from_json(d["spec"])
         else:

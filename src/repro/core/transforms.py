@@ -584,6 +584,74 @@ def scale_by_adam_rows_dp(b1: float = 0.9, b2: float = 0.999,
     return Transform(init, update)
 
 
+def scale_by_adam_rows_sharded(b1: float = 0.9, b2: float = 0.999,
+                               eps: float = 1e-8, *,
+                               m_store: Optional[AuxStore],
+                               v_store: AuxStore,
+                               shard_axis: str = "model",
+                               dp_axis: Optional[str] = None,
+                               error_feedback: bool = False,
+                               dir_clip: Optional[float] = 10.0,
+                               backend: Optional[str] = None) -> Transform:
+    """``scale_by_adam_rows_dp`` with the sketch state SHARDED over
+    ``shard_axis`` (DESIGN.md §17): the stores' specs must declare
+    ``shards > 1`` (``AuxStore.with_sharding`` / the planner's
+    ``sketch_shards``), and ``update`` must run inside ``shard_map`` over
+    the (dp × shard) mesh — ``distributed.sharding.sharded_sparse_wrap``
+    is the canonical wrapper — where every rank-3 state leaf the
+    transform sees is this device's (depth, local_width, dim) slab.
+
+    ``init`` still returns FULL (depth, width, dim) arrays: sharding is
+    placement-only (the jit in_shardings put each slab on its shard),
+    which is what makes width-layout elastic restore across shard counts
+    a pure re-placement.  ``dp_axis=None`` is the shard-only mesh (no
+    data parallelism); with both axes the body composes PR 4's DP psums
+    with the shard-axis routing collective
+    (``sketched_reduce.sharded_adam_rows``)."""
+    for name, store, kinds in (("m_store", m_store, ("sketch",)),
+                               ("v_store", v_store, ("countmin", "sketch"))):
+        if store is None:
+            continue
+        if store.kind not in kinds or store.spec is None:
+            raise ValueError(f"{name} must be a bound (explicit-spec) "
+                             f"{'/'.join(kinds)} store, got {store!r}")
+        if store.spec.shards < 2:
+            raise ValueError(f"{name} is not sharded (spec.shards == "
+                             f"{store.spec.shards}); use "
+                             f"scale_by_adam_rows_dp for replicated state "
+                             f"or with_sharding() the store")
+    spec_m = m_store.spec if m_store is not None else None
+    spec_v = v_store.spec
+    if spec_m is not None and (spec_m.shards != spec_v.shards
+                               or spec_m.layout != spec_v.layout):
+        raise ValueError(f"m/v stores disagree on the shard layout: "
+                         f"{spec_m.shards}×{spec_m.layout!r} vs "
+                         f"{spec_v.shards}×{spec_v.layout!r}")
+
+    def init(params=None):
+        from repro.distributed import sketched_reduce as sr
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": m_store.init() if m_store is not None else None,
+                "v": v_store.init(),
+                "residual": (sr.init_feedback(spec_v)
+                             if error_feedback else None)}
+
+    def update(grads, state, params=None):
+        from repro.distributed import sketched_reduce as sr
+        ids, rows = grads["ids"], grads["rows"]
+        step = state["step"] + 1
+        V_in = v_store.clean(state["v"], step)   # α-multiply: slab-safe
+        out = sr.sharded_adam_rows(
+            spec_m, spec_v, state["m"], V_in, ids, rows, step,
+            shard_axis=shard_axis, dp_axis=dp_axis, b1=b1, b2=b2, eps=eps,
+            residual=state["residual"], dir_clip=dir_clip, backend=backend)
+        return ({"ids": out.uids, "rows": out.rows},
+                {"step": step, "m": out.M, "v": out.V,
+                 "residual": out.residual})
+
+    return Transform(init, update)
+
+
 def scale_by_rmsprop(b2: float = 0.999, eps: float = 1e-8, *,
                      stores: Optional[StoreTree] = None,
                      v_store: Any = _UNSET, where=None,

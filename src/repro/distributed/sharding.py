@@ -245,9 +245,24 @@ def zero1_spec(param_spec: P, shape: Tuple[int, ...], mesh: Mesh,
     return P(*entries)
 
 
-def sketch_spec(mesh: Mesh, shape: Tuple[int, int, int]) -> P:
-    """Sketch tensor (depth, width, dim): width→'data', dim→'model'."""
+def sketch_spec(mesh: Mesh, shape: Tuple[int, int, int], *,
+                shards: int = 1, shard_axis: str = "model") -> P:
+    """Sketch tensor (depth, width, dim).
+
+    Replicated sketches (``shards == 1``, the pre-§17 default) keep the
+    classic ZeRO-style placement: width→'data', dim→'model'.  A sketch
+    whose spec declares ``shards > 1`` is a first-class sharded object
+    (DESIGN.md §17): its width slabs LIVE on ``shard_axis`` — ``P(None,
+    shard_axis)`` — and dim stays unsharded, because the routing
+    collectives move whole (depth, k, dim) contribution rows per shard.
+    When the mesh lacks the axis (or width doesn't divide) the sharded
+    placement is impossible; callers that must not silently replicate
+    (``opt_specs_for_state(strict=True)``) check that before calling."""
     _, w, d = shape
+    if shards > 1:
+        size = _axis_size(mesh, shard_axis)
+        if size and w % size == 0:
+            return P(None, shard_axis)
     axes = [None,
             "data" if (_axis_size(mesh, "data") or 0) and
             w % _axis_size(mesh, "data") == 0 else None,
@@ -297,8 +312,8 @@ def opt_specs_for_state(state_shape, params_shape, mesh: Mesh, *,
     state unsharded when the state layout changed under the old rules.
     """
     param_shapes = {p: tuple(l.shape) for p, l in _iter_with_path(params_shape)}
-    resolved_sketch_shapes = (store_tree.sketch_state_shapes(param_shapes)
-                              if store_tree is not None else {})
+    resolved_sketch_specs = (store_tree.sketch_state_specs(param_shapes)
+                             if store_tree is not None else {})
 
     def leaf(path, x):
         if x is None or not hasattr(x, "shape") or x.ndim == 0:
@@ -324,10 +339,20 @@ def opt_specs_for_state(state_shape, params_shape, mesh: Mesh, *,
         if not sub and _looks_like_sketch(shape):
             return sketch_spec(mesh, shape)      # bare single-table state
         if store_tree is not None and sub:
-            want = resolved_sketch_shapes.get(
+            want = resolved_sketch_specs.get(
                 ("v" if tag == "residual" else tag, sub))
-            if want == shape:
-                return sketch_spec(mesh, shape)
+            if want is not None and tuple(want.shape) == shape:
+                if want.shards > 1:
+                    size = _axis_size(mesh, "model")
+                    if strict and (not size or shape[1] % size != 0):
+                        raise ValueError(
+                            f"optimizer-state leaf {path!r} resolves to a "
+                            f"{want.shards}-shard sketch but the mesh has "
+                            f"no 'model' axis dividing width {shape[1]} "
+                            f"(axes {dict(zip(mesh.axis_names, mesh.devices.shape))}); "
+                            f"refusing to silently replicate sharded "
+                            f"sketch state")
+                return sketch_spec(mesh, shape, shards=want.shards)
         elif _looks_like_sketch(shape) and pshape is not None \
                 and len(pshape) == 2 and shape[2] == pshape[1]:
             return sketch_spec(mesh, shape)
@@ -443,6 +468,55 @@ def dp_sparse_wrap(local_fn, *, mesh: Optional[Mesh] = None,
             local_fn, mesh=use_mesh,
             in_specs=(P(), P(), dp, dp),
             out_specs=(P(), P()))(table, state, ids, rows)
+
+    return wrapped
+
+
+def sketch_state_specs(state, shard_axis: str = "model"):
+    """Per-leaf PartitionSpec pytree for a sparse-rows optimizer state
+    whose sketch moments are SHARDED (DESIGN.md §17): every rank-3
+    ``(depth, width, dim)`` leaf — m / v / residual slabs share the
+    geometry — slabs its width over ``shard_axis``; scalars (step) and
+    everything else replicate.  Used both as shard_map in/out specs and
+    (via ``named``) as the jit placement for the state."""
+    def leaf(x):
+        if hasattr(x, "ndim") and x.ndim == 3:
+            return P(None, shard_axis)
+        return P()
+    return jax.tree_util.tree_map(leaf, state)
+
+
+def sharded_sparse_wrap(local_fn, *, mesh: Optional[Mesh] = None,
+                        dp_axis: Optional[str] = "data",
+                        shard_axis: str = "model"):
+    """The sharded-sketch sparse calling convention (DESIGN.md §17):
+    wrap ``local_fn(table, state, ids, rows) -> (table, state)`` in a
+    ``shard_map`` over the (dp × shard) mesh with
+
+      * the table and non-sketch state replicated,
+      * every rank-3 sketch leaf width-slabbed on ``shard_axis`` (the
+        body sees its (depth, local_width, dim) slab),
+      * the (ids, rows) batch sharded on ``dp_axis`` and replicated
+        across ``shard_axis`` (``dp_axis=None``: fully replicated — the
+        shard-only mesh).
+
+    The body must be written in slab terms (``sharded_adam_rows``); its
+    table/direction outputs are replicated by construction (psum- and
+    all_gather-derived), which the static checker can't prove — hence
+    ``shard_map_unchecked``."""
+
+    def wrapped(table, state, ids, rows):
+        use_mesh = mesh if mesh is not None else current_mesh()
+        if use_mesh is None:
+            raise ValueError(
+                f"sharded sparse steps over {shard_axis!r} need a mesh: "
+                f"pass mesh= or trace inside shd.active_mesh(mesh)")
+        dp = P(dp_axis) if dp_axis is not None else P()
+        sspecs = sketch_state_specs(state, shard_axis)
+        return shard_map_unchecked(
+            local_fn, mesh=use_mesh,
+            in_specs=(P(), sspecs, dp, dp),
+            out_specs=(P(), sspecs))(table, state, ids, rows)
 
     return wrapped
 

@@ -30,6 +30,7 @@ tests/test_distributed_dp.py runs the 8-device parity grid.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -91,6 +92,22 @@ def traffic_ratio(spec: cs.SketchSpec, n_rows: int, *,
     dense = dense_reduce_bytes(n_rows, spec.dim, grad_dtype=grad_dtype,
                                with_ids=with_ids)
     return dense / sketched_reduce_bytes(spec, *extra_specs)
+
+
+def sharded_reduce_bytes(*specs: Optional[cs.SketchSpec]) -> int:
+    """Bytes the SHARDED gradient-sketch psum moves per device: one width
+    slab per live sketch (1/shards of the replicated payload — the whole
+    point of DESIGN.md §17's layout)."""
+    return sum(s.shard_nbytes() for s in specs if s is not None)
+
+
+def routing_bytes(n_rows: int, *specs: Optional[cs.SketchSpec]) -> int:
+    """Bytes of the shard-axis ROUTING collective per device per step: the
+    psum that assembles each query group's (depth, k, dim) contribution
+    rows across shards (``sharded_query``).  Charged once per live sketch
+    per query group — the sharded layout's price for shard-local state."""
+    return sum(s.depth * n_rows * s.dim * jnp.dtype(s.dtype).itemsize
+               for s in specs if s is not None)
 
 
 # ---------------------------------------------------------------------------
@@ -240,10 +257,10 @@ def dp_adam_rows(spec_m: Optional[cs.SketchSpec], spec_v: cs.SketchSpec,
     few units per coordinate; the clamp (default 10) only ever removes
     sketch noise.  ``None`` disables."""
     track_m = spec_m is not None
-    spec_g = spec_m if track_m else cs.SketchSpec(
-        depth=spec_v.depth, width=spec_v.width, dim=spec_v.dim,
-        signed=True, seed=spec_v.seed, dtype=spec_v.dtype,
-        identity=spec_v.identity)
+    # replace(), not a field-list constructor: the g sketch must inherit
+    # EVERY layout field of spec_v — dropping shards/layout here would
+    # hash the gradient differently from a hash-layout v store
+    spec_g = spec_m if track_m else dataclasses.replace(spec_v, signed=True)
     if fill_id is None:
         fill_id = jnp.iinfo(jnp.int32).max  # out of range for any table
     t = step.astype(jnp.float32)
@@ -283,6 +300,143 @@ def dp_adam_rows(spec_m: Optional[cs.SketchSpec], spec_v: cs.SketchSpec,
     g2hat = cs.query(spec_v, G_v, uids) * col         # ≈ Σg² (+ feedback)
     V_out = cs.update(spec_v, V + (1.0 - b2) * G_v, uids,
                       -(1.0 - b2) * v_old)
+    vhat = jnp.maximum(v_old + (1.0 - b2) * (g2hat - v_old), 0.0) / bc2
+    direction = col * mhat / (jnp.sqrt(vhat) + eps)
+    if dir_clip is not None:
+        direction = jnp.clip(direction, -dir_clip, dir_clip)
+    return DpAdamResult(M=M_out, V=V_out, residual=residual,
+                        uids=uids, rows=direction, mask=mask)
+
+
+# ---------------------------------------------------------------------------
+# Model-parallel sketches: the sharded-slab step (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+def sharded_query(spec: cs.SketchSpec, slab: jnp.ndarray, ids: jnp.ndarray,
+                  shard_axis: str, *,
+                  backend: Optional[str] = None) -> jnp.ndarray:
+    """Exact ``cs.query`` against a width-sharded sketch: each shard
+    gathers its slab's (unsigned) contribution rows, a psum over
+    ``shard_axis`` assembles them — every (depth-row, id) cell lives on
+    exactly one shard, so the sum is assembly, not approximation — and
+    ``finish_query`` applies signs + median / min.  The routing
+    collective moves ``depth·k·dim`` elements (``routing_bytes``)."""
+    from repro import kernels
+    shard = jax.lax.axis_index(shard_axis)
+    part = kernels.gather_slab(spec, slab, ids, shard, backend=backend)
+    with jax.named_scope("obs.route"):
+        part = jax.lax.psum(part, shard_axis)
+    return cs.finish_query(spec, part, ids)
+
+
+def sharded_adam_rows(spec_m: Optional[cs.SketchSpec], spec_v: cs.SketchSpec,
+                      M: Optional[jnp.ndarray], V: jnp.ndarray,
+                      ids: jnp.ndarray, rows: jnp.ndarray,
+                      step: jnp.ndarray, *, shard_axis: str,
+                      dp_axis: Optional[str] = None,
+                      b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                      residual: Optional[jnp.ndarray] = None,
+                      fill_id: Optional[int] = None,
+                      dir_clip: Optional[float] = 10.0,
+                      backend: Optional[str] = None) -> DpAdamResult:
+    """``dp_adam_rows`` with the sketch state SHARDED over ``shard_axis``:
+    ``M``/``V``/``residual`` are this device's (depth, local_width, dim)
+    slabs, and the specs carry ``shards``/``layout`` (DESIGN.md §17).
+    Call inside ``shard_map`` over a (dp × shard) mesh with the batch
+    sharded on ``dp_axis`` (replicated across ``shard_axis``) and the
+    slabs sharded on ``shard_axis`` (replicated across ``dp_axis``).
+
+    Per-device collective traffic, vs PR 4's replicated step:
+
+      * gradient-sketch psum over ``dp_axis`` moves one SLAB per sketch —
+        a ``shards``× cut (``sharded_reduce_bytes``);
+      * the new shard-axis routing psum assembles the query groups'
+        (depth, k, dim) contribution rows (``routing_bytes``) — ids that
+        hash off-slab contribute zeros, which is exactly the locality-
+        aware all-to-all in psum clothing (under the 'hash' layout a
+        whole id's rows come from ONE shard; under 'width' from up to
+        ``depth``);
+      * the id all_gather over ``dp_axis`` is unchanged.
+
+    Exactness is inherited: slab updates concatenate to the full-width
+    update and assembled queries equal full-width queries bit-for-bit
+    (tests/test_sharded.py), so with ``dp_axis`` set this step matches
+    ``dp_adam_rows`` — and the single-device step — under dyadic β
+    exactly like PR 4.  ``dp_axis=None`` runs shard-only (one replica):
+    no dp collectives, the local dedup alone defines the touched set.
+    """
+    from repro import kernels
+    track_m = spec_m is not None
+    spec_g = spec_m if track_m else dataclasses.replace(spec_v, signed=True)
+    if fill_id is None:
+        fill_id = jnp.iinfo(jnp.int32).max
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    shard = jax.lax.axis_index(shard_axis)
+
+    # 1. local dedup (identical to the replicated step).
+    batch = dd.dedup_rows(ids, rows, fill_id=fill_id)
+    lids, lrows = batch.unique_ids, batch.rows
+
+    # 2. gradient sketches as SLABS: each (dp, shard) device sketches its
+    #    local rows into its own slab; the dp psum then moves slab bytes,
+    #    not full sketches.  Exact: update(S) == concat_s(update_slab).
+    G_g = kernels.update_slab(spec_g, cs.init_slab(spec_g), lids, lrows,
+                              shard, backend=backend)
+    G_v = kernels.update_slab(spec_v, cs.init_slab(spec_v), lids,
+                              jnp.square(lrows), shard, backend=backend)
+    if dp_axis is not None:
+        with jax.named_scope("obs.collective"):
+            G_g, G_v = jax.lax.psum((G_g, G_v), dp_axis)
+
+    # error feedback (MicroAdam, as in reduce_moments) on slabs: the
+    # cross-term share needs Σg at the local ids — one routing query —
+    # and the banking/injection arithmetic is per-bucket, so it applies
+    # to slabs unchanged.
+    if residual is not None:
+        g_sum = sharded_query(spec_g, G_g, lids, shard_axis,
+                              backend=backend)
+        cross = jnp.maximum(lrows * (g_sum - lrows), -jnp.square(lrows))
+        G_c = kernels.update_slab(spec_v, cs.init_slab(spec_v), lids,
+                                  cross, shard, backend=backend)
+        if dp_axis is not None:
+            with jax.named_scope("obs.collective"):
+                G_c = jax.lax.psum(G_c, dp_axis)
+        G_v, residual = _inject_feedback(G_v, residual, G_c)
+
+    # 3. the global touched set (dp collective; shard-only runs skip it).
+    if dp_axis is not None:
+        uids, mask = global_unique_ids(lids, dp_axis, fill_id=fill_id)
+    else:
+        uids, mask = lids, (lids != fill_id).astype(jnp.float32)
+    col = mask[:, None]
+
+    # 4. state update.  All four query groups share one routing psum (the
+    #    contributions stack into a single collective); the scatter
+    #    halves are shard-local — zero collective traffic.
+    parts = [kernels.gather_slab(spec_g, G_g, uids, shard, backend=backend),
+             kernels.gather_slab(spec_v, V, uids, shard, backend=backend),
+             kernels.gather_slab(spec_v, G_v, uids, shard, backend=backend)]
+    if track_m:
+        parts.append(kernels.gather_slab(spec_m, M, uids, shard,
+                                         backend=backend))
+    with jax.named_scope("obs.route"):
+        parts = jax.lax.psum(tuple(parts), shard_axis)
+    ghat = cs.finish_query(spec_g, parts[0], uids) * col
+    v_old = cs.finish_query(spec_v, parts[1], uids) * col
+    g2hat = cs.finish_query(spec_v, parts[2], uids) * col
+    if track_m:
+        m_old = cs.finish_query(spec_m, parts[3], uids) * col
+        M_out = kernels.update_slab(spec_m, M + (1.0 - b1) * G_g, uids,
+                                    -(1.0 - b1) * m_old, shard,
+                                    backend=backend)
+        mhat = (m_old + (1.0 - b1) * (ghat - m_old)) / bc1
+    else:
+        M_out = None
+        mhat = ghat
+    V_out = kernels.update_slab(spec_v, V + (1.0 - b2) * G_v, uids,
+                                -(1.0 - b2) * v_old, shard, backend=backend)
     vhat = jnp.maximum(v_old + (1.0 - b2) * (g2hat - v_old), 0.0) / bc2
     direction = col * mhat / (jnp.sqrt(vhat) + eps)
     if dir_clip is not None:

@@ -48,6 +48,16 @@ EMA op of the ``AuxStore`` protocol (DESIGN.md §14):
   tiled      the ``cs_ema_tiled`` Pallas kernel (TPU fast path)
   interpret  ``tiled`` under the Pallas interpreter
 
+('sketch' | 'countmin', 'update_slab' | 'gather_slab') — the shard-local
+halves of the sharded optimizer body (DESIGN.md §17): masked scatter-add
+into / gather out of one shard's (depth, local_width, dim) slab.
+
+  ref        the vmapped forms in ``core.sketch`` (semantics definition)
+  xla        depth-unrolled flat gathers/scatters — bit-identical to
+             ``ref``, the fast path everywhere (no tiled variant: the
+             slab ops run under shard_map where Pallas grids don't
+             compose yet, so 'auto' resolves to 'xla' on every host)
+
 'stream' exists only for the pair op (per-item ordering is its point);
 ``update_read`` is defined batch-wise.  ``resolve_backend(None|'auto')``
 picks ``tiled`` on TPU and ``xla`` elsewhere.  New backends (e.g. a GPU
@@ -109,6 +119,35 @@ def update_read(spec, S, ids, delta, *, beta: float, scale: float,
     return fn(spec, S, ids, delta, beta=beta, scale=scale, mask=mask)
 
 
+def update_slab(spec, slab, ids, delta, shard, *,
+                backend: Optional[str] = None):
+    """Scatter ``delta`` rows into ONE shard's (depth, local_width, dim)
+    slab — ids hashing outside the slab are dropped, so the per-shard
+    results concatenate to the full-width ``sketch.update`` exactly.
+    None/'auto' — and backends with no slab variant (e.g. a store pinned
+    to 'tiled' for its dense path) — resolve to 'xla' (see module
+    docstring)."""
+    kind = "sketch" if spec.signed else "countmin"
+    if backend in (None, "auto") \
+            or backend not in registry.backends(kind, "update_slab"):
+        backend = "xla"
+    fn = registry.lookup(kind, "update_slab", backend)
+    return fn(spec, slab, ids, delta, shard)
+
+
+def gather_slab(spec, slab, ids, shard, *, backend: Optional[str] = None):
+    """This shard's (depth, k, dim) query contributions (zeros off-slab);
+    psum over the shard axis then ``sketch.finish_query`` reproduces the
+    full-width ``sketch.query`` exactly.  None/'auto' (and slab-less
+    backends) resolve to 'xla'."""
+    kind = "sketch" if spec.signed else "countmin"
+    if backend in (None, "auto") \
+            or backend not in registry.backends(kind, "gather_slab"):
+        backend = "xla"
+    fn = registry.lookup(kind, "gather_slab", backend)
+    return fn(spec, slab, ids, shard)
+
+
 register_backend("ref", ops.adam_rows_ref)
 register_backend("xla", ops.adam_rows_xla)
 register_backend("stream", ops.adam_rows_stream)
@@ -124,4 +163,8 @@ for _kind in ("sketch", "countmin"):
     registry.register(_kind, "update_read", "interpret",
                       functools.partial(ops.ema_update_read_tiled,
                                         interpret=True))
+    registry.register(_kind, "update_slab", "ref", ops.cs.update_slab)
+    registry.register(_kind, "update_slab", "xla", ops.slab_update_xla)
+    registry.register(_kind, "gather_slab", "ref", ops.cs.gather_slab)
+    registry.register(_kind, "gather_slab", "xla", ops.slab_gather_xla)
 del _kind

@@ -294,6 +294,56 @@ def ema_update_read_tiled(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
     return S, est[:k]
 
 
+# ---------------------------------------------------------------------------
+# Shard-local slab ops (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+# The sharded optimizer body runs these on each shard's (depth, lw, dim)
+# slab under shard_map; ids outside the slab are masked, so concatenating
+# the per-shard updates (resp. psum-ing the per-shard gathers) over the
+# shard axis reproduces the full-width op bit-exactly.  'ref' is the
+# vmapped form in core.sketch; 'xla' unrolls the depth axis into flat
+# gathers/scatters exactly like ``ema_update_read_xla`` (same arithmetic,
+# so bit-identical — XLA:CPU lowers flat ops far faster than batched).
+
+
+def _slab_addressing(spec: SketchSpec, ids: jnp.ndarray, shard):
+    lw = spec.local_width
+    local = spec.family.bucket(ids) - jnp.asarray(shard, jnp.int32) * lw
+    own = (local >= 0) & (local < lw)
+    return jnp.where(own, local, lw), own
+
+
+def slab_update_xla(spec: SketchSpec, slab: jnp.ndarray, ids: jnp.ndarray,
+                    delta: jnp.ndarray, shard) -> jnp.ndarray:
+    """'xla' backend of ``sketch.update_slab``: depth-unrolled masked
+    scatter-add into the local slab (out-of-slab rows dropped)."""
+    local, _ = _slab_addressing(spec, ids, shard)
+    signs = spec.family.sign(ids) if spec.signed else None
+    out = []
+    for j in range(spec.depth):
+        u = delta.astype(slab.dtype)
+        if spec.signed:
+            u = signs[j][:, None].astype(slab.dtype) * u
+        out.append(slab[j].at[local[j]].add(u, mode="drop"))
+    return jnp.stack(out)
+
+
+def slab_gather_xla(spec: SketchSpec, slab: jnp.ndarray, ids: jnp.ndarray,
+                    shard) -> jnp.ndarray:
+    """'xla' backend of ``sketch.gather_slab``: depth-unrolled gather of
+    this shard's (unsigned, un-reduced) contributions — zeros off-slab,
+    so a psum over the shard axis assembles the full (depth, k, dim)
+    rows for ``sketch.finish_query``."""
+    local, own = _slab_addressing(spec, ids, shard)
+    lw = spec.local_width
+    rows = []
+    for j in range(spec.depth):
+        r = slab[j][jnp.minimum(local[j], lw - 1)]
+        rows.append(jnp.where(own[j][:, None], r,
+                              jnp.zeros((), dtype=slab.dtype)))
+    return jnp.stack(rows)
+
+
 def adam_rows_fused(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
                     M: Optional[jnp.ndarray], V: jnp.ndarray,
                     ids: jnp.ndarray, g: jnp.ndarray,

@@ -56,17 +56,57 @@ def run_sparse_embedding(args, mesh) -> int:
     toward a fixed target table (∇ = table[ids] − target[ids] on touched
     rows — a convergent quadratic), through the DP sparse step when
     ``--dp``.  Store state (m/v sketches, optional residual) is sharded
-    per ``opt_specs_for_state`` at the jit boundary."""
+    per ``opt_specs_for_state`` at the jit boundary.  With
+    ``--sketch-shards N`` the sketches become first-class sharded objects
+    (DESIGN.md §17): width slabs live on the mesh's 'model' axis and the
+    step routes deduped ids to the owning shard."""
     import jax.numpy as jnp
     from repro.core.optimizers import SketchHParams
 
     n_rows, dim = args.sparse_rows, args.sparse_dim
+    shards, layout = args.sketch_shards, args.shard_layout
     hp = SketchHParams(compression=args.sparse_compression,
                        backend=args.store_backend or None)
     dp_axis = "data" if args.dp else None
     init_fn, step_fn, opt = make_sparse_embedding_step(
         n_rows, dim, lr=args.lr, hparams=hp, dp_axis=dp_axis, mesh=mesh,
-        error_feedback=args.error_feedback)
+        error_feedback=args.error_feedback,
+        sketch_shards=shards, shard_layout=layout)
+
+    # the executable vocabulary of this run's sketch state — recorded in
+    # every checkpoint manifest so restore can verify the shard layout
+    # (and elastic restore gets the exact fold predicate)
+    from repro.core.stores import StoreTree
+    m_st, v_st = sparse_embedding_stores(n_rows, dim, hparams=hp,
+                                         sketch_shards=shards,
+                                         shard_layout=layout)
+    run_tree = StoreTree(rules=(("sparse_embedding", m_st, v_st),))
+
+    if args.ckpt_dir and store.latest_step(args.ckpt_dir) is not None:
+        saved = store.read_manifest(args.ckpt_dir).get("extra", {})
+        rec = (StoreTree.from_json(saved["store_tree"])
+               if saved.get("store_tree") is not None else None)
+        rec_v = rec.rules[0][2] if rec is not None and rec.rules else None
+        rec_shards = getattr(rec_v, "shards", 1)
+        rec_layout = getattr(rec_v, "shard_layout", "width")
+        if rec_layout != layout:
+            raise ValueError(
+                f"{args.ckpt_dir} holds sketch state in the "
+                f"{rec_layout!r} shard layout; restoring it under "
+                f"--shard-layout {layout} would read buckets hashed by a "
+                f"different family — resume with the recorded layout")
+        if layout == "hash" and rec_shards != shards:
+            raise ValueError(
+                f"{args.ckpt_dir} holds hash-layout sketch state built "
+                f"for {rec_shards} shards; the two-level owner hash bakes "
+                f"the shard count into every bucket, so restoring onto "
+                f"{shards} shards would scramble the state — keep "
+                f"--sketch-shards {rec_shards}, or use the width layout "
+                f"(placement-only; elastic across shard counts)")
+        if rec_shards != shards:
+            print(f"[train] width-layout sketch state re-placed: "
+                  f"{rec_shards} -> {shards} shards (state bytes "
+                  f"identical; slabs re-routed at restore)", flush=True)
 
     data_cfg = ZipfLMConfig(
         vocab_size=n_rows, seq_len=args.seq, global_batch=args.batch,
@@ -82,7 +122,7 @@ def run_sparse_embedding(args, mesh) -> int:
     monitors = []
     if args.metrics_dir:
         from repro.obs import TableMonitor, TableProbe, predicted_table_errors
-        m_store, v_store = sparse_embedding_stores(n_rows, dim, hparams=hp)
+        m_store, v_store = m_st, v_st
         if args.probe_rows > 0:
             probe = TableProbe.for_table("sparse_embedding", n_rows,
                                          k=args.probe_rows)
@@ -104,12 +144,16 @@ def run_sparse_embedding(args, mesh) -> int:
             opt_state = dict(opt_state, probe=probe.init(dim))
         target = init_fn(jax.random.PRNGKey(args.seed + 1))
 
-        # shardings: table replicated, sketch state width-over-'data'
+        # shardings: table replicated; sketch state width-over-'data'
+        # (replicated sketches) or slabbed over 'model' (--sketch-shards)
         from jax.sharding import NamedSharding, PartitionSpec as P
         table_spec = NamedSharding(mesh, P())
         opt_shape = jax.eval_shape(lambda: opt_state)
-        opt_spec = shd.named(mesh, shd.opt_specs_for_state(
-            opt_shape, table, mesh))
+        if shards > 1:
+            opt_spec = shd.named(mesh, shd.sketch_state_specs(opt_shape))
+        else:
+            opt_spec = shd.named(mesh, shd.opt_specs_for_state(
+                opt_shape, table, mesh))
         bspec = shd.named(mesh, {
             "tokens": shd.batch_spec(mesh, (args.batch, args.seq)),
             "labels": shd.batch_spec(mesh, (args.batch, args.seq))})
@@ -137,17 +181,26 @@ def run_sparse_embedding(args, mesh) -> int:
         tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                              ckpt_every=args.ckpt_every,
                              log_every=args.log_every)
-        trainer = Trainer(jit_step, data, tcfg, observer=observer)
+        trainer = Trainer(jit_step, data, tcfg, observer=observer,
+                          store_tree=run_tree)
         state = trainer.restore_or_init(
-            TrainState(step=0, params=table, opt_state=opt_state))
+            TrainState(step=0, params=table, opt_state=opt_state),
+            shardings=({"params": table_spec, "opt_state": opt_spec}
+                       if shards > 1 else None))
         with maybe_trace(args.profile_dir):
             state = trainer.fit(state)
 
     hist = trainer.history
-    first = np.mean([h["loss"] for h in hist[:10]])
-    last = np.mean([h["loss"] for h in hist[-10:]])
+    # history covers only the steps run in THIS process; a resumed run
+    # may hold fewer than 10 records, so clamp to disjoint half-windows
+    # (overlapping windows compare a window against itself and can
+    # never satisfy last < first).
+    w = min(10, max(1, len(hist) // 2))
+    first = np.mean([h["loss"] for h in hist[:w]])
+    last = np.mean([h["loss"] for h in hist[-w:]])
     print(f"[train] workload=sparse_embedding rows={n_rows} dim={dim} "
-          f"dp={bool(args.dp)} feedback={bool(args.error_feedback)} "
+          f"dp={bool(args.dp)} shards={shards}({layout}) "
+          f"feedback={bool(args.error_feedback)} "
           f"steps={state.step} loss {first:.4f} -> {last:.4f}")
     return 0 if last < first else 1
 
@@ -352,6 +405,20 @@ def main() -> int:
     ap.add_argument("--sparse-rows", type=int, default=65536)
     ap.add_argument("--sparse-dim", type=int, default=64)
     ap.add_argument("--sparse-compression", type=float, default=5.0)
+    ap.add_argument("--sketch-shards", type=int, default=1,
+                    help="sparse_embedding: shard each (depth, width, dim) "
+                         "sketch into this many width slabs over the "
+                         "mesh's 'model' axis (DESIGN.md §17); composes "
+                         "with --dp on a 2D (data × model) mesh.  The "
+                         "step is bit-identical to the unsharded run "
+                         "under dyadic betas")
+    ap.add_argument("--shard-layout", default="width",
+                    choices=("width", "hash"),
+                    help="width: contiguous width slabs, placement-only "
+                         "(elastic across shard counts); hash: two-level "
+                         "owner hash keeps every id's depth rows on ONE "
+                         "shard (one-shard routing per id, but the shard "
+                         "count is baked into the state)")
     ap.add_argument("--serve-requests", type=int, default=256,
                     help="serve-replay: trace length (fixed --seed zipf)")
     ap.add_argument("--serve-ids-per-request", type=int, default=8)
@@ -426,12 +493,30 @@ def main() -> int:
     if os.environ.get("JAX_COORDINATOR"):
         jax.distributed.initialize()
 
-    mesh = (make_host_mesh(data=jax.device_count()) if args.dp
-            else make_host_mesh())
-    if args.dp and args.batch % jax.device_count() != 0:
-        raise ValueError(
-            f"--dp needs the global batch ({args.batch}) divisible by the "
-            f"device count ({jax.device_count()})")
+    if args.sketch_shards > 1:
+        if args.workload != "sparse_embedding":
+            ap.error("--sketch-shards applies to the sparse_embedding "
+                     "workload only (the sharded sparse-rows step, "
+                     "DESIGN.md §17)")
+        if jax.device_count() % args.sketch_shards != 0:
+            raise ValueError(
+                f"--sketch-shards {args.sketch_shards} needs the device "
+                f"count ({jax.device_count()}) divisible by it — each "
+                f"shard owns one (depth, local_width, dim) slab")
+        dp_size = (jax.device_count() // args.sketch_shards
+                   if args.dp else 1)
+        mesh = make_host_mesh(data=dp_size, model=args.sketch_shards)
+        if args.dp and args.batch % dp_size != 0:
+            raise ValueError(
+                f"--dp needs the global batch ({args.batch}) divisible by "
+                f"the data-axis size ({dp_size})")
+    else:
+        mesh = (make_host_mesh(data=jax.device_count()) if args.dp
+                else make_host_mesh())
+        if args.dp and args.batch % jax.device_count() != 0:
+            raise ValueError(
+                f"--dp needs the global batch ({args.batch}) divisible by "
+                f"the device count ({jax.device_count()})")
 
     if args.workload == "serve-replay":
         # serve-time default is the paper's Theorem 5.1 RMSProp variant

@@ -20,6 +20,12 @@ latency.  After the summary, WARNINGS:
     budget.
   * ``serve-shed`` — nonzero shed rate: the admission queue overflowed
     at the offered load; requests were rejected, not just delayed.
+  * ``shard-imbalance`` — a sharded sketch's per-shard occupancy spread
+    (``shard_occ_max / shard_occ_min``, from the store's per-shard
+    gauges) above ``--shard-imbalance-warn`` (2.0): one shard is doing
+    most of the colliding while others sit near-empty — the hash-layout
+    owner hash is skewed for this id distribution (or the width layout's
+    slab boundaries landed badly); re-seed or re-plan.
 
 ``--strict`` exits 1 when any warning fires (the CI obs-smoke and
 serving-smoke jobs run non-strict: they assert the schema, not the
@@ -52,6 +58,7 @@ def _table_rows(records: List[Dict[str, Any]]) -> Dict[str, Dict[str, Any]]:
 def analyze(records: List[Dict[str, Any]], *, occupancy_warn: float = 0.85,
             ratio_warn: float = 3.0, error_warn: float = 0.5,
             serve_p99_warn: float = 0.0,
+            shard_imbalance_warn: float = 2.0,
             ) -> Dict[str, Any]:
     """Digest a validated record stream into summary + warnings (pure —
     unit-testable without touching the filesystem)."""
@@ -85,6 +92,17 @@ def analyze(records: List[Dict[str, Any]], *, occupancy_warn: float = 0.85,
                     f"probe-error: {path}.{slot} measured estimation error "
                     f"{meas:.3g} > {error_warn:.2g} — estimates at probe "
                     f"rows are mostly collision noise")
+            lo = rec.get(f"{slot}_shard_occ_min")
+            hi = rec.get(f"{slot}_shard_occ_max")
+            if lo is not None and hi is not None and hi > 0.0 \
+                    and hi > shard_imbalance_warn * max(lo, 1e-9):
+                warnings.append(
+                    f"shard-imbalance: {path}.{slot} per-shard occupancy "
+                    f"{lo:.3f} .. {hi:.3f} "
+                    f"({hi / max(lo, 1e-9):.1f}x spread > "
+                    f"{shard_imbalance_warn:.1f}x) — one slab is doing "
+                    f"most of the colliding; re-seed the owner hash or "
+                    f"re-plan the width")
 
     if serves:
         last = serves[-1]
@@ -184,6 +202,9 @@ def main(argv=None) -> int:
     ap.add_argument("--serve-p99-warn", type=float, default=0.0,
                     help="fallback serve p99 SLO (ms) for records that "
                          "carry no slo_p99_ms of their own; 0 disables")
+    ap.add_argument("--shard-imbalance-warn", type=float, default=2.0,
+                    help="warn when a sharded sketch's per-shard occupancy "
+                         "max exceeds this multiple of its min")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 if any warning fires")
     args = ap.parse_args(argv)
@@ -192,7 +213,8 @@ def main(argv=None) -> int:
     records = validate_file(path)
     digest = analyze(records, occupancy_warn=args.occupancy_warn,
                      ratio_warn=args.ratio_warn, error_warn=args.error_warn,
-                     serve_p99_warn=args.serve_p99_warn)
+                     serve_p99_warn=args.serve_p99_warn,
+                     shard_imbalance_warn=args.shard_imbalance_warn)
     print(f"{path}: {len(records)} records, schema OK")
     render(digest)
     return 1 if (args.strict and digest["warnings"]) else 0

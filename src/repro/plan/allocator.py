@@ -128,12 +128,40 @@ def leaf_candidates(path: str, shape: Tuple[int, ...], dtype, *,
     return _pareto(cands)
 
 
+def _device_cost(c: Candidate, shards: int) -> int:
+    """One device's bytes for a candidate: sketch state splits into
+    ``shards`` equal slabs over the model axis (DESIGN.md §17); dense and
+    rank-1 state is replicated, so it costs full bytes on every device.
+    This is the cost the water-fill charges against the (per-device)
+    budget when planning sharded."""
+    if shards <= 1 or c.mode != MODE_SKETCH:
+        return c.nbytes
+    return -(-c.bytes_m // shards) + -(-c.bytes_v // shards)
+
+
+def _check_shards(shards: int, width_multiple: int) -> int:
+    shards = int(shards)
+    if shards < 1:
+        raise ValueError("shards must be >= 1")
+    if shards > 1 and width_multiple % shards != 0:
+        raise ValueError(
+            f"width_multiple ({width_multiple}) must be divisible by the "
+            f"shard count ({shards}) so every ladder width splits into "
+            f"equal slabs")
+    return shards
+
+
 def water_fill(ladders: Sequence[List[Candidate]],
-               weights: Sequence[float], budget: int) -> List[int]:
+               weights: Sequence[float], budget: int,
+               *, cost=None) -> List[int]:
     """Pick one candidate per leaf (index into its ladder), total bytes ≤
-    budget, by greedy best-ratio upgrades from the floor."""
+    budget, by greedy best-ratio upgrades from the floor.  ``cost`` maps
+    a candidate to the bytes it charges (default: total bytes; the
+    sharded planner passes per-device cost)."""
+    if cost is None:
+        cost = lambda c: c.nbytes   # noqa: E731
     idx = [0] * len(ladders)
-    total = sum(lad[0].nbytes for lad in ladders)
+    total = sum(cost(lad[0]) for lad in ladders)
     if total > budget:
         raise InfeasibleBudgetError(budget, total)
     while True:
@@ -141,7 +169,7 @@ def water_fill(ladders: Sequence[List[Candidate]],
         for i, lad in enumerate(ladders):
             cur = lad[idx[i]]
             for j in range(idx[i] + 1, len(lad)):
-                extra = lad[j].nbytes - cur.nbytes
+                extra = cost(lad[j]) - cost(cur)
                 if extra > budget - total:
                     continue
                 drop = (cur.error - lad[j].error) * weights[i]
@@ -170,14 +198,27 @@ def plan_for_params(params_like, budget_bytes: int, *,
                     width_multiple: int = 256, sketch_dtype: str = "float32",
                     min_rows: int = MIN_SKETCH_ROWS, seed: int = 0,
                     track_first_moment: bool = True,
-                    sketch_first_moment: bool = True) -> Plan:
+                    sketch_first_moment: bool = True,
+                    shards: int = 1, shard_layout: str = "width") -> Plan:
     """Solve a per-leaf compression plan for ``params_like`` (arrays or
     ShapeDtypeStructs) under an aux-memory budget in bytes.
 
     ``stats`` maps leaf paths to measured/assumed ``TableStats``; leaves
     without an entry fall back to Zipf(``default_alpha``) if their path
-    matches the sparse-table pattern, else stay dense."""
+    matches the sparse-table pattern, else stay dense.
+
+    ``shards > 1`` plans MODEL-PARALLEL sketches (DESIGN.md §17): the
+    budget becomes a PER-DEVICE budget — each sketch candidate charges
+    ``nbytes / shards`` (its slab), dense/rank-1 leaves charge full bytes
+    (replicated) — so a table whose total sketch exceeds one device's
+    budget still plans when its slab fits.  Requires
+    ``width_multiple % shards == 0``."""
     budget = int(budget_bytes)
+    shards = _check_shards(shards, width_multiple)
+    if shard_layout not in ("width", "hash"):
+        raise ValueError(f"unknown shard layout {shard_layout!r} "
+                         f"(expected 'width' or 'hash')")
+    cost = lambda c: _device_cost(c, shards)   # noqa: E731
     leaves = [(p, tuple(int(s) for s in l.shape), np.dtype(l.dtype))
               for p, l in leaf_paths(params_like)]
     stats = stats or {}
@@ -197,12 +238,15 @@ def plan_for_params(params_like, budget_bytes: int, *,
             size *= s
         weights.append(size * (st.weight if st is not None else 1.0))
 
-    idx = water_fill(ladders, weights, budget)
+    idx = water_fill(ladders, weights, budget, cost=cost)
     chosen = [lad[i] for lad, i in zip(ladders, idx)]
 
     # Top-up: the geometric ladder leaves sub-doubling slack; solve the
     # hottest sketched leaf's width exactly from the leftover bytes.
-    remaining = budget - sum(c.nbytes for c in chosen)
+    # All byte arithmetic here is in per-device (``cost``) terms; the
+    # per-moment budget handed to ``for_budget`` scales back up by
+    # ``shards`` since it sizes the TOTAL (all-slab) width.
+    remaining = budget - sum(cost(c) for c in chosen)
     for i in sorted(range(len(leaves)), key=lambda k: (-weights[k], k)):
         c = chosen[i]
         if c.mode != MODE_SKETCH or remaining <= 0:
@@ -212,24 +256,29 @@ def plan_for_params(params_like, budget_bytes: int, *,
             shape, dtype, track_first_moment=track_first_moment)
         dense_total = bm_d + bv_d
         n_sketched = 2 if (track_first_moment and sketch_first_moment) else 1
-        spend = min(remaining, dense_total - 1 - c.nbytes)
+        spend = min(remaining, dense_total - 1 - cost(c))
         if spend <= 0:
             continue
         try:
-            spec = cs.for_budget(shape, c.bytes_v + spend // n_sketched,
+            spec = cs.for_budget(shape,
+                                 c.bytes_v + (spend * shards) // n_sketched,
                                  depth=c.depth, dtype=sketch_dtype,
                                  width_multiple=width_multiple)
         except ValueError:
             continue
-        if spec.width <= c.width:
+        # clamp to the identity point: per-device cost can stay under
+        # budget long past the width where extra buckets stop helping
+        cap = -(-int(shape[0]) // width_multiple) * width_multiple
+        new_width = min(spec.width, cap)
+        if new_width <= c.width:
             continue
         st = leaf_stats[i] or TableStats(alpha=default_alpha)
-        c2 = _sketch_candidate(shape, dtype, st, c.depth, spec.width,
+        c2 = _sketch_candidate(shape, dtype, st, c.depth, new_width,
                                sketch_dtype=sketch_dtype,
                                track_first_moment=track_first_moment,
                                sketch_first_moment=sketch_first_moment)
-        extra = c2.nbytes - c.nbytes
-        if 0 < extra <= remaining and c2.nbytes < dense_total:
+        extra = cost(c2) - cost(c)
+        if 0 < extra <= remaining and cost(c2) < dense_total:
             chosen[i] = c2
             remaining -= extra
 
@@ -242,7 +291,8 @@ def plan_for_params(params_like, budget_bytes: int, *,
     return Plan(leaves=tuple(plan_leaves), budget_bytes=budget,
                 width_multiple=width_multiple, sketch_dtype=sketch_dtype,
                 seed=seed, track_first_moment=track_first_moment,
-                sketch_first_moment=sketch_first_moment)
+                sketch_first_moment=sketch_first_moment,
+                sketch_shards=shards, shard_layout=shard_layout)
 
 
 def min_budget_bytes(params_like, *, stats=None, default_alpha: float = 1.1,
@@ -250,10 +300,14 @@ def min_budget_bytes(params_like, *, stats=None, default_alpha: float = 1.1,
                      sketch_dtype: str = "float32",
                      min_rows: int = MIN_SKETCH_ROWS,
                      track_first_moment: bool = True,
-                     sketch_first_moment: bool = True) -> int:
+                     sketch_first_moment: bool = True,
+                     shards: int = 1) -> int:
     """The plan floor: total bytes with every leaf at its cheapest
-    candidate.  Budgets below this raise ``InfeasibleBudgetError``."""
+    candidate.  Budgets below this raise ``InfeasibleBudgetError``.
+    With ``shards > 1`` the floor is per-device (sketch floors split
+    ``shards`` ways, replicated state does not)."""
     stats = stats or {}
+    shards = _check_shards(shards, width_multiple)
     total = 0
     for path, leaf in leaf_paths(params_like):
         lad = leaf_candidates(
@@ -262,5 +316,5 @@ def min_budget_bytes(params_like, *, stats=None, default_alpha: float = 1.1,
             width_multiple=width_multiple, sketch_dtype=sketch_dtype,
             min_rows=min_rows, track_first_moment=track_first_moment,
             sketch_first_moment=sketch_first_moment)
-        total += lad[0].nbytes
+        total += _device_cost(lad[0], shards)
     return total

@@ -72,7 +72,8 @@ def params_shapes_for_config(cfg: ArchConfig):
 def plan_for_config(cfg: ArchConfig, budget, *, optimizer: str = "cs_adam",
                     stats=None, default_alpha: float = 1.1,
                     sketch_dtype: str = "float32", seed: int = 0,
-                    params_shapes=None) -> Plan:
+                    params_shapes=None, shards: int = 1,
+                    shard_layout: str = "width") -> Plan:
     """Solve a plan against the config's real parameter shapes.  ``budget``
     may be an int (bytes) or any ``parse_budget`` string.
 
@@ -93,19 +94,22 @@ def plan_for_config(cfg: ArchConfig, budget, *, optimizer: str = "cs_adam",
         floor = allocator.min_budget_bytes(
             ps, stats=stats, default_alpha=default_alpha,
             depth=cfg.sketch_depth, sketch_dtype=sketch_dtype,
-            track_first_moment=track, sketch_first_moment=sketch_first)
+            track_first_moment=track, sketch_first_moment=sketch_first,
+            shards=shards)
         budget = parse_budget(budget, dense_bytes=dense, floor_bytes=floor,
                               cfg=cfg)
     return allocator.plan_for_params(
         ps, budget, stats=stats, default_alpha=default_alpha,
         depth=cfg.sketch_depth, sketch_dtype=sketch_dtype, seed=seed,
-        track_first_moment=track, sketch_first_moment=sketch_first)
+        track_first_moment=track, sketch_first_moment=sketch_first,
+        shards=shards, shard_layout=shard_layout)
 
 
 def plan_for_tables(shapes, budget, *, optimizer: str = "cs_rmsprop",
                     stats=None, default_alpha: float = 1.1, depth: int = 3,
                     width_multiple: int = 256,
-                    sketch_dtype: str = "float32", seed: int = 0) -> Plan:
+                    sketch_dtype: str = "float32", seed: int = 0,
+                    shards: int = 1, shard_layout: str = "width") -> Plan:
     """Solve a plan for bare embedding/softmax tables — ``shapes`` maps
     leaf paths to (rows, dim) — with no ``ArchConfig`` in sight.  The
     extreme-classification workload sizes its MACH meta table and feature
@@ -132,12 +136,14 @@ def plan_for_tables(shapes, budget, *, optimizer: str = "cs_rmsprop",
         floor = allocator.min_budget_bytes(
             ps, stats=stats, default_alpha=default_alpha, depth=depth,
             width_multiple=width_multiple, sketch_dtype=sketch_dtype,
-            track_first_moment=track, sketch_first_moment=sketch_first)
+            track_first_moment=track, sketch_first_moment=sketch_first,
+            shards=shards)
         budget = parse_budget(budget, dense_bytes=dense, floor_bytes=floor)
     return allocator.plan_for_params(
         ps, budget, stats=stats, default_alpha=default_alpha, depth=depth,
         width_multiple=width_multiple, sketch_dtype=sketch_dtype, seed=seed,
-        track_first_moment=track, sketch_first_moment=sketch_first)
+        track_first_moment=track, sketch_first_moment=sketch_first,
+        shards=shards, shard_layout=shard_layout)
 
 
 def main(argv=None) -> int:
@@ -153,6 +159,11 @@ def main(argv=None) -> int:
     ap.add_argument("--alpha", type=float, default=1.1,
                     help="assumed zipf exponent for table traffic")
     ap.add_argument("--sketch-dtype", default="float32")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="model-parallel sketch shards; the budget becomes "
+                         "per-device (DESIGN.md §17)")
+    ap.add_argument("--shard-layout", default="width",
+                    choices=("width", "hash"))
     ap.add_argument("--json", default=None,
                     help="write the (last) plan as JSON to this path")
     ap.add_argument("--check", action="store_true",
@@ -167,9 +178,11 @@ def main(argv=None) -> int:
     floor = allocator.min_budget_bytes(
         ps, default_alpha=args.alpha, depth=cfg.sketch_depth,
         sketch_dtype=args.sketch_dtype, track_first_moment=track,
-        sketch_first_moment=sketch_first)
+        sketch_first_moment=sketch_first, shards=args.shards)
+    shard_note = (f" shards={args.shards}({args.shard_layout})"
+                  if args.shards > 1 else "")
     print(f"[plan] arch={cfg.name} optimizer={args.optimizer} "
-          f"dense={dense:,} B floor={floor:,} B")
+          f"dense={dense:,} B floor={floor:,} B{shard_note}")
 
     budgets = ([b for b in args.budgets.split(",") if b]
                if args.budgets else [args.budget or "0.85x"])
@@ -181,19 +194,30 @@ def main(argv=None) -> int:
         plan = plan_for_config(cfg, budget, optimizer=args.optimizer,
                                default_alpha=args.alpha,
                                sketch_dtype=args.sketch_dtype,
-                               params_shapes=ps)
+                               params_shapes=ps, shards=args.shards,
+                               shard_layout=args.shard_layout)
         print(f"\n=== budget {b} -> {budget:,} B ===")
         print(plan.table())
+        if plan.sketch_shards > 1:
+            print()
+            print(plan.shard_table())
         if args.check:
             # ground truth, not the planner's own arithmetic: eval_shape
             # the real optimizer init (zero allocation) and measure it
             measured = accounting.measure_aux_bytes(
                 jax.eval_shape(plan.make_optimizer(1e-3).init, ps))
-            ok = plan.predicted_aux_bytes <= budget and measured <= budget
+            # sharded plans enforce the budget per device: subtract the
+            # (shards-1)/shards of the sketch bytes other devices hold.
+            # measured == predicted (the drift check) makes the measured
+            # per-device bound exact.
+            per_dev = plan.predicted_aux_bytes_per_device
+            measured_dev = measured - plan.predicted_aux_bytes + per_dev
+            ok = per_dev <= budget and measured_dev <= budget
             if not ok:
                 failures += 1
-                print(f"[check] FAIL: predicted {plan.predicted_aux_bytes:,}"
-                      f" / measured {measured:,} B > budget {budget:,} B")
+                print(f"[check] FAIL: predicted {per_dev:,}"
+                      f" / measured {measured_dev:,} B per device "
+                      f"> budget {budget:,} B")
             if measured != plan.predicted_aux_bytes:
                 failures += 1
                 ok = False
@@ -210,8 +234,9 @@ def main(argv=None) -> int:
                     print("[check] OK: plan == dense baseline (no "
                           "compressed leaves)")
             elif ok:
-                print(f"[check] OK: {plan.predicted_aux_bytes:,} B <= "
-                      f"{budget:,} B")
+                print(f"[check] OK: {per_dev:,} B"
+                      + (" per device" if plan.sketch_shards > 1 else "")
+                      + f" <= {budget:,} B")
     if args.json and plan is not None:
         out = plan.to_json()
         # the executable vocabulary alongside the plan (DESIGN.md §12);

@@ -89,11 +89,34 @@ class Plan:
     # fallback.  An execution knob, NOT state layout — plans differing
     # only here hold interchangeable states (DESIGN.md §14).
     backend: Optional[str] = None
+    # model-parallel sketch sharding (DESIGN.md §17): every sketched
+    # leaf's tables split into ``sketch_shards`` equal (depth,
+    # local_width, dim) slabs over the mesh's model axis, so the budget
+    # is enforced PER DEVICE (``predicted_aux_bytes`` stays the total).
+    # layout='width' is placement-only (state bytes identical to the
+    # unsharded run); layout='hash' changes the hash family (two-level
+    # owner hash) and is therefore state layout, like the seed.
+    sketch_shards: int = 1
+    shard_layout: str = "width"
 
     # -- accounting ---------------------------------------------------------
     @property
     def predicted_aux_bytes(self) -> int:
         return sum(l.nbytes for l in self.leaves)
+
+    @property
+    def predicted_aux_bytes_per_device(self) -> int:
+        """One device's share: sketch state splits into ``sketch_shards``
+        equal slabs; dense/rank-1 state is replicated (full cost on every
+        device).  Equals ``predicted_aux_bytes`` when unsharded."""
+        s = max(int(self.sketch_shards), 1)
+        total = 0
+        for l in self.leaves:
+            if l.mode == MODE_SKETCH and s > 1:
+                total += -(-l.bytes_m // s) + -(-l.bytes_v // s)
+            else:
+                total += l.nbytes
+        return total
 
     @property
     def predicted_error(self) -> float:
@@ -113,10 +136,14 @@ class Plan:
 
     # -- executable surface -------------------------------------------------
     def _leaf_spec(self, l: "LeafPlan", *, signed: bool) -> cs.SketchSpec:
-        return cs.SketchSpec(depth=int(l.depth), width=int(l.width),
+        spec = cs.SketchSpec(depth=int(l.depth), width=int(l.width),
                              dim=int(l.shape[1]), signed=signed,
                              seed=leaf_seed(l.path, self.seed),
                              dtype=jnp.dtype(self.sketch_dtype))
+        if self.sketch_shards > 1:
+            spec = dataclasses.replace(spec, shards=int(self.sketch_shards),
+                                       layout=self.shard_layout)
+        return spec
 
     def store_tree(self, cleaning=None) -> StoreTree:
         """The per-path ``StoreTree`` executing this plan — exact-path
@@ -136,6 +163,15 @@ class Plan:
                 v = CountMinStore(spec=self._leaf_spec(l, signed=False),
                                   shape=l.shape, cleaning=cleaning,
                                   backend=self.backend)
+                if self.sketch_shards > 1:
+                    # specs already carry shards/layout; mirror them onto
+                    # the store factory fields so serialized StoreTrees
+                    # round-trip the sharding
+                    v = v.with_sharding(self.sketch_shards,
+                                        self.shard_layout)
+                    if isinstance(m, CountSketchStore):
+                        m = m.with_sharding(self.sketch_shards,
+                                            self.shard_layout)
                 rules.append((l.path, m, v))
             elif l.mode == MODE_RANK1:
                 rules.append((l.path, default_m, Rank1Store()))
@@ -149,6 +185,26 @@ class Plan:
         how ``launch/train.py --store-backend`` overrides a recorded
         plan's execution."""
         return dataclasses.replace(self, backend=backend)
+
+    def with_sharding(self, shards: int, layout: str = "width") -> "Plan":
+        """The same assignment laid out over ``shards`` sketch shards
+        (DESIGN.md §17).  Byte totals are unchanged — sharding splits
+        them across devices; ``predicted_aux_bytes_per_device`` reflects
+        the split.  Every sketched width must divide into equal slabs."""
+        shards = int(shards)
+        if shards < 1:
+            raise ValueError("sketch shards must be >= 1")
+        if layout not in ("width", "hash"):
+            raise ValueError(f"unknown shard layout {layout!r} "
+                             f"(expected 'width' or 'hash')")
+        if shards > 1:
+            for l in self.leaves:
+                if l.mode == MODE_SKETCH and l.width % shards != 0:
+                    raise ValueError(
+                        f"width {l.width} at {l.path} does not divide "
+                        f"into {shards} equal slabs")
+        return dataclasses.replace(self, sketch_shards=shards,
+                                   shard_layout=layout)
 
     def make_optimizer(self, lr=1e-3, *, b1: float = 0.9, b2: float = 0.999,
                        eps: float = 1e-8, cleaning=None,
@@ -195,6 +251,12 @@ class Plan:
                 continue
             if l.width % 2 != 0:
                 raise ValueError(f"fold requires an even width at {l.path}")
+            if (self.sketch_shards > 1
+                    and (l.width // 2) % self.sketch_shards != 0):
+                raise ValueError(
+                    f"folded width {l.width // 2} at {l.path} does not "
+                    f"divide into {self.sketch_shards} equal slabs — "
+                    f"re-plan before folding below the shard count")
             bm, bv = l.bytes_m, l.bytes_v
             if self.track_first_moment and self.sketch_first_moment:
                 bm //= 2
@@ -206,7 +268,7 @@ class Plan:
 
     # -- serialization ------------------------------------------------------
     def to_json(self) -> Dict[str, Any]:
-        return {
+        out = {
             "version": _PLAN_VERSION,
             "budget_bytes": int(self.budget_bytes),
             "width_multiple": int(self.width_multiple),
@@ -222,6 +284,12 @@ class Plan:
                 "predicted_error": float(l.predicted_error),
             } for l in self.leaves],
         }
+        # emitted only when sharded, so unsharded manifests stay
+        # byte-identical to every earlier version
+        if self.sketch_shards != 1 or self.shard_layout != "width":
+            out["sketch_shards"] = int(self.sketch_shards)
+            out["shard_layout"] = self.shard_layout
+        return out
 
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "Plan":
@@ -239,7 +307,9 @@ class Plan:
                    sketch_dtype=d["sketch_dtype"], seed=int(d["seed"]),
                    track_first_moment=bool(d["track_first_moment"]),
                    sketch_first_moment=bool(d["sketch_first_moment"]),
-                   backend=d.get("backend"))
+                   backend=d.get("backend"),
+                   sketch_shards=int(d.get("sketch_shards", 1)),
+                   shard_layout=d.get("shard_layout", "width"))
 
     # -- display ------------------------------------------------------------
     def table(self) -> str:
@@ -262,4 +332,36 @@ class Plan:
             f"<= budget {self.budget_bytes:,} B  "
             f"({counts[MODE_SKETCH]} sketch / {counts[MODE_RANK1]} rank1 / "
             f"{counts[MODE_DENSE]} dense)")
+        if self.sketch_shards > 1:
+            lines.append(
+                f"SHARDED ×{self.sketch_shards} ({self.shard_layout} "
+                f"layout): {self.predicted_aux_bytes_per_device:,} B "
+                f"per device <= budget (budget is per-device)")
+        return "\n".join(lines)
+
+    def shard_table(self) -> str:
+        """Per-shard byte table — what each device of the model axis
+        holds (``plan/cli.py`` prints this when ``sketch_shards > 1``).
+        Slabs are equal by construction (width % shards == 0), so one
+        per-shard column covers all shards; dense/rank-1 rows replicate."""
+        s = max(int(self.sketch_shards), 1)
+        rows = [("path", "mode", "total bytes", f"bytes/shard (×{s})")]
+        repl = 0
+        for l in sorted(self.leaves, key=lambda x: -x.nbytes):
+            if l.mode == MODE_SKETCH:
+                per = -(-l.bytes_m // s) + -(-l.bytes_v // s)
+                rows.append((l.path, f"sketch/{self.shard_layout}",
+                             f"{l.nbytes:,}", f"{per:,}"))
+            else:
+                repl += l.nbytes
+                rows.append((l.path, l.mode, f"{l.nbytes:,}",
+                             f"{l.nbytes:,} (replicated)"))
+        widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+        lines = ["  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip()
+                 for r in rows]
+        lines.insert(1, "-" * len(lines[0]))
+        lines.append(
+            f"PER-DEVICE {self.predicted_aux_bytes_per_device:,} B  "
+            f"(total {self.predicted_aux_bytes:,} B across {s} shards; "
+            f"{repl:,} B replicated)")
         return "\n".join(lines)

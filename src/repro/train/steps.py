@@ -242,7 +242,9 @@ def sparse_embedding_stores(n_rows: int, dim: int, *,
                             hparams: Optional[SketchHParams] = None,
                             track_first_moment: bool = True,
                             cleaning: Optional[CleaningSchedule] = None,
-                            path: str = "sparse_embedding", stores=None):
+                            path: str = "sparse_embedding", stores=None,
+                            sketch_shards: int = 1,
+                            shard_layout: str = "width"):
     """The (m_store, v_store) codec pair a ``make_sparse_embedding_step``
     called with the same table arguments binds — same StoreTree-vs-
     hparams precedence, same cleaning guards.  Out-of-band consumers
@@ -254,10 +256,17 @@ def sparse_embedding_stores(n_rows: int, dim: int, *,
     if stores is not None:
         m_store, v_store, track_first_moment = resolve_sparse_stores(
             stores, path, (n_rows, dim))
-    return opt_lib.sparse_rows_stores(
+    m_store, v_store = opt_lib.sparse_rows_stores(
         (int(n_rows), int(dim)), path, hp,
         track_first_moment=track_first_moment, cleaning=cleaning,
         m_store=m_store, v_store=v_store)
+    if sketch_shards > 1:
+        # mirror sparse_rows_adam_sharded's re-stamping, so the monitors
+        # see the same sharded specs (per-shard occupancy gauges)
+        if m_store is not None:
+            m_store = m_store.with_sharding(sketch_shards, shard_layout)
+        v_store = v_store.with_sharding(sketch_shards, shard_layout)
+    return m_store, v_store
 
 
 def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
@@ -271,7 +280,10 @@ def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
                                dp_axis: Optional[str] = None,
                                mesh: Optional[Mesh] = None,
                                error_feedback: bool = False,
-                               dir_clip: Optional[float] = 10.0):
+                               dir_clip: Optional[float] = 10.0,
+                               sketch_shards: int = 1,
+                               shard_layout: str = "width",
+                               shard_axis: str = "model"):
     """Train step for the (ids, grad-rows) regime — LM1B-style embedding /
     softmax tables and extreme classification, where per-step work is
     O(touched rows), not O(n).
@@ -306,6 +318,16 @@ def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
     None disables).  Sketch state is replicated in the shard_map body;
     at the jit level it stores sharded per ``sharding.opt_specs_for_state``
     (width over 'data', dim over 'model').
+
+    ``sketch_shards > 1``: model-parallel sketches (DESIGN.md §17) — the
+    sketch state is partitioned into width slabs over ``shard_axis``
+    (layout 'width' or 'hash'; ``sparse_rows_adam_sharded``), the body
+    runs per (dp × shard) device on its local slab, and the shard-axis
+    routing psum assembles cross-shard query rows.  Composes with
+    ``dp_axis`` (the PR 4 collectives then move slab-sized payloads).
+    The mesh's ``shard_axis`` size must EQUAL ``sketch_shards`` — the
+    slab each body instance sees must be one shard's worth — checked at
+    call time against the wrap's mesh.
     """
     hp = hparams if hparams is not None else SketchHParams()
     m_store = v_store = None
@@ -314,7 +336,15 @@ def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
         # (m=None) must not be overridden by this function's default
         m_store, v_store, track_first_moment = resolve_sparse_stores(
             stores, path, (n_rows, dim))
-    if dp_axis is None:
+    if sketch_shards > 1:
+        opt = opt_lib.sparse_rows_adam_sharded(
+            lr, b1=b1, b2=b2, eps=eps, shape=(n_rows, dim), path=path,
+            shards=sketch_shards, shard_layout=shard_layout,
+            shard_axis=shard_axis, dp_axis=dp_axis, hparams=hp,
+            track_first_moment=track_first_moment, cleaning=cleaning,
+            error_feedback=error_feedback, dir_clip=dir_clip,
+            m_store=m_store, v_store=v_store)
+    elif dp_axis is None:
         opt = opt_lib.sparse_rows_adam(
             lr, b1=b1, b2=b2, eps=eps, shape=(n_rows, dim), path=path,
             hparams=hp, track_first_moment=track_first_moment,
@@ -337,7 +367,24 @@ def make_sparse_embedding_step(n_rows: int, dim: int, *, lr=1e-3,
                 {"ids": ids, "rows": grad_rows}, opt_state)
         return opt_lib.apply_sparse_updates(table, updates), opt_state
 
-    if dp_axis is None:
+    if sketch_shards > 1:
+        wrapped = shd.sharded_sparse_wrap(local_step, mesh=mesh,
+                                          dp_axis=dp_axis,
+                                          shard_axis=shard_axis)
+
+        def step_fn(table, opt_state, ids, grad_rows):
+            use_mesh = mesh if mesh is not None else shd.current_mesh()
+            if use_mesh is not None:
+                sizes = dict(zip(use_mesh.axis_names,
+                                 use_mesh.devices.shape))
+                if sizes.get(shard_axis) != sketch_shards:
+                    raise ValueError(
+                        f"sketch_shards={sketch_shards} needs the mesh's "
+                        f"{shard_axis!r} axis to be exactly that size, "
+                        f"got {sizes} — each shard_map body must see one "
+                        f"shard's (depth, local_width, dim) slab")
+            return wrapped(table, opt_state, ids, grad_rows)
+    elif dp_axis is None:
         step_fn = local_step
     else:
         step_fn = shd.dp_sparse_wrap(local_step, mesh=mesh,
