@@ -4,6 +4,15 @@ Protocol (MegaFace protocol at CPU scale): a softmax classifier over a
 zipf-distributed class set trained with CS-Adam and CS-Adagrad, sketches
 at 20% size, comparing cleaning (α, every-C) against no cleaning and the
 dense baseline.  Reports final eval accuracy + the 2nd-moment ℓ2 error.
+
+Built on the chain/AuxStore transforms (DESIGN.md §14): explicit
+``CountSketchStore``/``CountMinStore`` pairs selected by a
+``StoreTree``, the cleaning schedule attached to the count-min store.
+The ``cs_adam_clean_async`` arm runs the SAME schedule in ``async`` mode
+— the in-graph hook is an identity and an ``AsyncCleaner`` dispatches
+the decay between steps (DESIGN.md §18) — and the A/B records its final
+parameters' max |Δ| vs the sync arm, which device dataflow ordering
+pins at 0.0 (bit-identical placement, off-critical-path cost).
 """
 from __future__ import annotations
 
@@ -13,10 +22,10 @@ import numpy as np
 
 from benchmarks.common import save_result
 from repro.core import optimizers as O
-from repro.core.cleaning import CleaningSchedule
-from repro.core.partition import SketchPolicy
+from repro.core import sketch as cs
+from repro.core.cleaning import AsyncCleaner, CleaningSchedule
+from repro.core.stores import CountMinStore, CountSketchStore, StoreTree
 
-POL = SketchPolicy(min_rows=512)
 HP = O.SketchHParams(compression=5.0, width_multiple=16)
 
 
@@ -35,12 +44,38 @@ def _make_problem(n_classes=4096, d=32, seed=0):
     return batch, n_classes, d
 
 
-def _train(opt, steps, batch_fn, n_classes, d, track_v_error=False):
+def _specs(n_classes, d):
+    return (HP.spec("class_head/table", (n_classes, d), signed=True),
+            HP.spec("class_head/table", (n_classes, d), signed=False))
+
+
+def _tree(n_classes, d, *, cleaning=None, first_moment=True):
+    """The explicit store pair for the class-head table: CS 1st moment
+    (signed, median), CM 2nd moment (min, optional cleaning)."""
+    mspec, vspec = _specs(n_classes, d)
+    return StoreTree.select(
+        m=CountSketchStore(spec=mspec) if first_moment else None,
+        v=CountMinStore(spec=vspec, cleaning=cleaning),
+        where=lambda p, s: s == (n_classes, d))
+
+
+def _cs_adam(lr, n_classes, d, cleaning=None):
+    return O.adam_from_stores(lr, _tree(n_classes, d, cleaning=cleaning))
+
+
+def _cs_adagrad(lr, n_classes, d, cleaning=None):
+    tree = _tree(n_classes, d, cleaning=cleaning, first_moment=False)
+    return O.adagrad_from_stores(lr, tree)
+
+
+def _train(opt, steps, batch_fn, n_classes, d, track_v_error=False,
+           cleaner: AsyncCleaner = None):
     params = {"class_head": {"table": jnp.zeros((n_classes, d))}}
     st = opt.init(params)
     v_exact = jnp.zeros((n_classes, d))
     b2 = 0.999
     v_errs = []
+    _, vspec = _specs(n_classes, d)
 
     @jax.jit
     def step(params, st, x, y):
@@ -54,20 +89,20 @@ def _train(opt, steps, batch_fn, n_classes, d, track_v_error=False):
         return O.apply_updates(params, u), st, l, g
 
     for i in range(steps):
+        if cleaner is not None:
+            # dispatch BEFORE the step that will observe counter i+1 —
+            # the boundary sync's in-graph lax.cond keys on
+            st, _ = cleaner.maybe_dispatch(st, i + 1)
         x, y = batch_fn(i)
         params, st, l, g = step(params, st, x, y)
         if track_v_error and i % 20 == 0:
             gg = g["class_head"]["table"]
             v_exact = b2 * v_exact + (1 - b2) * gg * gg
             vleaf = st["v"]["class_head"]["table"]
-            if vleaf.ndim == 3:
-                from repro.core import sketch as cs
-                spec = HP.spec("class_head/table", (n_classes, d),
-                               signed=False)
-                est = cs.query_dense(spec, vleaf, n_classes)
-                v_errs.append(float(jnp.linalg.norm(est - v_exact) /
-                                    jnp.maximum(jnp.linalg.norm(v_exact),
-                                                1e-9)))
+            est = cs.query_dense(vspec, vleaf, n_classes)
+            v_errs.append(float(jnp.linalg.norm(est - v_exact) /
+                                jnp.maximum(jnp.linalg.norm(v_exact),
+                                            1e-9)))
     # eval accuracy on fresh batches
     correct = total = 0
     for j in range(10):
@@ -75,33 +110,47 @@ def _train(opt, steps, batch_fn, n_classes, d, track_v_error=False):
         pred = jnp.argmax(x @ params["class_head"]["table"].T, axis=-1)
         correct += int((pred == y).sum())
         total += y.shape[0]
-    return {"accuracy": correct / total, "v_rel_error": v_errs}
+    return {"accuracy": correct / total, "v_rel_error": v_errs,
+            "params": params}
 
 
 def run(quick: bool = False):
     steps = 200 if quick else 600
     batch_fn, n_classes, d = _make_problem()
-    out = {}
     clean = CleaningSchedule(alpha=0.2, every=125)
-    for name, opt, track in [
-        ("adam_dense", O.adam(0.05), False),
-        ("cs_adam_noclean",
-         O.countsketch_adam(0.05, policy=POL, hparams=HP), True),
+    aclean = CleaningSchedule(alpha=0.2, every=125, mode="async")
+    acleaner = AsyncCleaner(aclean)
+    out = {}
+    for name, opt, track, cleaner in [
+        ("adam_dense", O.adam(0.05), False, None),
+        ("cs_adam_noclean", _cs_adam(0.05, n_classes, d), True, None),
         ("cs_adam_clean",
-         O.countsketch_adam(0.05, policy=POL, hparams=HP, cleaning=clean),
-         True),
-        ("adagrad_dense", O.adagrad(0.5), False),
+         _cs_adam(0.05, n_classes, d, cleaning=clean), True, None),
+        ("cs_adam_clean_async",
+         _cs_adam(0.05, n_classes, d, cleaning=aclean), True, acleaner),
+        ("adagrad_dense", O.adagrad(0.5), False, None),
         ("cs_adagrad_noclean",
-         O.countsketch_adagrad(0.5, policy=POL, hparams=HP), True),
+         _cs_adagrad(0.5, n_classes, d), True, None),
         ("cs_adagrad_clean",
-         O.countsketch_adagrad(0.5, policy=POL, hparams=HP,
-                               cleaning=CleaningSchedule(alpha=0.5,
-                                                         every=125)), True),
+         _cs_adagrad(0.5, n_classes, d,
+                     cleaning=CleaningSchedule(alpha=0.5, every=125)),
+         True, None),
     ]:
         out[name] = _train(opt, steps, batch_fn, n_classes, d,
-                           track_v_error=track)
+                           track_v_error=track, cleaner=cleaner)
+    # async-vs-sync A/B: same schedule, decay moved between steps —
+    # device dataflow ordering keeps the numerics bit-identical
+    diff = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))),
+        out["cs_adam_clean"]["params"], out["cs_adam_clean_async"]["params"])
+    async_max_dev = max(jax.tree_util.tree_leaves(diff))
+    for v in out.values():
+        v.pop("params")
+    out["async_vs_sync_max_abs_param_diff"] = async_max_dev
+    out["async_cleans_dispatched"] = acleaner.dispatched
     save_result("cleaning", out)
-    return {k: round(v["accuracy"], 4) for k, v in out.items()}
+    return {k: round(v["accuracy"], 4) for k, v in out.items()
+            if isinstance(v, dict)}
 
 
 if __name__ == "__main__":

@@ -1,0 +1,236 @@
+"""(ours) Quantized sketch cells — bytes/step vs steps/s ladder
+(DESIGN.md §18).
+
+Protocol: one sketched (n, d) table under ``scale_by_adam`` (both
+moments sketched, fused 'xla' backend, state donated), dense full-table
+gradients — the same optimizer-update-only timing as
+``benchmarks/fused_store.py``, swept over the cell dtype axis:
+
+  equal width   f32 / bf16 / int8 at compression 5× — same buckets and
+                seeds, so the quantized arms differ from f32 ONLY by
+                cell precision; bytes shrink 2× / ~4×.
+  equal bytes   bf16 at 2× width, int8 at ~4× width — the planner's
+                water-fill answer (``--sketch-dtype int8`` doubles twice
+                the width at a fixed byte budget), trading rounding
+                noise for fewer collisions.
+
+Per arm: steps/s (interleaved A/B windows, min-over-windows — see
+§FusedStore calibration), process-CPU ms/step, measured sketch state
+bytes (the dense fused path reads AND rewrites every cell each step, so
+state bytes are the per-step sketch traffic), and a quality pass — the
+recovered 2nd moment's rel-L1 vs the f32 arm after a shared gradient
+stream, checked against the probe's quantization-noise envelope
+(dim·scale/4 per read, ``obs.probes`` gauge units).
+
+The LLC-inversion shape 65536×64 is where the f32 fused one-shot's
+working set outgrows the cache: int8 cells pull it back in and win on
+wall clock, not just on bytes.  Results:
+experiments/bench/quantized_cells.json.
+
+    PYTHONPATH=src python benchmarks/quantized_cells.py --quick
+    PYTHONPATH=src python -m benchmarks.quantized_cells --pin  # committed
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if "--pin" in sys.argv:                      # before jax initializes
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_cpu_multi_thread_eigen=false"
+                               ).strip()
+    try:
+        os.sched_setaffinity(0, {0})
+    except (AttributeError, OSError):        # non-Linux hosts
+        pass
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from benchmarks.common import save_result
+except ImportError:  # run as a script: python benchmarks/quantized_cells.py
+    import pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks.common import save_result
+from repro.core import optimizers as O
+from repro.core import quantize as qz
+from repro.core import sketch as cs
+from repro.core.stores import CountMinStore, CountSketchStore, StoreTree
+
+SHAPES = ((16384, 64), (65536, 64))
+BASE_COMPRESSION = 5.0
+# (arm name, cell dtype, width multiplier): equal-width arms at 1x; the
+# equal-bytes arms grow width by the byte ratio (bf16 2x, int8 ~4x —
+# the int8 arm's per-block scales make it "equal" only to ~1%)
+ARMS = (("f32", "float32", 1),
+        ("bf16_eqwidth", "bfloat16", 1),
+        ("int8_eqwidth", "int8", 1),
+        ("bf16_eqbytes", "bfloat16", 2),
+        ("int8_eqbytes", "int8", 4))
+
+
+def _tree(dtype: str, wmul: int):
+    c = BASE_COMPRESSION / wmul
+    return StoreTree.select(
+        m=CountSketchStore(compression=c, backend="xla", dtype=dtype),
+        v=CountMinStore(compression=c, backend="xla", dtype=dtype),
+        where=lambda p, s: True)
+
+
+def _state_bytes(state) -> int:
+    """Measured sketch state bytes: every cell + scale buffer the dense
+    fused path touches per step (QuantState flattens to cells+scales)."""
+    return sum(leaf.nbytes for part in ("m", "v")
+               for leaf in jax.tree_util.tree_leaves(state[part]))
+
+
+def _prepare(dtype: str, wmul: int, n: int, d: int):
+    opt = O.adam_from_stores(1e-3, _tree(dtype, wmul))
+    params = {"table": jax.random.normal(jax.random.PRNGKey(0), (n, d))}
+    g = {"table": jax.random.normal(jax.random.PRNGKey(1), (n, d)) * 0.1}
+    state = opt.init(params)
+    nbytes = _state_bytes(state)
+    step = jax.jit(lambda g, s: opt.update(g, s), donate_argnums=(1,))
+    u, state = step(g, state)
+    jax.block_until_ready(u)                     # compile + warm
+    return [step, g, state, nbytes]
+
+
+def bench_shape(n: int, d: int, arms, steps: int, windows: int = 5):
+    """{arm: (steps/s, cpu ms/step, state bytes)} — interleaved A/B
+    windows, min-over-windows (co-tenant noise only ever ADDS time)."""
+    runs = {a: _prepare(dt, wm, n, d) for a, dt, wm in arms}
+    wall = {a: float("inf") for a, _, _ in arms}
+    cpu = {a: float("inf") for a, _, _ in arms}
+    for _ in range(windows):
+        for a, _, _ in arms:
+            step, g, state, _ = runs[a]
+            c0, t0 = time.process_time(), time.perf_counter()
+            for _ in range(steps):
+                u, state = step(g, state)
+            jax.block_until_ready(u)
+            wall[a] = min(wall[a], (time.perf_counter() - t0) / steps)
+            cpu[a] = min(cpu[a], (time.process_time() - c0) / steps)
+            runs[a][2] = state
+    return {a: (1.0 / wall[a], cpu[a] * 1000.0, runs[a][3])
+            for a, _, _ in arms}
+
+
+def quality_pass(n: int, d: int, steps: int = 24, sample: int = 2048):
+    """rel-L1 of the recovered 2nd moment vs the f32 arm, against the
+    probe's quantization-noise envelope.  Equal-width arms share the f32
+    arm's seed and width, so buckets coincide and the difference is
+    PURELY cell precision + stochastic rounding."""
+    shape = (n, d)
+
+    def spec_for(dtype):
+        return cs.for_param(shape, compression=BASE_COMPRESSION,
+                            signed=False, seed=17,
+                            dtype=jnp.dtype(dtype))
+
+    key = jax.random.PRNGKey(2)
+    rows = jax.random.permutation(key, n)[:sample].astype(jnp.int32)
+    streams = [jax.random.normal(jax.random.PRNGKey(100 + t),
+                                 (256, d)) * 0.1 for t in range(steps)]
+    ids = [jax.random.randint(jax.random.PRNGKey(200 + t), (256,), 0, n)
+           for t in range(steps)]
+    states = {}
+    for dtype in ("float32", "bfloat16", "int8"):
+        spec = spec_for(dtype)
+        S = cs.init(spec)
+        for t in range(steps):
+            sr = qz.step_seed(spec.seed, jnp.uint32(t + 1))
+            S = cs.update(spec, S, ids[t],
+                          (1.0 - 0.999) * streams[t] ** 2, sr_seed=sr)
+        states[dtype] = (spec, S)
+    fspec, fS = states["float32"]
+    ref = cs.query(fspec, fS, rows)
+    out = {}
+    for dtype in ("bfloat16", "int8"):
+        spec, S = states[dtype]
+        est = cs.query(spec, S, rows)
+        rel = float(jnp.sum(jnp.abs(est - ref))
+                    / (jnp.sum(jnp.abs(ref)) + 1e-12))
+        row = {"v_rel_l1_vs_f32": rel}
+        if spec.quantized:
+            # an unsigned int8 read resolves a cell to within HALF its
+            # block scale: SR noise (E| |=s/4) plus the half-ulp read
+            # floor that protects adaptive denominators.  Each touch
+            # re-rounds the cell, so deviations random-walk with the
+            # touch count — the calibrated bound is 2x the per-read
+            # resolution (two ulps) at these touch rates; the realized
+            # ratio is emitted so drift is visible in the artifact
+            b = spec.family.bucket(rows)
+            sc = qz.bucket_scales(S.scales, b, spec.scale_block)
+            env = float(jnp.sum(d * jnp.min(sc, axis=0) / 2.0)
+                        / (jnp.sum(jnp.abs(ref)) + 1e-12))
+            row["quant_noise_envelope"] = env
+            row["envelope_ratio"] = round(rel / max(env, 1e-12), 4)
+            row["within_envelope"] = rel <= 2.0 * env
+        out[dtype] = row
+    return out
+
+
+def run(quick: bool = False, shapes=SHAPES):
+    steps = 5 if quick else 10
+    out = {}
+    for n, d in shapes:
+        res = bench_shape(n, d, ARMS, steps, windows=3 if quick else 5)
+        row = {}
+        f32_sps, _, f32_bytes = res["f32"]
+        for a, dt, wm in ARMS:
+            sps, cpu_ms, nbytes = res[a]
+            row[a] = {
+                "cell_dtype": dt, "width_multiplier": wm,
+                "steps_per_s": round(sps, 3),
+                "cpu_ms_per_step": round(cpu_ms, 2),
+                "sketch_bytes_per_step": nbytes,
+                "bytes_reduction_vs_f32": round(f32_bytes / nbytes, 3),
+                "speedup_vs_f32": round(sps / f32_sps, 3),
+            }
+        out[f"{n}x{d}"] = {"n": n, "dim": d, "arms": row,
+                           "quality": quality_pass(
+                               n, d, steps=8 if quick else 24,
+                               sample=512 if quick else 2048)}
+    flag = out.get("65536x64", next(iter(out.values())))
+    i8 = flag["arms"].get("int8_eqwidth", {})
+    summary = {
+        "protocol": "scale_by_adam on one sketched table, optimizer "
+                    "update only, state donated, fused 'xla' backend; "
+                    "interleaved A/B windows, min-over-windows; equal-"
+                    "width arms share buckets with f32 (seeded), so "
+                    "quality deltas are pure cell precision",
+        "pinned": "--pin" in sys.argv,
+        "device": jax.default_backend(),
+        "steps_timed": steps,
+        "rows": out,
+        "int8_bytes_reduction_at_flagship":
+            i8.get("bytes_reduction_vs_f32"),
+        "int8_speedup_at_flagship": i8.get("speedup_vs_f32"),
+        "flagship_shape": "65536x64",
+    }
+    save_result("quantized_cells", summary)
+    return {k: {a: (r["steps_per_s"],
+                    f"{r['bytes_reduction_vs_f32']}x bytes")
+                for a, r in v["arms"].items()}
+            for k, v in out.items()}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--pin", action="store_true",
+                    help="pin to one core + single-threaded XLA (stable "
+                         "work-ratio protocol; handled before jax init)")
+    ap.add_argument("--shapes", default="",
+                    help="comma-separated NxD overrides, e.g. 65536x64")
+    a = ap.parse_args()
+    shapes = SHAPES
+    if a.shapes:
+        shapes = tuple(tuple(int(x) for x in s.split("x"))
+                       for s in a.shapes.split(","))
+    print(run(quick=a.quick, shapes=shapes))

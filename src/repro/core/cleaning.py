@@ -1,33 +1,156 @@
-"""Count-Min Sketch cleaning heuristic (paper §4).
+"""Count-Min Sketch cleaning heuristic (paper §4) + the async dispatcher.
 
 The CMS min-estimator systematically over-estimates, which prematurely
 shrinks adaptive learning rates.  The paper's fix: every ``every`` steps,
-multiply the sketch by ``alpha`` (0 ≤ alpha ≤ 1).  We gate the decay with
-``lax.cond`` so the whole optimizer step stays one XLA program (no host
-round-trip — the GPU reference implementation cleans from the host)."""
+multiply the sketch by ``alpha`` (0 ≤ alpha ≤ 1).
+
+Two execution modes (DESIGN.md §18):
+
+  * ``sync`` — the decay is gated with ``lax.cond`` inside the compiled
+    optimizer step (no host round-trip — the GPU reference
+    implementation cleans from the host).  The boundary step pays the
+    full-sketch multiply inside its critical section.
+  * ``async`` — the in-step hook is an identity and an ``AsyncCleaner``
+    (host object owned by the training loop) dispatches the decay as its
+    own donated jitted computation BETWEEN steps.  Dispatch never blocks
+    the host; the next step's program consumes the decayed buffer
+    through device dataflow ordering, so the numerics are BIT-IDENTICAL
+    to the sync placement (the decay still lands before step ``t``'s
+    reads) while its cost leaves the step program entirely — the
+    ``obs.clean`` span moves to the trainer's ``clean`` phase.
+
+int8 sketch cells make the decay O(depth · n_blocks) in EITHER mode:
+``sketch.decay`` folds ``alpha`` into the per-block scales exactly and
+never touches a cell (the "pending decay folds into the read's scale"
+form of the paper's semantics).
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+_MODES = ("sync", "async")
+
+
+def _decay_state(S, alpha: float):
+    """One store-state decay — routed through ``sketch.decay`` so int8
+    ``QuantState`` leaves decay exactly via their scales."""
+    from repro.core import sketch as cs
+    return cs.decay(S, alpha)
 
 
 @dataclasses.dataclass(frozen=True)
 class CleaningSchedule:
     alpha: float = 0.2
     every: int = 125
+    mode: str = "sync"
 
-    def apply(self, S: jnp.ndarray, step: jnp.ndarray) -> jnp.ndarray:
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"cleaning mode must be one of {_MODES}, "
+                             f"got {self.mode!r}")
+
+    def due(self, step) -> jnp.ndarray:
+        """Whether the decay fires on ``step`` (host int or traced)."""
+        return jnp.logical_and(step > 0, step % self.every == 0)
+
+    def apply(self, S, step):
         """Decay ``S`` on steps where ``step % every == 0`` (step >= 1)."""
-        do = jnp.logical_and(step > 0, step % self.every == 0)
-        return jax.lax.cond(do, lambda s: s * jnp.asarray(self.alpha, s.dtype),
+        return jax.lax.cond(self.due(step),
+                            lambda s: _decay_state(s, self.alpha),
                             lambda s: s, S)
 
 
-def maybe_clean(schedule: Optional[CleaningSchedule], S: jnp.ndarray,
-                step: jnp.ndarray) -> jnp.ndarray:
-    if schedule is None:
+def maybe_clean(schedule: Optional[CleaningSchedule], S, step):
+    """The in-step cleaning hook.  ``async`` schedules no-op here — the
+    ``AsyncCleaner`` owns the decay between steps."""
+    if schedule is None or schedule.mode == "async":
         return S
     return schedule.apply(S, step)
+
+
+class AsyncCleaner:
+    """Dispatches the §4 decay off the critical path (mode ``async``).
+
+    ``getter``/``setter`` map the run's opt_state to/from the count-min
+    state the schedule decays — the same opt-state navigation discipline
+    ``obs.TableMonitor`` uses.  Defaults address the flagship sparse
+    layout ``{"step", "m", "v", ...}``.  The decayed value may be any
+    pytree of sketch states (arrays or ``QuantState``); each state leaf
+    is decayed with ``sketch.decay``.
+
+    Usage (the Trainer's loop)::
+
+        opt_state, fired = cleaner.maybe_dispatch(opt_state, next_step)
+
+    BEFORE running the step that will observe counter ``next_step`` —
+    the same boundary the sync ``lax.cond`` keys on (``step % every ==
+    0``), so the two modes decay on identical schedules and produce
+    bit-identical states.  ``maybe_dispatch`` is async: it enqueues the
+    donated multiply and returns; ``in_flight`` reports whether the
+    swapped-in buffers are still being produced (``CountMinStore.stats``
+    zeroes its ``clean_next_removes`` projection while one is pending).
+    """
+
+    def __init__(self, schedule: CleaningSchedule, *,
+                 getter: Optional[Callable[[Any], Any]] = None,
+                 setter: Optional[Callable[[Any, Any], Any]] = None):
+        if schedule.mode != "async":
+            raise ValueError("AsyncCleaner needs a schedule with "
+                             "mode='async'")
+        self.schedule = schedule
+        self._get = getter or (lambda st: st["v"])
+        self._set = setter or (lambda st, v: {**st, "v": v})
+        from repro.core.quantize import QuantState
+
+        def decay(v):
+            return jax.tree_util.tree_map(
+                lambda s: _decay_state(s, schedule.alpha), v,
+                is_leaf=lambda x: isinstance(x, QuantState))
+
+        # donated: the decayed sketch reuses the old buffer — the "swap"
+        # is a rebind of the opt_state reference, double-buffered only
+        # for the instant XLA needs both
+        self._decay = jax.jit(decay, donate_argnums=0)
+        self._pending: Any = None
+        self.dispatched = 0
+
+    def due(self, next_step: int) -> bool:
+        return next_step > 0 and next_step % self.schedule.every == 0
+
+    def maybe_dispatch(self, opt_state, next_step: int):
+        """Swap the decayed count-min state into ``opt_state`` when the
+        upcoming step is a cleaning boundary.  Returns ``(opt_state',
+        fired)``; never blocks on the device."""
+        if not self.due(int(next_step)):
+            return opt_state, False
+        new_v = self._decay(self._get(opt_state))
+        self._pending = new_v
+        self.dispatched += 1
+        return self._set(opt_state, new_v), True
+
+    def in_flight(self) -> bool:
+        """Whether the last dispatched decay is still executing.  A leaf
+        the training step has already consumed by donation reads as done
+        — its buffer is deleted, so readiness is unobservable, and the
+        donating step could only have been dispatched after the decay."""
+
+        def ready(leaf):
+            if not hasattr(leaf, "is_ready"):
+                return True
+            if getattr(leaf, "is_deleted", lambda: False)():
+                return True
+            try:
+                return leaf.is_ready()
+            except RuntimeError:
+                return True
+        if self._pending is None:
+            return False
+        done = all(ready(leaf)
+                   for leaf in jax.tree_util.tree_leaves(self._pending))
+        if done:
+            self._pending = None
+        return not done

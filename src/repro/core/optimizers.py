@@ -255,6 +255,17 @@ def adam_from_stores(lr: Schedule, stores: StoreTree, *, b1: float = 0.9,
                                     strict_paper=strict_paper), lr)
 
 
+def adagrad_from_stores(lr: Schedule, stores: StoreTree, *,
+                        eps: float = 1e-10, dense_chunk: int = 8192,
+                        strict_paper: bool = False) -> Transform:
+    """``chain(scale_by_adagrad(stores=...), scale_by_lr(lr))`` in the
+    legacy ``{"step", "v"}`` state layout — the Alg. 3 companion of
+    ``adam_from_stores`` for explicit store trees."""
+    return _with_lr(T.scale_by_adagrad(eps, stores=stores,
+                                       dense_chunk=dense_chunk,
+                                       strict_paper=strict_paper), lr)
+
+
 # ---------------------------------------------------------------------------
 # Dense baselines (wrappers over the same rules, all-dense stores)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,228 @@
+"""Low-precision sketch cell storage with stochastic rounding (DESIGN.md §18).
+
+Sketch cells can be held in three storage dtypes:
+
+  * ``float32``  — the historical layout (bit-compatible with every
+    pre-quantization checkpoint and test pin),
+  * ``bfloat16`` — cells are a plain bf16 ``(depth, width, dim)`` array;
+    dequantization is a widening cast,
+  * ``int8``     — cells are a ``QuantState``: int8 values plus f32
+    scales per (depth, column-block) of ``scale_block`` buckets.
+
+All low-precision WRITES go through stochastic rounding so the sketched
+EMA stays mean-unbiased: a deterministic round-to-nearest write biases
+every small increment toward zero and the moment estimate drifts over
+thousands of steps, while ``E[SR(x)] = x`` keeps the long-horizon EMA
+centered on the f32 oracle (MicroAdam's quantized error-feedback state
+makes the same argument).
+
+Randomness discipline
+---------------------
+One uint32 seed per optimizer step, derived through threefry
+(``step_seed`` — keyed on the sketch's hash seed and the step counter),
+is expanded to per-cell rounding bits by a splitmix32 counter hash over
+the cell's linear index (``cell_bits``).  The expansion is plain integer
+arithmetic, so the REF, XLA and Pallas backends can all derive exactly
+the same bits in-register — stochastic rounding never costs memory
+bandwidth and never breaks cross-backend bit-parity.
+
+Rounding forms (pinned; the property tests in tests/test_quantize.py
+assert unbiasedness and exactness against them):
+
+  * int8:  ``q = clip(floor(x/scale + u), -127, 127)`` with ``u`` uniform
+    in [0, 1) — exact on representable integers, mean-unbiased inside
+    the clip range.
+  * bf16:  add the 16 random low bits to the f32 bit pattern, then
+    truncate the mantissa — exact when ``x`` is bf16-representable
+    (truncation cannot carry), mean-unbiased otherwise.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hashing import _GOLDEN, _mix
+
+#: default number of width-axis buckets sharing one f32 scale.  256 keeps
+#: the scale overhead at 4/(256·dim·1) of the cell bytes (≈0.02% at
+#: dim=64) while matching ``for_param``'s width_multiple, so block edges
+#: align with width rounding and Hokusai folds halve the block count
+#: exactly.
+SCALE_BLOCK = 256
+
+#: symmetric int8 range (−128 is unused so the grid is sign-symmetric —
+#: the count-sketch m moment relies on E[s·cell] symmetry).
+QMAX = 127.0
+
+#: storage dtypes a sketch cell may take (the ``cell_dtype`` dimension).
+CELL_DTYPES = ("float32", "bfloat16", "int8")
+
+
+class QuantState(NamedTuple):
+    """int8 sketch state: quantized cells + per-(depth, block) scales.
+
+    ``cells``:  (depth, width, dim) int8
+    ``scales``: (depth, n_blocks) float32 — the dequantization step of
+    one block of ``scale_block`` consecutive width buckets.  A scale of
+    0 marks an all-zero (never-written) block.
+
+    A NamedTuple so it rides pytrees (checkpoints, donation, eval_shape
+    accounting) exactly like the ``Rank1Moment`` precedent.
+    """
+
+    cells: jnp.ndarray
+    scales: jnp.ndarray
+
+
+def is_quantized(state) -> bool:
+    return isinstance(state, QuantState)
+
+
+def cell_dtype_name(dtype) -> str:
+    """Canonical name of a cell dtype; raises on unsupported dtypes."""
+    name = jnp.dtype(dtype).name
+    if name not in CELL_DTYPES:
+        raise ValueError(f"unsupported sketch cell dtype {name!r} "
+                         f"(expected one of {CELL_DTYPES})")
+    return name
+
+
+def n_blocks(width: int, scale_block: int = SCALE_BLOCK) -> int:
+    return -(-int(width) // int(scale_block))
+
+
+# ---------------------------------------------------------------------------
+# Randomness: threefry per step, counter-hash per cell
+# ---------------------------------------------------------------------------
+
+def step_seed(seed: int, step=None) -> jnp.ndarray:
+    """uint32 stochastic-rounding seed for one optimizer step.
+
+    Threefry-keyed: the sketch seed opens a PRNG key stream decorrelated
+    from the bucket/sign hashes, ``step`` (traced or static) folds in the
+    step counter.  ``step=None`` pins the step-0 stream (used by tests
+    and one-shot ops like ``fold``)."""
+    key = jax.random.PRNGKey(np.uint32(int(seed) ^ 0x51AB5EED))
+    if step is not None:
+        key = jax.random.fold_in(key, jnp.asarray(step, jnp.uint32))
+    return jax.random.bits(key, (), jnp.uint32)
+
+
+def cell_bits(seed_u32, lin: jnp.ndarray) -> jnp.ndarray:
+    """Per-cell uint32 rounding bits from a step seed and linear cell
+    indices — splitmix32 counter mode, identical in every backend."""
+    x = lin.astype(jnp.uint32) ^ jnp.asarray(seed_u32, jnp.uint32)
+    return _mix(_mix(x) + _GOLDEN)
+
+
+def _lin_index(shape, offset=0) -> jnp.ndarray:
+    """Linear cell indices for an array of ``shape`` (row-major), as
+    uint32.  ``offset`` shifts the whole range (e.g. a depth row's base
+    offset inside the full sketch)."""
+    n = int(np.prod(shape))
+    lin = jnp.arange(n, dtype=jnp.uint32).reshape(shape)
+    return lin + jnp.asarray(offset, jnp.uint32)
+
+
+def _uniform(bits: jnp.ndarray) -> jnp.ndarray:
+    """[0, 1) f32 from uint32 bits (top 24 bits — exact in f32)."""
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2 ** -24)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic rounding primitives
+# ---------------------------------------------------------------------------
+
+def sr_int8(v: jnp.ndarray, bits: jnp.ndarray) -> jnp.ndarray:
+    """Stochastically round pre-scaled values ``v = x / scale`` to int8.
+
+    ``floor(v + u)`` is exactly mean-unbiased and exact on integers; the
+    clip to ±127 saturates overflow (callers keep |v| ≤ 127 by scale
+    construction — saturation only bites on the held-scale tiled path)."""
+    q = jnp.floor(v + _uniform(bits))
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+
+
+def sr_bfloat16(x: jnp.ndarray, bits: jnp.ndarray) -> jnp.ndarray:
+    """Stochastically round f32 values to bf16 via the bit-pattern trick:
+    add the 16 random low bits, truncate the mantissa.  Exact (no carry)
+    when ``x`` is already bf16-representable."""
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    u = u + (bits & jnp.uint32(0xFFFF))
+    u = u & jnp.uint32(0xFFFF0000)
+    return jax.lax.bitcast_convert_type(u, jnp.float32).astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Block-scale layout
+# ---------------------------------------------------------------------------
+
+def block_scales(x: jnp.ndarray,
+                 scale_block: int = SCALE_BLOCK) -> jnp.ndarray:
+    """Fresh absmax scales for f32 sketch content ``x`` (depth, width,
+    dim) -> (depth, n_blocks).  All-zero blocks get scale 0."""
+    d, w, dim = x.shape
+    nb = n_blocks(w, scale_block)
+    pad = nb * scale_block - w
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    m = jnp.max(jnp.abs(x).reshape(d, nb, scale_block * dim), axis=-1)
+    return m * jnp.float32(1.0 / QMAX)
+
+
+def expand_scales(scales: jnp.ndarray, width: int,
+                  scale_block: int = SCALE_BLOCK) -> jnp.ndarray:
+    """(depth, n_blocks) -> (depth, width) per-bucket scales."""
+    wide = jnp.repeat(scales, scale_block, axis=1)
+    return wide[:, :width]
+
+
+def bucket_scales(scales: jnp.ndarray, buckets: jnp.ndarray,
+                  scale_block: int = SCALE_BLOCK) -> jnp.ndarray:
+    """Gather the scale of each bucket in a (depth, ...) bucket array."""
+    blocks = buckets // jnp.asarray(scale_block, buckets.dtype)
+    return jax.vmap(lambda sj, bj: sj[bj])(scales, blocks)
+
+
+# ---------------------------------------------------------------------------
+# Whole-sketch quantize / dequantize
+# ---------------------------------------------------------------------------
+
+def dequantize(state: QuantState,
+               scale_block: int = SCALE_BLOCK) -> jnp.ndarray:
+    """QuantState -> f32 (depth, width, dim).  Elementwise; XLA fuses it
+    into consumers so the f32 sketch is never a resident buffer."""
+    d, w, dim = state.cells.shape
+    s = expand_scales(state.scales, w, scale_block)
+    return state.cells.astype(jnp.float32) * s[:, :, None]
+
+
+def quantize(x: jnp.ndarray, seed_u32, *, scale_block: int = SCALE_BLOCK,
+             scales: Optional[jnp.ndarray] = None) -> QuantState:
+    """f32 sketch content -> QuantState with stochastic rounding.
+
+    ``scales=None`` computes fresh absmax block scales (the dense-path
+    per-step refresh); passing ``scales`` reuses held scales (the tiled
+    touched-rows path), saturating on overflow."""
+    d, w, dim = x.shape
+    if scales is None:
+        scales = block_scales(x, scale_block)
+    s = expand_scales(scales, w, scale_block)[:, :, None]
+    safe = jnp.where(s > 0, s, jnp.float32(1.0))
+    bits = cell_bits(seed_u32, _lin_index(x.shape))
+    cells = sr_int8(x / safe, bits)
+    cells = jnp.where(s > 0, cells, jnp.int8(0))
+    return QuantState(cells=cells, scales=scales)
+
+
+def grown_scales(scales: jnp.ndarray, x: jnp.ndarray,
+                 scale_block: int = SCALE_BLOCK) -> jnp.ndarray:
+    """Monotone scale growth: the held scales enlarged (never shrunk)
+    to fit post-update content ``x``.  Between cleanings scales only
+    grow, so untouched cells never need re-rounding; cleaning shrinks
+    them exactly (``scales · α`` — the decay folds into the read's
+    scale, paper §4 semantics at zero cell traffic)."""
+    return jnp.maximum(scales, block_scales(x, scale_block))

@@ -40,7 +40,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import quantize as qz
 from repro.core.hashing import HashFamily
+from repro.core.quantize import QuantState
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,10 +63,11 @@ class SketchSpec:
     dim: int
     signed: bool = True          # True: Count-Sketch (median); False: Count-Min (min)
     seed: int = 0
-    dtype: jnp.dtype = jnp.float32
+    dtype: jnp.dtype = jnp.float32   # cell storage dtype (f32 | bf16 | int8)
     identity: bool = False       # test mode: exact table when width >= n
     shards: int = 1              # width-axis partitions (1 = unsharded)
     layout: str = "width"        # 'width' | 'hash' (see HashFamily)
+    scale_block: int = qz.SCALE_BLOCK  # int8: buckets per f32 scale
 
     def __post_init__(self):
         if self.layout not in ("width", "hash"):
@@ -73,6 +76,25 @@ class SketchSpec:
         if self.shards < 1 or self.width % self.shards != 0:
             raise ValueError(f"sketch width {self.width} must divide into "
                              f"{self.shards} shards")
+        qz.cell_dtype_name(self.dtype)    # reject unsupported cell dtypes
+        if self.quantized and self.shards > 1:
+            raise ValueError(
+                "int8 sketch cells do not compose with model-parallel "
+                "sharding yet: a width slab would split scale blocks "
+                "across devices — use bfloat16 or float32 cells, or "
+                "shards=1 (DESIGN.md §18)")
+        if self.scale_block < 1:
+            raise ValueError(f"scale_block must be >= 1, "
+                             f"got {self.scale_block}")
+
+    @property
+    def quantized(self) -> bool:
+        """True when cells are int8 (state is a ``QuantState``)."""
+        return jnp.dtype(self.dtype) == jnp.int8
+
+    @property
+    def cell_dtype_name(self) -> str:
+        return qz.cell_dtype_name(self.dtype)
 
     @property
     def family(self) -> HashFamily:
@@ -96,9 +118,15 @@ class SketchSpec:
 
     def nbytes(self) -> int:
         """Exact byte footprint of ``init(self)`` — dtype-aware (a bf16
-        sketch is half an fp32 one), the ground truth the memory-budget
-        planner's accounting (``repro.plan.accounting``) must agree with."""
-        return self.depth * self.width * self.dim * jnp.dtype(self.dtype).itemsize
+        sketch is half an fp32 one; an int8 sketch adds its f32 scale
+        blocks), the ground truth the memory-budget planner's accounting
+        (``repro.plan.accounting``) must agree with."""
+        cells = self.depth * self.width * self.dim \
+            * jnp.dtype(self.dtype).itemsize
+        if self.quantized:
+            return cells + self.depth * qz.n_blocks(self.width,
+                                                    self.scale_block) * 4
+        return cells
 
     def shard_nbytes(self) -> int:
         """Per-device byte footprint when sharded: one slab."""
@@ -159,12 +187,37 @@ def for_budget(shape: Tuple[int, ...], nbytes: int, *, depth: int = 3,
             f"budget {int(nbytes)} B funds no {width_multiple}-bucket stripe "
             f"for shape {shape} at depth {depth} (needs ≥ {need} B)")
     w = min(w, -(-n // width_multiple) * width_multiple)
-    return SketchSpec(depth=depth, width=w, dim=d, signed=signed, seed=seed,
+    spec = SketchSpec(depth=depth, width=w, dim=d, signed=signed, seed=seed,
                       dtype=jnp.dtype(dtype), identity=identity)
+    # int8 carries f32 scale blocks on top of the cells; shave stripes
+    # until the EXACT footprint (nbytes()) fits the budget again
+    while spec.nbytes() > int(nbytes):
+        w -= width_multiple
+        if w < width_multiple:
+            raise ValueError(
+                f"budget {int(nbytes)} B funds no {width_multiple}-bucket "
+                f"stripe for shape {shape} at depth {depth} once the "
+                f"int8 scale blocks are accounted")
+        spec = dataclasses.replace(spec, width=w)
+    return spec
 
 
-def init(spec: SketchSpec) -> jnp.ndarray:
+def init(spec: SketchSpec):
+    """Zero state: a plain array for f32/bf16 cells, a ``QuantState``
+    (int8 cells + f32 block scales) for quantized specs."""
+    if spec.quantized:
+        return QuantState(
+            cells=jnp.zeros(spec.shape, dtype=jnp.int8),
+            scales=jnp.zeros((spec.depth,
+                              qz.n_blocks(spec.width, spec.scale_block)),
+                             dtype=jnp.float32))
     return jnp.zeros(spec.shape, dtype=spec.dtype)
+
+
+def sr_seed_or_default(spec: SketchSpec, sr_seed):
+    """The stochastic-rounding seed low-precision writes use: the caller's
+    per-step seed when given, else the spec's pinned step-0 stream."""
+    return sr_seed if sr_seed is not None else qz.step_seed(spec.seed)
 
 
 def median_rows(rows) -> jnp.ndarray:
@@ -187,51 +240,124 @@ def _median_depth(vals: jnp.ndarray) -> jnp.ndarray:
     return median_rows([vals[i] for i in range(vals.shape[0])])
 
 
-def query(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
-    """QUERY (paper Alg. 1): estimate rows ``ids`` -> (k, dim)."""
+def query(spec: SketchSpec, S, ids: jnp.ndarray) -> jnp.ndarray:
+    """QUERY (paper Alg. 1): estimate rows ``ids`` -> (k, dim).
+
+    Low-precision cells dequantize in the gather (int8 cells multiply
+    their block's scale; bf16 widens) and the estimator runs in f32 —
+    the f32 path is bit-identical to the historical query."""
     fam = spec.family
     b = fam.bucket(ids)                       # (depth, k)
-    gathered = jax.vmap(lambda Sj, bj: Sj[bj])(S, b)     # (depth, k, dim)
+    if spec.quantized:
+        cells = jax.vmap(lambda Sj, bj: Sj[bj])(S.cells, b)  # (d, k, dim)
+        sc = qz.bucket_scales(S.scales, b, spec.scale_block)  # (d, k)
+        gathered = cells.astype(jnp.float32) * sc[..., None]
+        if not spec.signed:
+            # Unsigned estimates floor at the quantizer's resolution:
+            # a cell only resolves values to ±scale/2, so a read below
+            # that is indistinguishable from zero — and an adaptive
+            # denominator (Adam's sqrt(v)) built on it would collapse
+            # for rows whose block absmax dwarfs their own moment.
+            # Never-written blocks keep scale 0, so exact zeros survive.
+            gathered = jnp.maximum(gathered, 0.5 * sc[..., None])
+    else:
+        gathered = jax.vmap(lambda Sj, bj: Sj[bj])(S, b)     # (depth, k, dim)
+        if gathered.dtype != jnp.float32:
+            gathered = gathered.astype(jnp.float32)
     if spec.signed:
         s = fam.sign(ids)                     # (depth, k)
-        gathered = gathered * s[..., None].astype(S.dtype)
+        gathered = gathered * s[..., None].astype(gathered.dtype)
         return _median_depth(gathered)
     return jnp.min(gathered, axis=0)
 
 
-def update(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
-           delta: jnp.ndarray) -> jnp.ndarray:
+def _scatter_upd(spec: SketchSpec, ids: jnp.ndarray, delta: jnp.ndarray,
+                 dtype) -> jnp.ndarray:
+    """(depth, k, dim) per-row scatter payload: signed or broadcast."""
+    if spec.signed:
+        s = spec.family.sign(ids)                         # (depth, k)
+        return s[..., None].astype(dtype) * delta[None].astype(dtype)
+    return jnp.broadcast_to(delta[None].astype(dtype),
+                            (spec.depth,) + delta.shape)
+
+
+def _update_quant(spec: SketchSpec, S: QuantState, ids: jnp.ndarray,
+                  delta: jnp.ndarray, sr_seed) -> QuantState:
+    """int8 UPDATE: dequantize, scatter-add in f32, stochastically
+    re-round the touched cells.  Scales grow monotonically (never shrink
+    between cleanings), so untouched cells in unchanged blocks keep their
+    exact int8 value — no re-rounding random walk.  When a block's scale
+    grows, the whole block re-rounds once at the new scale."""
+    d, w, dim = spec.shape
+    fam = spec.family
+    b = fam.bucket(ids)
+    upd = _scatter_upd(spec, ids, delta, jnp.float32)
+    est = qz.dequantize(S, spec.scale_block)
+    new = jax.vmap(lambda Ej, bj, uj: Ej.at[bj].add(uj))(est, b, upd)
+    touched = jax.vmap(
+        lambda bj: jnp.zeros((w,), jnp.bool_).at[bj].set(True))(b)
+    scales = qz.grown_scales(S.scales, new, spec.scale_block)
+    grew = qz.expand_scales(scales > S.scales, w, spec.scale_block)
+    need = (touched | grew)[:, :, None]
+    s = qz.expand_scales(scales, w, spec.scale_block)[:, :, None]
+    safe = jnp.where(s > 0, s, jnp.float32(1.0))
+    bits = qz.cell_bits(sr_seed, qz._lin_index(spec.shape))
+    q = qz.sr_int8(new / safe, bits)
+    q = jnp.where(s > 0, q, jnp.int8(0))
+    return QuantState(cells=jnp.where(need, q, S.cells), scales=scales)
+
+
+def update(spec: SketchSpec, S, ids: jnp.ndarray, delta: jnp.ndarray,
+           sr_seed=None):
     """UPDATE (paper Alg. 1): add ``delta`` (k, dim) at rows ``ids``.
 
-    Batch-colliding ids accumulate correctly (scatter-add)."""
+    Batch-colliding ids accumulate correctly (scatter-add).  Writes to
+    low-precision cells go through stochastic rounding keyed by
+    ``sr_seed`` (``quantize.step_seed`` — pass the per-step seed on the
+    hot path; None pins the step-0 stream).  bf16 accumulates in f32 and
+    re-rounds; untouched bf16 cells are exactly preserved (truncation of
+    a representable value cannot carry)."""
+    if spec.quantized:
+        return _update_quant(spec, S, ids, delta,
+                             sr_seed_or_default(spec, sr_seed))
     fam = spec.family
     b = fam.bucket(ids)                                   # (depth, k)
-    if spec.signed:
-        s = fam.sign(ids)                                 # (depth, k)
-        upd = s[..., None].astype(S.dtype) * delta[None].astype(S.dtype)
-    else:
-        upd = jnp.broadcast_to(delta[None].astype(S.dtype),
-                               (spec.depth,) + delta.shape)
+    if S.dtype == jnp.bfloat16:
+        upd = _scatter_upd(spec, ids, delta, jnp.float32)
+        inc = jax.vmap(
+            lambda bj, uj: jnp.zeros((spec.width, spec.dim),
+                                     jnp.float32).at[bj].add(uj))(b, upd)
+        bits = qz.cell_bits(sr_seed_or_default(spec, sr_seed),
+                            qz._lin_index(spec.shape))
+        return qz.sr_bfloat16(S.astype(jnp.float32) + inc, bits)
+    upd = _scatter_upd(spec, ids, delta, S.dtype)
     return jax.vmap(lambda Sj, bj, uj: Sj.at[bj].add(uj))(S, b, upd)
 
 
-def update_and_query(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
-                     delta: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def update_and_query(spec: SketchSpec, S, ids: jnp.ndarray,
+                     delta: jnp.ndarray, sr_seed=None):
     """Canonical batched step: returns (S', est_new).  See module docstring."""
     est_old = query(spec, S, ids)
-    S = update(spec, S, ids, delta)
+    S = update(spec, S, ids, delta, sr_seed=sr_seed)
     return S, est_old + delta
 
 
-def query_after_update(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
-                       delta: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def query_after_update(spec: SketchSpec, S, ids: jnp.ndarray,
+                       delta: jnp.ndarray, sr_seed=None):
     """Strict paper semantics (3 sketch passes): update then re-gather."""
-    S = update(spec, S, ids, delta)
+    S = update(spec, S, ids, delta, sr_seed=sr_seed)
     return S, query(spec, S, ids)
 
 
-def decay(S: jnp.ndarray, alpha) -> jnp.ndarray:
-    """Cleaning heuristic (paper §4): multiply the sketch by ``alpha``."""
+def decay(S, alpha):
+    """Cleaning heuristic (paper §4): multiply the sketch by ``alpha``.
+
+    int8 state decays EXACTLY by folding ``alpha`` into the block scales
+    — an O(depth · n_blocks) multiply that never touches a cell, which
+    is what makes async cleaning's pending-decay fold free."""
+    if isinstance(S, QuantState):
+        return QuantState(cells=S.cells,
+                          scales=S.scales * jnp.float32(alpha))
     return S * jnp.asarray(alpha, dtype=S.dtype)
 
 
@@ -277,17 +403,28 @@ def _slab_buckets(spec: SketchSpec, ids: jnp.ndarray, shard):
 
 
 def update_slab(spec: SketchSpec, slab: jnp.ndarray, ids: jnp.ndarray,
-                delta: jnp.ndarray, shard) -> jnp.ndarray:
+                delta: jnp.ndarray, shard, sr_seed=None) -> jnp.ndarray:
     """Shard-local UPDATE: scatter-add the slab-owned portion of ``delta``
     at ``ids``; rows hashing outside the slab are dropped (they belong to
-    another shard).  ``shard`` may be a traced scalar (lax.axis_index)."""
+    another shard).  ``shard`` may be a traced scalar (lax.axis_index).
+    bf16 slabs accumulate in f32 and stochastically re-round (untouched
+    cells preserved exactly — representable truncation cannot carry)."""
     local, _ = _slab_buckets(spec, ids, shard)
+    work = jnp.float32 if slab.dtype == jnp.bfloat16 else slab.dtype
     if spec.signed:
-        upd = spec.family.sign(ids)[..., None].astype(slab.dtype) \
-            * delta[None].astype(slab.dtype)
+        upd = spec.family.sign(ids)[..., None].astype(work) \
+            * delta[None].astype(work)
     else:
-        upd = jnp.broadcast_to(delta[None].astype(slab.dtype),
+        upd = jnp.broadcast_to(delta[None].astype(work),
                                (spec.depth,) + delta.shape)
+    if slab.dtype == jnp.bfloat16:
+        inc = jax.vmap(
+            lambda bj, uj: jnp.zeros((spec.local_width, spec.dim),
+                                     jnp.float32)
+            .at[bj].add(uj, mode="drop"))(local, upd)
+        bits = qz.cell_bits(sr_seed_or_default(spec, sr_seed),
+                            qz._lin_index(slab.shape))
+        return qz.sr_bfloat16(slab.astype(jnp.float32) + inc, bits)
     return jax.vmap(lambda Sj, bj, uj: Sj.at[bj].add(uj, mode="drop"))(
         slab, local, upd)
 
@@ -359,17 +496,33 @@ def fold(spec: SketchSpec, S: jnp.ndarray) -> Tuple[SketchSpec, jnp.ndarray]:
     full-array restore path handles for free."""
     if spec.width % 2 != 0:
         raise ValueError("fold requires an even width")
+    if spec.quantized:
+        # dequantize-add-requantize: the folded content gets fresh absmax
+        # scales and one stochastic re-round (seeded from the spec — the
+        # fold is a one-shot op, not a per-step write)
+        half = spec.width // 2
+        dense = qz.dequantize(S, spec.scale_block)
+        folded = dense[:, :half] + dense[:, half:]
+        return spec.fold(), qz.quantize(folded, qz.step_seed(spec.seed),
+                                        scale_block=spec.scale_block)
+    # bf16 folds exactly in f32 and re-rounds once stochastically
+    dense = S.astype(jnp.float32) if S.dtype == jnp.bfloat16 else S
     if spec.layout == "hash" and spec.shards > 1 and not spec.identity:
         lw = spec.local_width
         if lw % 2 != 0:
             raise ValueError(f"hash-layout fold needs an even local width, "
                              f"got {lw}")
-        ranged = S.reshape(spec.depth, spec.shards, lw, spec.dim)
+        ranged = dense.reshape(spec.depth, spec.shards, lw, spec.dim)
         folded = ranged[:, :, :lw // 2] + ranged[:, :, lw // 2:]
-        return spec.fold(), folded.reshape(spec.depth, spec.width // 2,
-                                           spec.dim)
-    half = spec.width // 2
-    return spec.fold(), S[:, :half] + S[:, half:]
+        folded = folded.reshape(spec.depth, spec.width // 2, spec.dim)
+    else:
+        half = spec.width // 2
+        folded = dense[:, :half] + dense[:, half:]
+    if S.dtype == jnp.bfloat16:
+        bits = qz.cell_bits(qz.step_seed(spec.seed),
+                            qz._lin_index(folded.shape))
+        return spec.fold(), qz.sr_bfloat16(folded, bits)
+    return spec.fold(), folded
 
 
 # ---------------------------------------------------------------------------

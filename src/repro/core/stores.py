@@ -58,6 +58,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import quantize as qz
 from repro.core import sketch as cs
 from repro.core.cleaning import CleaningSchedule, maybe_clean
 from repro.core.sketch import SketchSpec
@@ -115,7 +116,7 @@ class AuxStore:
 
     def update_read(self, state, delta, beta: float = 1.0, *,
                     scale: Optional[float] = None, rows=None, mask=None,
-                    read_state=None, strict: bool = False):
+                    read_state=None, strict: bool = False, step=None):
         """Fused EMA step: move row content to ``β·content + scale·delta``
         (``scale`` defaults to ``1−β``) and return ``(state', estimate)``
         in one pass — the hot-path op the transforms are built on
@@ -126,7 +127,9 @@ class AuxStore:
         ``_SketchStoreBase`` overrides it with the paper's linear-
         estimate form and optional fused kernel backends.  ``mask``
         (rows×1, 0/1) gates the increment (lazy rows); ``read_state``/
-        ``strict`` only apply to sketch-backed stores."""
+        ``strict`` only apply to sketch-backed stores.  ``step`` keys
+        the stochastic-rounding bit stream of low-precision sketch
+        cells (DESIGN.md §18) — exact stores ignore it."""
         if scale is None:
             scale = 1.0 - beta
         if mask is not None:
@@ -287,6 +290,15 @@ class _SketchStoreBase(AuxStore):
     def init(self):
         return cs.init(self.spec)
 
+    @property
+    def cell_dtype_name(self) -> str:
+        """Canonical cell-storage dtype name ('float32' | 'bfloat16' |
+        'int8') — from the bound spec when present, else the factory
+        field."""
+        if self.spec is not None:
+            return self.spec.cell_dtype_name
+        return qz.cell_dtype_name(self.dtype)
+
     def accumulate(self, state, delta, rows=None, *, scale: float = 1.0):
         if scale != 1.0:
             delta = scale * delta
@@ -298,9 +310,17 @@ class _SketchStoreBase(AuxStore):
     def read(self, state, rows=None):
         return cs.query(self.spec, state, self._rows(rows))
 
+    def _sr_seed(self, step):
+        """Per-step stochastic-rounding seed for low-precision cells;
+        None for f32 (keeps the f32 graph free of PRNG ops).  A None
+        ``step`` pins the step-0 stream (one-shot callers, tests)."""
+        if jnp.dtype(self.spec.dtype) == jnp.float32:
+            return None
+        return qz.step_seed(self.spec.seed, step)
+
     def update_read(self, state, delta, beta: float = 1.0, *,
                     scale: Optional[float] = None, rows=None, mask=None,
-                    read_state=None, strict: bool = False):
+                    read_state=None, strict: bool = False, step=None):
         """Fused EMA step in the paper's linear-estimate form:
 
             est_old = query(read_state or state, rows)
@@ -313,21 +333,24 @@ class _SketchStoreBase(AuxStore):
         fused kernel through the registry — ``repro.kernels.update_read``.
         ``read_state`` lets the transforms' chunked scan keep canonical
         batch semantics (estimates off the pre-step sketch) while
-        accumulating into the carry."""
+        accumulating into the carry.  ``step`` keys the per-step SR bit
+        stream of bf16/int8 cells (DESIGN.md §18)."""
         if scale is None:
             scale = 1.0 - beta
+        sr = self._sr_seed(step)
         if self.backend is not None and read_state is None and not strict:
             from repro import kernels  # deferred: kernels import jax deps
             return kernels.update_read(self.spec, state, self._rows(rows),
                                        delta, beta=beta, scale=scale,
-                                       mask=mask, backend=self.backend)
+                                       mask=mask, backend=self.backend,
+                                       sr_seed=sr)
         ids = self._rows(rows)
         src = state if read_state is None else read_state
         est_old = cs.query(self.spec, src, ids)
         d = cs.ema_delta(est_old, delta, beta, scale)
         if mask is not None:
             d = d * mask
-        state = cs.update(self.spec, state, ids, d)
+        state = cs.update(self.spec, state, ids, d, sr_seed=sr)
         if strict:
             return state, cs.query(self.spec, state, ids)
         return state, est_old + d
@@ -371,17 +394,35 @@ class _SketchStoreBase(AuxStore):
         fractions, ``mass`` is scaled back up by the stride, and
         ``max_cell`` is the sampled max (a lower bound on the true max).
         Hash buckets are uniform by construction, so a strided slice is
-        an unbiased cell sample."""
-        flat = state.reshape(-1).astype(jnp.float32)
-        stride = max(int(flat.size) // self.STATS_SAMPLE_CELLS, 1)
-        f = flat[::stride]
+        an unbiased cell sample.
+
+        int8 cells (``QuantState``) dequantize only the SAMPLED cells —
+        the gauges see the same values the estimator reads, without ever
+        materializing the f32 sketch — and add ``quant_scale_max`` (the
+        largest live block scale: the saturation headroom gauge of the
+        quantized layout, DESIGN.md §18)."""
+        out: Dict[str, Any] = {}
+        if isinstance(state, qz.QuantState):
+            spec = self.spec
+            cells = state.cells.reshape(-1)
+            stride = max(int(cells.size) // self.STATS_SAMPLE_CELLS, 1)
+            idx = jnp.arange(0, int(cells.size), stride)
+            col = (idx // spec.dim) % spec.width
+            row = idx // (spec.dim * spec.width)
+            s = state.scales[row, col // spec.scale_block]
+            f = cells[idx].astype(jnp.float32) * s
+            out["quant_scale_max"] = jnp.max(state.scales)
+        else:
+            flat = state.reshape(-1).astype(jnp.float32)
+            stride = max(int(flat.size) // self.STATS_SAMPLE_CELLS, 1)
+            f = flat[::stride]
         absmass = jnp.sum(jnp.abs(f))
-        out = {
+        out.update({
             "occupancy": jnp.mean((f != 0.0).astype(jnp.float32)),
             "mass": absmass * stride,
             "max_cell": jnp.max(jnp.abs(f)),
             "sign_cancel": 1.0 - jnp.abs(jnp.sum(f)) / (absmass + 1e-30),
-        }
+        })
         spec = self.spec
         if spec is not None and spec.shards > 1:
             # per-shard occupancy extremes — scalar gauges so they ride
@@ -423,14 +464,22 @@ class CountMinStore(_SketchStoreBase):
         with jax.named_scope("obs.clean"):
             return maybe_clean(self.cleaning, state, step)
 
-    def stats(self, state) -> Dict[str, Any]:
+    def stats(self, state, clean_pending: bool = False) -> Dict[str, Any]:
+        """``clean_pending=True`` reports the async path's in-flight swap:
+        the projected next-clean removal is already dispatched, so the
+        gauge reports 0 instead of a stale projection (the mass it would
+        quote is about to leave regardless — double-counting it would
+        make the telemetry's removed-mass ledger drift)."""
         out = super().stats(state)
         if self.cleaning is not None:
             # mass the NEXT clean will remove: cleaning multiplies the
             # sketch by alpha, so (1−alpha)·Σ|S| leaves when it fires —
             # the per-clean "mass removed" gauge of the telemetry
-            out["clean_next_removes"] = ((1.0 - self.cleaning.alpha)
-                                         * out["mass"])
+            if clean_pending:
+                out["clean_next_removes"] = jnp.zeros((), jnp.float32)
+            else:
+                out["clean_next_removes"] = ((1.0 - self.cleaning.alpha)
+                                             * out["mass"])
         return out
 
     def cleans_between(self, start_step: int, end_step: int) -> int:
@@ -685,6 +734,8 @@ def spec_to_json(spec: SketchSpec) -> Dict[str, Any]:
     if spec.shards != 1 or spec.layout != "width":
         out["shards"] = int(spec.shards)
         out["layout"] = spec.layout
+    if spec.scale_block != qz.SCALE_BLOCK:
+        out["scale_block"] = int(spec.scale_block)
     return out
 
 
@@ -694,7 +745,8 @@ def spec_from_json(d: Dict[str, Any]) -> SketchSpec:
                       seed=int(d["seed"]), dtype=jnp.dtype(d["dtype"]),
                       identity=bool(d["identity"]),
                       shards=int(d.get("shards", 1)),
-                      layout=d.get("layout", "width"))
+                      layout=d.get("layout", "width"),
+                      scale_block=int(d.get("scale_block", qz.SCALE_BLOCK)))
 
 
 def store_to_json(store: Optional[AuxStore]) -> Optional[Dict[str, Any]]:
@@ -725,6 +777,10 @@ def store_to_json(store: Optional[AuxStore]) -> Optional[Dict[str, Any]]:
         if isinstance(store, CountMinStore) and store.cleaning is not None:
             out["cleaning"] = {"alpha": store.cleaning.alpha,
                                "every": store.cleaning.every}
+            # mode only when non-default: sync stores serialize
+            # byte-identically to pre-§18 manifests
+            if store.cleaning.mode != "sync":
+                out["cleaning"]["mode"] = store.cleaning.mode
         return out
     if isinstance(store, Rank1Store):
         if store.shape is not None:
@@ -757,7 +813,8 @@ def store_from_json(d: Optional[Dict[str, Any]]) -> Optional[AuxStore]:
         if kind == "countmin" and d.get("cleaning") is not None:
             kw["cleaning"] = CleaningSchedule(
                 alpha=float(d["cleaning"]["alpha"]),
-                every=int(d["cleaning"]["every"]))
+                every=int(d["cleaning"]["every"]),
+                mode=d["cleaning"].get("mode", "sync"))
         return cls(**kw)
     if kind == "rank1":
         return Rank1Store(shape=shape)

@@ -66,10 +66,13 @@ def tree_map_with_path(fn, tree, *rest):
 
 
 def _flatten_moments(tree):
-    """Flatten a moment tree keeping ``None`` and ``Rank1Moment`` as
-    leaves (both are single store states, not containers)."""
+    """Flatten a moment tree keeping ``None``, ``Rank1Moment`` and
+    ``QuantState`` as leaves (all are single store states, not
+    containers)."""
+    from repro.core.quantize import QuantState
     flat, treedef = jax.tree_util.tree_flatten_with_path(
-        tree, is_leaf=lambda x: x is None or isinstance(x, Rank1Moment))
+        tree, is_leaf=lambda x: x is None
+        or isinstance(x, (Rank1Moment, QuantState)))
     return [leaf for _, leaf in flat], treedef
 
 
@@ -244,20 +247,22 @@ def scale_by_momentum(gamma: float = 0.9, *,
                 # one fused kernel over the whole table (DESIGN.md §14)
                 act = _row_active(g) if lazy else 1.0
                 M_out, m_est = ms.update_read(M, g, gamma, scale=1.0,
-                                              mask=act if lazy else None)
+                                              mask=act if lazy else None,
+                                              step=step)
                 return M_out, act * m_est
             if dense_chunk and not strict_paper:
                 def chunk_step(carry, ids, gc):
                     act = _row_active(gc) if lazy else 1.0
                     carry, m_est = ms.update_read(
                         carry, gc, gamma, scale=1.0, rows=ids,
-                        mask=act if lazy else None, read_state=M)
+                        mask=act if lazy else None, read_state=M,
+                        step=step)
                     return carry, act * m_est
                 return _sketched_rows_scan(g, M, chunk_step, dense_chunk)
             act = _row_active(g) if lazy else 1.0
             M_out, m_est = ms.update_read(M, g, gamma, scale=1.0,
                                           mask=act if lazy else None,
-                                          strict=strict_paper)
+                                          strict=strict_paper, step=step)
             return M_out, act * m_est
 
         pairs = tree_map_with_path(leaf, grads, state["m"])
@@ -311,19 +316,20 @@ def scale_by_adagrad(eps: float = 1e-10, *,
             V_in = vs.clean(V, step)
             if _fused(vs) and not strict_paper:
                 # one fused kernel over the whole table (DESIGN.md §14)
-                V_out, v_est = vs.update_read(V_in, g * g, 1.0, scale=1.0)
+                V_out, v_est = vs.update_read(V_in, g * g, 1.0,
+                                              scale=1.0, step=step)
                 v_new = jnp.maximum(v_est, 0.0)
                 return V_out, g / (jnp.sqrt(v_new) + eps)
             if dense_chunk and not strict_paper:
                 def chunk_step(carry, ids, gc):
                     carry, v_est = vs.update_read(carry, gc * gc, 1.0,
                                                   scale=1.0, rows=ids,
-                                                  read_state=V_in)
+                                                  read_state=V_in, step=step)
                     v_new = jnp.maximum(v_est, 0.0)
                     return carry, gc / (jnp.sqrt(v_new) + eps)
                 return _sketched_rows_scan(g, V_in, chunk_step, dense_chunk)
             V_out, v_est = vs.update_read(V_in, g * g, 1.0, scale=1.0,
-                                          strict=strict_paper)
+                                          strict=strict_paper, step=step)
             v_new = jnp.maximum(v_est, 0.0)
             return V_out, g / (jnp.sqrt(v_new) + eps)
 
@@ -449,13 +455,15 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
                 act = _row_active(g) if lazy else 1.0
                 mask = act if lazy else None
                 if sketched_m:
-                    M_out, m_est = ms.update_read(M, g, b1, mask=mask)
+                    M_out, m_est = ms.update_read(M, g, b1, mask=mask,
+                                                  step=step)
                     mhat = m_est / bc1
                 elif ms is not None:
                     mhat = mhat_rows
                 else:
                     mhat = g
-                V_out, v_est = vs.update_read(V_in, g * g, b2, mask=mask)
+                V_out, v_est = vs.update_read(V_in, g * g, b2, mask=mask,
+                                              step=step)
                 vh = jnp.maximum(v_est, 0.0) / bc2
                 return M_out, V_out, act * mhat / (jnp.sqrt(vh) + eps)
 
@@ -470,7 +478,7 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
                     if sketched_m:
                         carry["M"], m_est = ms.update_read(
                             carry["M"], gc, b1, rows=ids, mask=mask,
-                            read_state=M)
+                            read_state=M, step=step)
                         mh = m_est / bc1
                     elif ms is not None:
                         mh = mh_c[0]
@@ -478,7 +486,7 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
                         mh = gc
                     carry["V"], v_est = vs.update_read(
                         carry["V"], gc * gc, b2, rows=ids, mask=mask,
-                        read_state=V_in)
+                        read_state=V_in, step=step)
                     vh = jnp.maximum(v_est, 0.0) / bc2
                     return carry, act * mh / (jnp.sqrt(vh) + eps)
 
@@ -496,14 +504,14 @@ def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, *,
             mask = act if lazy else None
             if sketched_m:
                 M_out, m_est = ms.update_read(M, g, b1, mask=mask,
-                                              strict=strict_paper)
+                                              strict=strict_paper, step=step)
                 mhat = m_est / bc1
             elif ms is not None:
                 mhat = mhat_rows
             else:
                 mhat = g
             V_out, v_est = vs.update_read(V_in, g * g, b2, mask=mask,
-                                          strict=strict_paper)
+                                          strict=strict_paper, step=step)
             v_new = jnp.maximum(v_est, 0.0)
             upd = act * mhat / (jnp.sqrt(v_new / bc2) + eps)
             return M_out, V_out, upd

@@ -330,6 +330,15 @@ def opt_specs_for_state(state_shape, params_shape, mesh: Mesh, *,
         # Rank1Moment factors flatten with a trailing attribute key
         if rest and rest[-1].lstrip(".") in ("r", "c") and x.ndim == 1:
             return P()                           # rank-1 factors replicate
+        # QuantState (int8 cells) flattens the same way: '.cells' IS the
+        # (depth, width, dim) sketch tensor — classify it under its
+        # param path like the f32 array it replaces; '.scales' is the
+        # small per-(depth, block) sidecar and replicates (every width
+        # shard needs its blocks' scales)
+        if rest and rest[-1].lstrip(".") == "scales" and x.ndim == 2:
+            return P()
+        if rest and rest[-1].lstrip(".") == "cells" and x.ndim == 3:
+            rest = rest[:-1]
         sub = "/".join(rest)
         pshape = param_shapes.get(sub)
         if pshape == shape:

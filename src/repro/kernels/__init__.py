@@ -107,16 +107,23 @@ def adam_rows(spec_m, spec_v, M, V, ids, g, step, *,
 
 
 def update_read(spec, S, ids, delta, *, beta: float, scale: float,
-                mask=None, backend: Optional[str] = None):
+                mask=None, backend: Optional[str] = None, sr_seed=None):
     """One fused EMA step on one sketch tensor: ``(S', est)`` such that
     row content moves to ``β·content + scale·delta`` at ``ids`` and
     ``est`` is the post-step estimate (batch semantics) — the kernel half
     of ``AuxStore.update_read`` (DESIGN.md §14).  Dispatches on the
     store kind ('sketch' for signed specs, 'countmin' otherwise) through
-    the registry."""
+    the registry.
+
+    ``sr_seed`` (uint32, from ``quantize.step_seed(spec.seed, step)``)
+    keys the stochastic-rounding bits for low-precision cells; f32
+    sketches ignore it.  None pins the step-0 stream — callers in a
+    training loop MUST thread the step so successive writes draw fresh
+    rounding bits (DESIGN.md §18)."""
     kind = "sketch" if spec.signed else "countmin"
     fn = registry.lookup(kind, "update_read", backend)
-    return fn(spec, S, ids, delta, beta=beta, scale=scale, mask=mask)
+    return fn(spec, S, ids, delta, beta=beta, scale=scale, mask=mask,
+              sr_seed=sr_seed)
 
 
 def update_slab(spec, slab, ids, delta, shard, *,

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.core import quantize as qz
 from repro.core.sketch import ema_delta, median_rows
 
 DEFAULT_TILE = 8
@@ -59,14 +60,19 @@ def _eq_matrix(bkt):
 
 
 def _ema_kernel(depth: int, tile: int, signed: bool,
-                beta: float, scale: float,
+                beta: float, scale: float, width: int, bf16: bool,
                 b_ref, s_ref, nv_ref,     # scalar prefetch (SMEM)
                 x_blk, mask_blk,          # VMEM input tiles
                 S_any,                    # sketch, pl.ANY (HBM)
                 S_out, est_out,           # aliased out + estimate tile
-                scr, sem):                # scratch VMEM + DMA sem
+                scr, *rest):              # scratch VMEM (+ bf16) + DMA sem
+    if bf16:
+        bscr, sem = rest                  # bf16 staging rows + semaphore
+    else:
+        (sem,) = rest
     t = pl.program_id(0)
     base = t * tile
+    stage = bscr if bf16 else scr
 
     # ---- DMA in all depth×tile sketch rows, one overlapped burst ---------
     copies = []
@@ -74,9 +80,12 @@ def _ema_kernel(depth: int, tile: int, signed: bool,
         for r in range(tile):
             copies.append(pltpu.async_copy(
                 S_out.at[j, pl.ds(b_ref[j, base + r], 1), :],
-                scr.at[j, pl.ds(r, 1)], sem))
+                stage.at[j, pl.ds(r, 1)], sem))
     for c in copies:
         c.wait()
+    if bf16:
+        for j in range(depth):
+            scr[j] = bscr[j].astype(jnp.float32)
 
     x = x_blk[:, :]                                          # (tile, d)
     row_pos = base + jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0)
@@ -103,12 +112,26 @@ def _ema_kernel(depth: int, tile: int, signed: bool,
 
     est_out[:, :] = (est_old + d).astype(est_out.dtype)
 
+    if bf16:
+        # stochastic re-round with the SAME counter-hash bits the xla
+        # path derives from the cell's linear index, so touched rows
+        # match ema_update_read_xla bit-for-bit (DESIGN.md §18).
+        # Duplicate buckets share a lin index → identical rounded rows.
+        dim = x.shape[1]
+        seed = nv_ref[1].astype(jnp.uint32)
+        col = jax.lax.broadcasted_iota(jnp.uint32, (tile, dim), 1)
+        for j in range(depth):
+            bkt = _tile_vec(b_ref, j, base, tile).astype(jnp.uint32)
+            lin = (jnp.uint32(j * width) + bkt[:, None]) \
+                * jnp.uint32(dim) + col
+            bscr[j] = qz.sr_bfloat16(scr[j], qz.cell_bits(seed, lin))
+
     # ---- DMA back (duplicate buckets write identical accumulated rows) ---
     copies = []
     for j in range(depth):
         for r in range(tile):
             copies.append(pltpu.async_copy(
-                scr.at[j, pl.ds(r, 1)],
+                stage.at[j, pl.ds(r, 1)],
                 S_out.at[j, pl.ds(b_ref[j, base + r], 1), :], sem))
     for c in copies:
         c.wait()
@@ -117,12 +140,12 @@ def _ema_kernel(depth: int, tile: int, signed: bool,
 def cs_ema_tiled(S: jnp.ndarray, b: jnp.ndarray, s, x: jnp.ndarray,
                  mask: jnp.ndarray, *, beta: float, scale: float,
                  n_valid=None, tile: int = DEFAULT_TILE,
-                 interpret: bool = False
+                 interpret: bool = False, sr_seed=None
                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused EMA update_read over ``k`` rows of one (depth, width, dim)
     sketch.
 
-    S           (depth, width, dim) sketch tensor (float32)
+    S           (depth, width, dim) sketch tensor (float32 or bfloat16)
     b           (depth, k) int32 bucket addresses
     s           (depth, k) float32 signs, or None for count-min
     x           (k, dim) input rows (gradient or g², float32)
@@ -130,6 +153,11 @@ def cs_ema_tiled(S: jnp.ndarray, b: jnp.ndarray, s, x: jnp.ndarray,
     n_valid     rows at positions >= n_valid are padding (zero writes,
                 zero estimates).  Defaults to k.
     tile        rows per grid step; k must be a multiple.
+    sr_seed     uint32 stochastic-rounding seed — required for bf16
+                sketches (rows DMA as bf16, accumulate in f32 VMEM, and
+                write back through ``quantize.sr_bfloat16``; padding
+                rows round to their exact original value, so they stay
+                untouched).  Ignored for f32.
 
     Returns ``(S', est)`` with ``est[k, dim]`` = est_old + Δ (batch
     semantics within a tile, streaming across tiles).
@@ -138,13 +166,26 @@ def cs_ema_tiled(S: jnp.ndarray, b: jnp.ndarray, s, x: jnp.ndarray,
     k = x.shape[0]
     if k % tile != 0:
         raise ValueError(f"k={k} must be a multiple of tile={tile}")
+    bf16 = S.dtype == jnp.bfloat16
+    if bf16 and sr_seed is None:
+        raise ValueError("bf16 cs_ema_tiled needs an sr_seed "
+                         "(quantize.step_seed)")
     signed = s is not None
     s_in = s.astype(jnp.float32) if signed else jnp.ones_like(b, jnp.float32)
     nv = jnp.asarray(k if n_valid is None else n_valid,
                      jnp.int32).reshape((1,))
+    if bf16:
+        # the seed rides the int32 scalar-prefetch row (bit pattern)
+        nv = jnp.concatenate(
+            [nv, jnp.asarray(sr_seed, jnp.uint32).astype(jnp.int32)
+                 .reshape((1,))])
 
+    scratch = [pltpu.VMEM((depth, tile, dim), jnp.float32)]
+    if bf16:
+        scratch.append(pltpu.VMEM((depth, tile, dim), jnp.bfloat16))
+    scratch.append(pltpu.SemaphoreType.DMA)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,      # b, s, n_valid
+        num_scalar_prefetch=3,      # b, s, (n_valid, seed?)
         grid=(k // tile,),
         in_specs=[
             pl.BlockSpec((tile, dim), lambda t, *_: (t, 0)),  # x tile
@@ -155,14 +196,11 @@ def cs_ema_tiled(S: jnp.ndarray, b: jnp.ndarray, s, x: jnp.ndarray,
             pl.BlockSpec(memory_space=pl.ANY),                # S'
             pl.BlockSpec((tile, dim), lambda t, *_: (t, 0)),  # est tile
         ],
-        scratch_shapes=[
-            pltpu.VMEM((depth, tile, dim), jnp.float32),
-            pltpu.SemaphoreType.DMA,
-        ],
+        scratch_shapes=scratch,
     )
     fn = pl.pallas_call(
         functools.partial(_ema_kernel, depth, tile, signed,
-                          float(beta), float(scale)),
+                          float(beta), float(scale), w, bf16),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct(S.shape, S.dtype),

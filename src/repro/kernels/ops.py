@@ -13,6 +13,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import quantize as qz
 from repro.core import sketch as cs
 from repro.core.sketch import SketchSpec
 from repro.kernels import dedup as dd
@@ -28,6 +29,11 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _lowp(spec: SketchSpec) -> bool:
+    """True when the spec stores cells below f32 (bf16 or int8)."""
+    return jnp.dtype(spec.dtype) != jnp.float32
+
+
 def _addressing(spec: SketchSpec, ids: jnp.ndarray):
     fam = spec.family
     buckets = fam.bucket(ids)
@@ -38,6 +44,9 @@ def _addressing(spec: SketchSpec, ids: jnp.ndarray):
 def sketch_query(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray, *,
                  force: Optional[str] = None) -> jnp.ndarray:
     """QUERY rows ``ids``; Pallas gather kernel on TPU, jnp gather off-TPU."""
+    if _lowp(spec):
+        # low-precision cells: the core gather dequantizes in-register
+        return cs.query(spec, S, ids)
     buckets, signs = _addressing(spec, ids)
     if force == "pallas" or (force is None and _on_tpu()):
         return cs_query(S, buckets, signs, interpret=not _on_tpu())
@@ -48,6 +57,9 @@ def sketch_update(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
                   delta: jnp.ndarray, *,
                   force: Optional[str] = None) -> jnp.ndarray:
     """UPDATE rows ``ids`` with ``delta``; sorted-scatter kernel on TPU."""
+    if _lowp(spec):
+        # low-precision cells: stochastic-rounding write in the core
+        return cs.update(spec, S, ids, delta)
     buckets, signs = _addressing(spec, ids)
     if force == "pallas" or (force is None and _on_tpu()):
         return cs_update(S, buckets, signs, delta, interpret=not _on_tpu())
@@ -76,7 +88,14 @@ def adam_rows_ref(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
                   ids: jnp.ndarray, g: jnp.ndarray, step: jnp.ndarray, *,
                   lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
                   ) -> Tuple[Optional[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
-    """'ref' backend: pure-jnp ``lax.scan`` per-item oracle (paper Alg. 4)."""
+    """'ref' backend: pure-jnp ``lax.scan`` per-item oracle (paper Alg. 4).
+
+    Low-precision cells delegate to 'xla' — the per-item scan operates on
+    raw f32 sketch rows, and re-rounding after every row would compound
+    SR noise ``k`` times per step; the batch form rounds once."""
+    if _lowp(spec_v) or (spec_m is not None and _lowp(spec_m)):
+        return adam_rows_xla(spec_m, spec_v, M, V, ids, g, step, lr=lr,
+                             b1=b1, b2=b2, eps=eps)
     bm, sm, bv = _adam_addressing(spec_m, spec_v, ids)
     eta, bc1, bc2 = _adam_hypers(step, lr, b1, b2)
     return ref.adam_fused_ref(M, V, bm, sm, bv, g, lr=eta, b1=b1, b2=b2,
@@ -90,7 +109,11 @@ def adam_rows_stream(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
                      eps: float = 1e-8, interpret: Optional[bool] = None
                      ) -> Tuple[Optional[jnp.ndarray], jnp.ndarray, jnp.ndarray]:
     """'stream' backend: one-item-per-grid-step Pallas kernel — exact
-    per-item semantics, sequential over the batch."""
+    per-item semantics, sequential over the batch.  Low-precision cells
+    delegate to 'xla' (see ``adam_rows_ref``)."""
+    if _lowp(spec_v) or (spec_m is not None and _lowp(spec_m)):
+        return adam_rows_xla(spec_m, spec_v, M, V, ids, g, step, lr=lr,
+                             b1=b1, b2=b2, eps=eps)
     bm, sm, bv = _adam_addressing(spec_m, spec_v, ids)
     eta, bc1, bc2 = _adam_hypers(step, lr, b1, b2)
     if interpret is None:
@@ -114,17 +137,22 @@ def adam_rows_xla(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
         batch = dd.dedup_rows(ids, g)
     mask = batch.mask[:, None]
     uids, rows = batch.unique_ids, batch.rows
+    # low-precision writes draw fresh rounding bits every step (a fixed
+    # seed would re-apply the same rounding pattern and bias the EMA)
+    sr_m = qz.step_seed(spec_m.seed, step) \
+        if spec_m is not None and _lowp(spec_m) else None
+    sr_v = qz.step_seed(spec_v.seed, step) if _lowp(spec_v) else None
     with jax.named_scope("obs.kernel"):
         if spec_m is not None:
             m_old = cs.query(spec_m, M, uids)
             dm = (1.0 - b1) * (rows - m_old) * mask
-            M = cs.update(spec_m, M, uids, dm)
+            M = cs.update(spec_m, M, uids, dm, sr_seed=sr_m)
             mhat = (m_old + dm) / bc1
         else:
             mhat = rows
         v_old = cs.query(spec_v, V, uids)
         dv = (1.0 - b2) * (rows * rows - v_old) * mask
-        V = cs.update(spec_v, V, uids, dv)
+        V = cs.update(spec_v, V, uids, dv, sr_seed=sr_v)
         vhat = jnp.maximum(v_old + dv, 0.0) / bc2
         upd = mask * (-eta) * mhat / (jnp.sqrt(vhat) + eps)
     return M, V, dd.scatter_back(batch, upd)
@@ -145,6 +173,12 @@ def adam_rows_tiled(spec_m: Optional[SketchSpec], spec_v: SketchSpec,
     back so that only the FIRST occurrence of each id carries the update —
     ``params.at[ids].add(upd)`` applies it exactly once.
     """
+    if _lowp(spec_v) or (spec_m is not None and _lowp(spec_m)):
+        # quantized cells: the tiled kernel's VMEM scratch is f32 and its
+        # touched-rows view cannot refresh per-block absmax scales; the
+        # batch 'xla' form reads/writes the quantized cells directly
+        return adam_rows_xla(spec_m, spec_v, M, V, ids, g, step, lr=lr,
+                             b1=b1, b2=b2, eps=eps)
     if ids.shape[0] == 0:
         return M, V, jnp.zeros(g.shape, jnp.float32)
     eta, bc1, bc2 = _adam_hypers(step, lr, b1, b2)
@@ -199,13 +233,82 @@ def _ema_addressing(spec: SketchSpec, ids: jnp.ndarray):
     return fam.bucket(ids), (fam.sign(ids) if spec.signed else None)
 
 
+def _gather_lowp(spec: SketchSpec, S, b, s):
+    """Depth-unrolled dequantizing gather: per-hash-row (k, dim) f32 rows
+    at buckets ``b``, sign-multiplied when signed.  The one gather form
+    both low-precision fused backends share (bit-identity by construction)."""
+    rows = []
+    for j in range(spec.depth):
+        if spec.quantized:
+            blk = b[j] // spec.scale_block
+            sc = S.scales[j][blk][:, None]
+            r = S.cells[j][b[j]].astype(jnp.float32) * sc
+            if not spec.signed:
+                # half-ulp floor on unsigned reads — same form as
+                # cs.query's (resolution limit of the quantizer;
+                # protects Adam/Adagrad denominators, see sketch.query)
+                r = jnp.maximum(r, 0.5 * sc)
+        else:
+            r = S[j][b[j]].astype(jnp.float32)
+        if spec.signed:
+            r = r * s[j][:, None].astype(jnp.float32)
+        rows.append(r)
+    return rows
+
+
+def _ema_update_read_lowp(spec: SketchSpec, S, ids: jnp.ndarray,
+                          x: jnp.ndarray, *, beta: float, scale: float,
+                          mask, sr_seed) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Low-precision fused update_read — the SHARED implementation behind
+    the 'ref' and 'xla' registry rows for bf16/int8 cells (both route
+    here, so they are bit-identical and 'ref' stays the pinnable oracle).
+
+    Dense-path write regime (DESIGN.md §18): the increments are scattered
+    into a per-depth f32 delta, added to the dequantized cells
+    elementwise, and the whole sketch is re-rounded stochastically —
+    int8 refreshes its per-(depth, block) absmax scales every step, bf16
+    re-rounds in place (exact on untouched cells: bf16-representable
+    values truncate without carry, so only touched cells change)."""
+    sr_seed = cs.sr_seed_or_default(spec, sr_seed)
+    b, s = _ema_addressing(spec, ids)
+    rows = _gather_lowp(spec, S, b, s)
+    if spec.signed:
+        est_old = cs.median_rows(rows)
+    else:
+        est_old = functools.reduce(jnp.minimum, rows)
+    d = cs.ema_delta(est_old, x, beta, scale)
+    if mask is not None:
+        d = d * mask
+    w = spec.width
+    inc = []
+    for j in range(spec.depth):
+        u = (s[j][:, None].astype(jnp.float32) * d) if spec.signed else d
+        inc.append(jnp.zeros((w, spec.dim), jnp.float32).at[b[j]].add(u))
+    inc = jnp.stack(inc)
+    if spec.quantized:
+        dense = qz.dequantize(S, spec.scale_block) + inc
+        S = qz.quantize(dense, sr_seed, scale_block=spec.scale_block)
+    else:
+        bits = qz.cell_bits(sr_seed, qz._lin_index(S.shape))
+        S = qz.sr_bfloat16(S.astype(jnp.float32) + inc, bits)
+    return S, est_old + d
+
+
 def ema_update_read_ref(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
                         x: jnp.ndarray, *, beta: float, scale: float,
-                        mask: Optional[jnp.ndarray] = None
-                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                        mask: Optional[jnp.ndarray] = None,
+                        sr_seed=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """'ref' backend: the composed primitives, one-shot — query, the
     shared ``ema_delta`` form, update.  The oracle the fused paths are
-    parity-tested against (bit-identical to the composed fallback)."""
+    parity-tested against (bit-identical to the composed fallback).
+
+    Low-precision cells use the shared dense-regime form (fresh absmax
+    scales for int8) rather than the composed sparse-update (held-scale
+    monotone growth) — the fused op IS the dense path, and sharing one
+    form keeps 'ref' bit-identical to 'xla' at every cell dtype."""
+    if _lowp(spec):
+        return _ema_update_read_lowp(spec, S, ids, x, beta=beta,
+                                     scale=scale, mask=mask, sr_seed=sr_seed)
     est_old = cs.query(spec, S, ids)
     d = cs.ema_delta(est_old, x, beta, scale)
     if mask is not None:
@@ -216,8 +319,8 @@ def ema_update_read_ref(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
 
 def ema_update_read_xla(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
                         x: jnp.ndarray, *, beta: float, scale: float,
-                        mask: Optional[jnp.ndarray] = None
-                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                        mask: Optional[jnp.ndarray] = None,
+                        sr_seed=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """'xla' backend: one fused gather → ema_delta → scatter pass.
 
     Two hand-optimizations over the reference primitives, same values:
@@ -235,7 +338,12 @@ def ema_update_read_xla(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
     The arithmetic is operation-for-operation the reference form
     (gather, sign multiply, pairwise median / min, the shared
     ``ema_delta``, sign-multiplied scatter-add), so the result is
-    bit-identical to 'ref' and the composed fallback."""
+    bit-identical to 'ref' and the composed fallback.  Low-precision
+    cells route through the shared quantized form (same function 'ref'
+    uses — dequantizing gathers, one stochastic re-round per step)."""
+    if _lowp(spec):
+        return _ema_update_read_lowp(spec, S, ids, x, beta=beta,
+                                     scale=scale, mask=mask, sr_seed=sr_seed)
     b, s = _ema_addressing(spec, ids)
     depth = spec.depth
     rows = []
@@ -263,22 +371,31 @@ def ema_update_read_tiled(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
                           x: jnp.ndarray, *, beta: float, scale: float,
                           mask: Optional[jnp.ndarray] = None,
                           tile: int = EMA_TILE,
-                          interpret: Optional[bool] = None
-                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                          interpret: Optional[bool] = None,
+                          sr_seed=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """'tiled' backend: the ``cs_ema_tiled`` Pallas kernel — TILE rows per
     sequential grid step, sketch rows DMA'd from HBM in one overlapped
     burst per tile.  Batch semantics within a tile, streaming across
     tiles (exact vs 'ref' when no two rows share a bucket; estimator-
-    noise tolerance otherwise — DESIGN.md §14).  Falls back to the 'xla'
-    path for non-f32 sketches (the VMEM scratch is f32)."""
-    if jnp.dtype(spec.dtype) != jnp.float32:
+    noise tolerance otherwise — DESIGN.md §14).
+
+    bf16 cells run IN the kernel: rows DMA in/out as bf16, compute is
+    f32 in VMEM, and write-back stochastically re-rounds with the same
+    counter-hash bits the xla path derives — touched rows match 'xla'
+    bit-for-bit on collision-free row sets.  int8 cells fall back to
+    'xla': per-(depth, block) absmax scale refresh needs a whole-sketch
+    view a touched-rows kernel doesn't have (DESIGN.md §18)."""
+    if spec.quantized:
         return ema_update_read_xla(spec, S, ids, x, beta=beta, scale=scale,
-                                   mask=mask)
+                                   mask=mask, sr_seed=sr_seed)
     k = int(ids.shape[0])
     if k == 0:
         return S, jnp.zeros(x.shape, jnp.float32)
     if interpret is None:
         interpret = not _on_tpu()
+    seed = None
+    if jnp.dtype(spec.dtype) == jnp.bfloat16:
+        seed = cs.sr_seed_or_default(spec, sr_seed)
     b, s = _ema_addressing(spec, ids)
     m = jnp.ones((k, 1), jnp.float32) if mask is None \
         else jnp.broadcast_to(mask.astype(jnp.float32), (k, 1))
@@ -290,7 +407,8 @@ def ema_update_read_tiled(spec: SketchSpec, S: jnp.ndarray, ids: jnp.ndarray,
         x = jnp.pad(x, ((0, pad), (0, 0)))
         m = jnp.pad(m, ((0, pad), (0, 0)))
     S, est = cs_ema_tiled(S, b, s, x, m, beta=beta, scale=scale,
-                          n_valid=k, tile=tile, interpret=interpret)
+                          n_valid=k, tile=tile, interpret=interpret,
+                          sr_seed=seed)
     return S, est[:k]
 
 

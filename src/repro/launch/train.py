@@ -66,18 +66,32 @@ def run_sparse_embedding(args, mesh) -> int:
     n_rows, dim = args.sparse_rows, args.sparse_dim
     shards, layout = args.sketch_shards, args.shard_layout
     hp = SketchHParams(compression=args.sparse_compression,
-                       backend=args.store_backend or None)
+                       backend=args.store_backend or None,
+                       dtype=args.sketch_cell_dtype)
+    # count-min cleaning (paper §4): sync gates the decay inside the
+    # compiled step; async moves it to the trainer's 'clean' phase
+    # (bit-identical schedule — DESIGN.md §18)
+    cleaning = cleaner = None
+    if args.cleaning_every > 0:
+        from repro.core.cleaning import AsyncCleaner, CleaningSchedule
+        cleaning = CleaningSchedule(alpha=args.cleaning_alpha,
+                                    every=args.cleaning_every,
+                                    mode=args.cleaning_mode)
+        if cleaning.mode == "async":
+            cleaner = AsyncCleaner(cleaning)
     dp_axis = "data" if args.dp else None
     init_fn, step_fn, opt = make_sparse_embedding_step(
         n_rows, dim, lr=args.lr, hparams=hp, dp_axis=dp_axis, mesh=mesh,
-        error_feedback=args.error_feedback,
+        error_feedback=args.error_feedback, cleaning=cleaning,
         sketch_shards=shards, shard_layout=layout)
 
     # the executable vocabulary of this run's sketch state — recorded in
     # every checkpoint manifest so restore can verify the shard layout
-    # (and elastic restore gets the exact fold predicate)
+    # and the cell dtype (and elastic restore gets the exact fold
+    # predicate)
     from repro.core.stores import StoreTree
     m_st, v_st = sparse_embedding_stores(n_rows, dim, hparams=hp,
+                                         cleaning=cleaning,
                                          sketch_shards=shards,
                                          shard_layout=layout)
     run_tree = StoreTree(rules=(("sparse_embedding", m_st, v_st),))
@@ -89,6 +103,15 @@ def run_sparse_embedding(args, mesh) -> int:
         rec_v = rec.rules[0][2] if rec is not None and rec.rules else None
         rec_shards = getattr(rec_v, "shards", 1)
         rec_layout = getattr(rec_v, "shard_layout", "width")
+        rec_dtype = (rec_v.cell_dtype_name if rec_v is not None
+                     and hasattr(rec_v, "cell_dtype_name") else "float32")
+        if rec_dtype != args.sketch_cell_dtype:
+            raise ValueError(
+                f"{args.ckpt_dir} holds sketch state with {rec_dtype!r} "
+                f"cells; restoring it under --sketch-cell-dtype "
+                f"{args.sketch_cell_dtype} would silently reinterpret "
+                f"quantized state — resume with --sketch-cell-dtype "
+                f"{rec_dtype}, or start a fresh --ckpt-dir")
         if rec_layout != layout:
             raise ValueError(
                 f"{args.ckpt_dir} holds sketch state in the "
@@ -128,13 +151,14 @@ def run_sparse_embedding(args, mesh) -> int:
                                          k=args.probe_rows)
         monitors = [TableMonitor(
             path="sparse_embedding", m_store=m_store, v_store=v_store,
-            probe=probe,
+            probe=probe, cleaner=cleaner,
             predicted=predicted_table_errors(m_store, v_store, n_rows,
                                              alpha=data_cfg.alpha))]
     observer = make_observer(args, {
         "workload": "sparse_embedding", "rows": n_rows, "dim": dim,
         "compression": args.sparse_compression, "steps": args.steps,
         "batch": args.batch, "dp": bool(args.dp),
+        "sketch_cell_dtype": args.sketch_cell_dtype,
         "probe_rows": args.probe_rows}, monitors)
 
     with shd.active_mesh(mesh):
@@ -182,7 +206,7 @@ def run_sparse_embedding(args, mesh) -> int:
                              ckpt_every=args.ckpt_every,
                              log_every=args.log_every)
         trainer = Trainer(jit_step, data, tcfg, observer=observer,
-                          store_tree=run_tree)
+                          store_tree=run_tree, cleaner=cleaner)
         state = trainer.restore_or_init(
             TrainState(step=0, params=table, opt_state=opt_state),
             shardings=({"params": table_spec, "opt_state": opt_spec}
@@ -294,10 +318,12 @@ def run_extreme(args, mesh) -> int:
     plan = None
     if args.aux_budget:
         plan = plan_extreme(cfg, args.aux_budget, optimizer=args.optimizer,
-                            backend=args.store_backend or None)
+                            backend=args.store_backend or None,
+                            sketch_dtype=args.sketch_cell_dtype)
         print(plan.table(), flush=True)
     hp = SketchHParams(compression=args.sparse_compression,
-                       backend=args.store_backend or None)
+                       backend=args.store_backend or None,
+                       dtype=args.sketch_cell_dtype)
     dp_axis = "data" if args.dp else None
     init_fn, step_fn, opts = make_extreme_step(
         cfg, optimizer=args.optimizer, lr=args.lr, hparams=hp, plan=plan,
@@ -405,6 +431,27 @@ def main() -> int:
     ap.add_argument("--sparse-rows", type=int, default=65536)
     ap.add_argument("--sparse-dim", type=int, default=64)
     ap.add_argument("--sparse-compression", type=float, default=5.0)
+    ap.add_argument("--sketch-cell-dtype", default="float32",
+                    choices=("float32", "bfloat16", "int8"),
+                    help="cell storage dtype of every sketch tensor "
+                         "(DESIGN.md §18): bfloat16 halves sketch bytes, "
+                         "int8 quarters them (per-block f32 scales ride "
+                         "along); all low-precision writes go through "
+                         "per-step stochastic rounding.  Recorded in the "
+                         "checkpoint manifest; restore refuses a silent "
+                         "dtype change")
+    ap.add_argument("--cleaning-every", type=int, default=0,
+                    help="sparse_embedding: decay the count-min sketch "
+                         "every N steps (paper §4 cleaning); 0 = off")
+    ap.add_argument("--cleaning-alpha", type=float, default=0.2,
+                    help="cleaning decay factor (paper §4)")
+    ap.add_argument("--cleaning-mode", default="sync",
+                    choices=("sync", "async"),
+                    help="sync: the decay runs inside the compiled step "
+                         "(lax.cond at the boundary); async: an "
+                         "AsyncCleaner dispatches it BETWEEN steps — "
+                         "bit-identical numerics, cost off the step "
+                         "phase's critical section (DESIGN.md §18)")
     ap.add_argument("--sketch-shards", type=int, default=1,
                     help="sparse_embedding: shard each (depth, width, dim) "
                          "sketch into this many width slabs over the "
@@ -493,6 +540,13 @@ def main() -> int:
     if os.environ.get("JAX_COORDINATOR"):
         jax.distributed.initialize()
 
+    if args.sketch_cell_dtype == "int8" and (args.dp
+                                             or args.sketch_shards > 1):
+        ap.error("--sketch-cell-dtype int8 does not compose with --dp or "
+                 "--sketch-shards: the per-(depth, block) absmax scales "
+                 "need a whole-sketch view the sharded/collective paths "
+                 "don't have (DESIGN.md §18) — use bfloat16 there")
+
     if args.sketch_shards > 1:
         if args.workload != "sparse_embedding":
             ap.error("--sketch-shards applies to the sparse_embedding "
@@ -557,7 +611,8 @@ def main() -> int:
     if args.aux_budget:
         from repro.plan import plan_for_config
         plan = plan_for_config(cfg, args.aux_budget,
-                               optimizer=args.optimizer)
+                               optimizer=args.optimizer,
+                               sketch_dtype=args.sketch_cell_dtype)
         if (ckpt_plan is None
                 and args.ckpt_dir
                 and store.latest_step(args.ckpt_dir) is not None):

@@ -160,14 +160,42 @@ class TableProbe:
         n_hot = (self.k + 1) // 2
         hot = seen * (jnp.arange(self.k) < n_hot)
         cold = seen * (jnp.arange(self.k) >= n_hot)
+        def quant_noise(store, state, shadow):
+            """Expected relative-L1 contribution of int8 cell quantization
+            at the probe rows — E|SR noise| is scale/4 per cell (uniform
+            within ±scale/2), reduced over depth the way the estimator
+            reduces (min for the count-min read, median≈mean for the
+            signed median).  Feeds the calibrated ``*_error_ratio``
+            denominator: a quantized store's measured error contains this
+            term ON TOP of collision error, and without it the ratio
+            would read as a collision-model miss."""
+            spec = getattr(store, "spec", None)
+            if spec is None or not getattr(spec, "quantized", False):
+                return None
+            from repro.core import quantize as qz
+            b = spec.family.bucket(pids)
+            sc = qz.bucket_scales(state.scales, b, spec.scale_block)
+            s_row = (jnp.mean(sc, axis=0) if spec.signed
+                     else jnp.min(sc, axis=0))
+            num = shadow.shape[1] * s_row / 4.0
+            den = jnp.sum(jnp.abs(shadow.astype(jnp.float32)),
+                          axis=1) + _TINY
+            return masked_mean(num / den, seen)
+
         if m_store is not None and pstate.get("pm") is not None:
             e = rel_err(m_store.read(m_state, rows=pids), pstate["pm"])
             out["m_meas_error"] = masked_mean(e, seen)
+            qn = quant_noise(m_store, m_state, pstate["pm"])
+            if qn is not None:
+                out["m_quant_noise"] = qn
         if v_store is not None:
             e = rel_err(v_store.read(v_state, rows=pids), pstate["pv"])
             out["v_meas_error"] = masked_mean(e, seen)
             out["v_meas_error_hot"] = masked_mean(e, hot)
             out["v_meas_error_cold"] = masked_mean(e, cold)
+            qn = quant_noise(v_store, v_state, pstate["pv"])
+            if qn is not None:
+                out["v_quant_noise"] = qn
         return out
 
     def errors(self, pstate, *, m_store=None, m_state=None,
@@ -251,6 +279,11 @@ class TableMonitor:
     probe: Optional[TableProbe] = None
     predicted: Dict[str, float] = dataclasses.field(default_factory=dict)
     getter: Optional[Callable[[Any], Dict[str, Any]]] = None
+    # optional repro.core.cleaning.AsyncCleaner: when its dispatched decay
+    # is still in flight at a boundary, the emitted record's
+    # ``v_clean_next_removes`` is zeroed host-side (the projected removal
+    # is already underway — quoting it would double-count removed mass)
+    cleaner: Any = None
     _last_step: int = dataclasses.field(default=0, repr=False)
     _collect_jit: Any = dataclasses.field(default=None, repr=False)
     # double buffer: (step, window_start, async device vector) dispatched
@@ -315,7 +348,10 @@ class TableMonitor:
             self._collect_jit = (keys, jax.jit(stacked))
         _, fn = self._collect_jit
         out = self.flush()
-        self._pending = (int(step), self._last_step, fn(st))
+        pending_clean = (self.cleaner is not None
+                         and self.cleaner.in_flight())
+        self._pending = (int(step), self._last_step, fn(st),
+                         pending_clean)
         self._last_step = int(step)
         return out
 
@@ -326,11 +362,15 @@ class TableMonitor:
         import jax
         if self._pending is None:
             return None
-        step, win_start, vec = self._pending
+        step, win_start, vec, pending_clean = self._pending
         self._pending = None
         keys, _ = self._collect_jit
         dev = dict(zip(keys, np.asarray(jax.device_get(vec))))
         payload: Dict[str, Any] = {"step": step, "table": self.path}
+        for slot, store in (("m", self.m_store), ("v", self.v_store)):
+            name = getattr(store, "cell_dtype_name", None)
+            if name is not None and name != "float32":
+                payload[f"{slot}_cell_dtype"] = name
         if self.probe is not None:
             payload["probe_rows"] = int(self.probe.k)
         for k, v in dev.items():
@@ -339,16 +379,21 @@ class TableMonitor:
                 payload[k] = int(f) if k == "probe_rows_seen" else f
         payload.update(self.predicted)
         # measured / predicted — the re-planning signal: >> 1 means the
-        # realized traffic is harder than the plan's zipf model assumed
+        # realized traffic is harder than the plan's zipf model assumed.
+        # Quantized cells widen the envelope by the probe's quantization-
+        # noise gauge so the ratio stays calibrated at every cell dtype.
         for slot in ("m", "v"):
             pred = payload.get(f"{slot}_pred_error")
             meas = payload.get(f"{slot}_meas_error")
             if pred is not None and meas is not None:
-                payload[f"{slot}_error_ratio"] = meas / max(pred, _TINY)
+                env = pred + payload.get(f"{slot}_quant_noise", 0.0)
+                payload[f"{slot}_error_ratio"] = meas / max(env, _TINY)
         if self.v_store is not None and hasattr(self.v_store,
                                                "cleans_between"):
             payload["cleans_in_window"] = self.v_store.cleans_between(
                 win_start, step)
+        if pending_clean and "v_clean_next_removes" in payload:
+            payload["v_clean_next_removes"] = 0.0
         return payload
 
 

@@ -313,13 +313,17 @@ class Plan:
 
     # -- display ------------------------------------------------------------
     def table(self) -> str:
-        """Human-readable plan table (dryrun --aux-budget prints this)."""
-        rows = [("path", "shape", "mode", "depth×width", "aux bytes",
-                 "pred. err")]
+        """Human-readable plan table (dryrun --aux-budget prints this).
+        ``cells`` is the sketch cell-storage dtype; ``aux bytes`` are the
+        exact per-leaf bytes AT that dtype (int8 rows include their
+        per-block f32 scale overhead, via ``SketchSpec.nbytes``)."""
+        rows = [("path", "shape", "mode", "depth×width", "cells",
+                 "aux bytes", "pred. err")]
         for l in sorted(self.leaves, key=lambda x: -x.nbytes):
             dw = f"{l.depth}×{l.width}" if l.mode == MODE_SKETCH else "-"
+            cells = self.sketch_dtype if l.mode == MODE_SKETCH else "-"
             rows.append((l.path, "×".join(str(s) for s in l.shape), l.mode,
-                         dw, f"{l.nbytes:,}",
+                         dw, cells, f"{l.nbytes:,}",
                          f"{l.predicted_error:.2e}" if l.predicted_error
                          else "0"))
         widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]

@@ -91,16 +91,20 @@ class MachConfig:
 
 def plan_extreme(cfg: MachConfig, budget, *, optimizer: str = "cs_rmsprop",
                  backend: Optional[str] = None, depth: int = 3,
-                 width_multiple: int = 256, seed: int = 0):
+                 width_multiple: int = 256, seed: int = 0,
+                 sketch_dtype: str = "float32"):
     """Solve the aux-memory plan for the workload's two tables under
     ``budget`` (bytes or any ``parse_budget`` string) — both tables carry
     the stream's real zipf exponent as traffic stats, so the water-fill
-    splits width by actual volume × traffic, not by name."""
+    splits width by actual volume × traffic, not by name.
+    ``sketch_dtype`` sizes the plan at that cell dtype (int8 roughly
+    quadruples solved widths at equal bytes — DESIGN.md §18)."""
     from repro.plan import TableStats, plan_for_tables
     stats = {p: TableStats(alpha=cfg.alpha) for p in TABLE_PATHS}
     plan = plan_for_tables(cfg.table_shapes(), budget, optimizer=optimizer,
                            stats=stats, default_alpha=cfg.alpha, depth=depth,
-                           width_multiple=width_multiple, seed=seed)
+                           width_multiple=width_multiple, seed=seed,
+                           sketch_dtype=sketch_dtype)
     return plan.with_backend(backend) if backend else plan
 
 

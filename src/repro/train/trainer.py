@@ -58,7 +58,7 @@ class Trainer:
     def __init__(self, step_fn: Callable, data, tcfg: TrainerConfig,
                  monitor: Optional[StragglerMonitor] = None,
                  fail_at: Optional[int] = None, plan=None,
-                 store_tree=None, observer=None):
+                 store_tree=None, observer=None, cleaner=None):
         self.step_fn = step_fn
         self.data = data
         self.tcfg = tcfg
@@ -72,6 +72,12 @@ class Trainer:
         # successful completion (a crash-restart re-enters fit with the
         # observer still open, so no partial window is lost)
         self.observer = observer
+        # optional repro.core.cleaning.AsyncCleaner: dispatches the §4
+        # count-min decay BETWEEN steps (mode='async'), at the same
+        # boundary the sync lax.cond keys on, so numerics stay
+        # bit-identical while the decay's cost moves off the step
+        # phase's critical section into its own 'clean' phase span
+        self.cleaner = cleaner
         if plan is not None and store_tree is not None \
                 and plan.store_tree() != store_tree:
             raise ValueError("Trainer got both a plan and a store_tree "
@@ -130,6 +136,17 @@ class Trainer:
             with self._obs_phase("data"):
                 batch = self.data.batch(state.step)
                 batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            if self.cleaner is not None:
+                with self._obs_phase("clean"):
+                    # the upcoming step observes counter state.step + 1 —
+                    # the boundary the sync schedule's in-step lax.cond
+                    # keys on; dispatch is non-blocking (device dataflow
+                    # orders the decay before the step's reads)
+                    opt_state, _ = self.cleaner.maybe_dispatch(
+                        state.opt_state, state.step + 1)
+                    state = TrainState(step=state.step,
+                                       params=state.params,
+                                       opt_state=opt_state)
             t0 = time.perf_counter()
             with self._obs_phase("step"):
                 params, opt_state, metrics = self.step_fn(

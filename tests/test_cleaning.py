@@ -65,3 +65,109 @@ class TestMassRemoved:
         for step in (1, 2, 3):
             S = sched.apply(S, jnp.asarray(step))
         np.testing.assert_array_equal(S, jnp.full((4,), 2.0))
+
+class TestAsyncCleaner:
+    """The off-critical-path dispatcher (DESIGN.md §18): identical decay
+    schedule to sync, dispatched between steps, bit-identical states."""
+
+    def _run(self, mode, dtype="float32", steps=12, every=4):
+        from repro.core import sketch as cs
+        from repro.core.cleaning import AsyncCleaner
+        from repro.kernels import update_read
+        from repro.core import quantize as qz
+        spec = cs.for_param((256, 4), compression=4.0, signed=False,
+                            seed=3, dtype=jnp.dtype(dtype),
+                            width_multiple=16)
+        sched = CleaningSchedule(alpha=0.5, every=every, mode=mode)
+        cleaner = AsyncCleaner(sched) if mode == "async" else None
+        st = {"step": 0, "v": cs.init(spec)}
+        rng = np.random.RandomState(0)
+        for t in range(1, steps + 1):
+            if cleaner is not None:
+                st, _ = cleaner.maybe_dispatch(st, t)
+            ids = jnp.asarray(rng.randint(0, 256, 32), jnp.int32)
+            g = jnp.asarray(rng.randn(32, 4) ** 2, jnp.float32)
+            V = maybe_clean(sched if mode == "sync" else None,
+                            st["v"], jnp.asarray(t))
+            V, _ = update_read(spec, V, ids, g, beta=0.999, scale=0.001,
+                               backend="xla",
+                               sr_seed=qz.step_seed(spec.seed,
+                                                    jnp.uint32(t)))
+            st = {"step": t, "v": V}
+        return st["v"], cleaner
+
+    @pytest.mark.parametrize("dtype", ["float32", "int8"])
+    def test_async_bit_identical_to_sync(self, dtype):
+        Vs, _ = self._run("sync", dtype)
+        Va, cleaner = self._run("async", dtype)
+        assert cleaner.dispatched == 3          # steps 4, 8, 12
+        for a, b in zip(jax.tree_util.tree_leaves(Vs),
+                        jax.tree_util.tree_leaves(Va)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_int8_decay_touches_only_scales(self):
+        """int8 cleaning folds alpha into the per-block scales exactly —
+        cells are untouched in either mode."""
+        from repro.core import sketch as cs
+        spec = cs.for_param((128, 4), compression=2.0, signed=False,
+                            seed=1, dtype=jnp.dtype("int8"),
+                            width_multiple=16)
+        from repro.core import quantize as qz
+        S = cs.init(spec)
+        S = cs.update(spec, S, jnp.arange(64, dtype=jnp.int32),
+                      jnp.ones((64, 4)), sr_seed=jnp.uint32(1))
+        out = cs.decay(S, 0.25)
+        np.testing.assert_array_equal(np.asarray(out.cells),
+                                      np.asarray(S.cells))
+        np.testing.assert_allclose(np.asarray(out.scales),
+                                   np.asarray(S.scales) * 0.25, rtol=1e-7)
+
+    def test_rejects_sync_schedule(self):
+        from repro.core.cleaning import AsyncCleaner
+        with pytest.raises(ValueError):
+            AsyncCleaner(CleaningSchedule(every=2))
+
+    def test_in_flight_clears_after_ready(self):
+        from repro.core.cleaning import AsyncCleaner
+        c = AsyncCleaner(CleaningSchedule(every=2, mode="async"))
+        st = {"v": jnp.ones((4, 8, 2))}
+        st, fired = c.maybe_dispatch(st, 2)
+        assert fired and c.dispatched == 1
+        jax.block_until_ready(st["v"])
+        assert c.in_flight() is False
+
+    def test_mode_validation(self):
+        with pytest.raises(ValueError):
+            CleaningSchedule(mode="never")
+
+
+class TestStatsCadence:
+    """CountMinStore's host-side cleaning telemetry edges."""
+
+    def _store(self, every=4):
+        from repro.core.stores import CountMinStore
+        return CountMinStore(compression=4.0,
+                             cleaning=CleaningSchedule(alpha=0.5,
+                                                       every=every)
+                             ).bind("t", (128, 4), jnp.float32)
+
+    def test_cleans_between_edges(self):
+        st = self._store(every=4)
+        assert st.cleans_between(0, 12) == 3
+        assert st.cleans_between(4, 8) == 1      # (4, 8] -> step 8 only
+        assert st.cleans_between(5, 5) == 0      # start == end
+        assert st.cleans_between(7, 7) == 0
+        one = self._store(every=1)
+        assert one.cleans_between(3, 3) == 0     # empty window, every=1
+        assert one.cleans_between(3, 9) == 6     # every step in (3, 9]
+
+    def test_clean_next_removes_zeroed_while_pending(self):
+        st = self._store()
+        state = st.init()
+        state = st.accumulate(state, jnp.ones((8, 4)),
+                              rows=jnp.arange(8, dtype=jnp.int32))
+        live = st.stats(state)
+        assert float(live["clean_next_removes"]) > 0.0
+        pend = st.stats(state, clean_pending=True)
+        assert float(pend["clean_next_removes"]) == 0.0

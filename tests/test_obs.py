@@ -351,3 +351,40 @@ class TestServeSloWarnings:
         assert "serve-slo" in out and "serve-shed" in out
         assert "p50" in out and "p99" in out
         assert "request latency" in out and "shed: 2/20" in out
+
+
+class TestQuantNoiseGauge:
+    """The quantization-error gauge (DESIGN.md §18): int8 stores emit a
+    ``*_quant_noise`` envelope in the probe's rel-L1 units, and it feeds
+    the ``*_error_ratio`` denominator so the calibration signal stays
+    O(1) at every cell dtype."""
+
+    N, D, BATCH, STEPS = 1000, 4, 32, 25
+
+    def _drive(self, store):
+        probe = TableProbe.for_table("t", self.N, k=8,
+                                     track_first_moment=False)
+        pstate = probe.init(self.D)
+        state = store.init()
+        for ids, rows in _stream(self.N, self.D, self.STEPS, self.BATCH):
+            state = rows_ema_update(store, state, ids, rows, probe.b2,
+                                    square=True)
+            pstate = probe.update(pstate, ids, rows)
+        return probe.errors(pstate, v_store=store, v_state=state)
+
+    def test_int8_emits_positive_gauge(self):
+        store = CountMinStore(compression=4.0, dtype="int8").bind(
+            "t", (self.N, self.D), jnp.float32)
+        errs = self._drive(store)
+        assert errs["v_quant_noise"] > 0.0
+        # the gauge is an envelope in the SAME units as meas_error:
+        # quantization alone cannot explain MORE error than measured
+        # by orders of magnitude
+        assert errs["v_quant_noise"] < 100 * max(errs["v_meas_error"],
+                                                 1e-6)
+
+    def test_f32_has_no_gauge(self):
+        store = CountMinStore(compression=4.0).bind(
+            "t", (self.N, self.D), jnp.float32)
+        errs = self._drive(store)
+        assert "v_quant_noise" not in errs

@@ -343,3 +343,47 @@ class TestPlanForTables:
         from repro.plan import plan_for_tables
         with pytest.raises(ValueError, match="moment layouts"):
             plan_for_tables(self.SHAPES, "0.5x", optimizer="dense_adam")
+
+
+class TestQuantizedPlans:
+    """sketch_dtype as a planner dimension (DESIGN.md §18): int8 cells
+    buy ~4x the width at a fixed byte budget, the accounting stays
+    measured-exact over QuantState leaves, and the dtype round-trips
+    the Plan JSON."""
+
+    SHAPES = {"tok_embed/table": (1 << 16, 16)}
+
+    def _plan(self, dtype):
+        from repro.plan import plan_for_tables
+        stats = {p: TableStats(alpha=1.05) for p in self.SHAPES}
+        return plan_for_tables(self.SHAPES, "0.05x", optimizer="cs_rmsprop",
+                               stats=stats, sketch_dtype=dtype)
+
+    def test_int8_buys_width_at_equal_budget(self):
+        f32 = self._plan("float32").leaf("tok_embed/table")
+        i8 = self._plan("int8").leaf("tok_embed/table")
+        assert i8.mode == MODE_SKETCH
+        # 4 bytes -> 1 byte + per-block scales: ~4x width, never less
+        # than 3.5x (scale overhead + width_multiple rounding)
+        assert i8.width >= 3.5 * f32.width
+
+    @pytest.mark.parametrize("dtype", ["bfloat16", "int8"])
+    def test_accounting_measured_exact(self, dtype):
+        plan = self._plan(dtype)
+        assert plan.predicted_aux_bytes <= plan.budget_bytes
+        ps = {p: jax.ShapeDtypeStruct(s, jnp.float32)
+              for p, s in self.SHAPES.items()}
+        measured = accounting.measure_aux_bytes(
+            jax.eval_shape(plan.make_optimizer(1e-3).init, ps))
+        assert measured == plan.predicted_aux_bytes
+
+    def test_json_roundtrips_sketch_dtype(self):
+        plan = self._plan("int8")
+        back = Plan.from_json(plan.to_json())
+        assert back == plan and back.sketch_dtype == "int8"
+        specs = back.specs()["tok_embed/table"]
+        assert all(jnp.dtype(s.dtype) == jnp.int8 for s in specs.values())
+
+    def test_table_renders_cell_dtype(self):
+        txt = self._plan("int8").table()
+        assert "int8" in txt and "cells" in txt

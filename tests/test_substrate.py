@@ -251,3 +251,42 @@ class TestTrainer:
         out_b = tr_b.fit(st_resume)
         np.testing.assert_allclose(np.asarray(out_a.params["w"]),
                                    np.asarray(out_b.params["w"]), atol=1e-6)
+
+
+class TestQuantizedCheckpoint:
+    """int8 sketch state through save/restore (DESIGN.md §18): QuantState
+    leaves round-trip with cell dtype and scales intact — the launcher
+    refuses dtype changes at restore, so the bytes must survive as-is."""
+
+    def _state(self):
+        from repro.core import sketch as cs
+        spec = cs.for_param((256, 4), compression=4.0, signed=False,
+                            seed=3, dtype=jnp.dtype("int8"),
+                            width_multiple=16)
+        S = cs.init(spec)
+        S = cs.update(spec, S, jnp.arange(64, dtype=jnp.int32),
+                      jnp.ones((64, 4)), sr_seed=jnp.uint32(1))
+        return spec, {"opt_state": {"step": jnp.asarray(7), "v": S}}
+
+    def test_quantstate_roundtrip(self, tmp_path):
+        spec, t = self._state()
+        store.save(tmp_path, 7, t)
+        step, out = store.restore(tmp_path, t)
+        assert step == 7
+        got = out["opt_state"]["v"]
+        assert got.cells.dtype == jnp.int8
+        assert got.scales.dtype == jnp.float32
+        np.testing.assert_array_equal(np.asarray(got.cells),
+                                      np.asarray(t["opt_state"]["v"].cells))
+        np.testing.assert_array_equal(np.asarray(got.scales),
+                                      np.asarray(t["opt_state"]["v"].scales))
+
+    def test_restored_state_reads_identically(self, tmp_path):
+        from repro.core import sketch as cs
+        spec, t = self._state()
+        store.save(tmp_path, 7, t)
+        _, out = store.restore(tmp_path, t)
+        rows = jnp.arange(64, dtype=jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(cs.query(spec, t["opt_state"]["v"], rows)),
+            np.asarray(cs.query(spec, out["opt_state"]["v"], rows)))
